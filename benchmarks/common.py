@@ -1,0 +1,197 @@
+"""Shared benchmark substrate: the calibrated query log + analysis cache.
+
+The log is generated once per (scale, seed) and memoized on disk; every
+table benchmark runs against the same stream, mirroring the paper's setup
+(one AOL/MSN log, many cache configurations).
+
+``AnalysisCache`` exploits the reuse-distance engine's structure: two cache
+configurations with the same *partitioning* of keys (e.g. every (f_t, N)
+split of STDv_LRU at a fixed static set) share one trace analysis, so the
+paper's whole parameter grid costs only a handful of passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    TraceAnalysis,
+    VecLog,
+    VecStats,
+    analyze,
+    belady_hits,
+    make_layout,
+)
+from repro.core.fast import Layout
+from repro.querylog import SynthConfig, generate
+from repro.topics import TopicPipelineResult, oracle_pipeline, run_pipeline
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+
+# Calibrated generator (tools/calibrate*.py): reproduces the paper's
+# structural log properties and claim ordering.  See EXPERIMENTS.md.
+CALIBRATED = dict(
+    n_requests=1_500_000,
+    n_topics=64,
+    n_topical_queries=300_000,
+    n_notopic_queries=150_000,
+    singleton_fraction=0.45,
+    core_frac=0.1,
+    p_core=0.8,
+    zipf_core=0.2,
+    core_churn=0.0,
+    vocab_size=2048,
+)
+
+#: the paper's five cache sizes, scaled to the synthetic log (N/distinct
+#: ratios bracketing AOL's 0.7%..11%)
+CACHE_SIZES = (2048, 4096, 8192, 16384, 32768)
+
+QUICK_SIZES = (2048, 8192)
+
+
+def _fingerprint(cfg: SynthConfig, train_frac: float, lda: bool) -> str:
+    s = repr(sorted(dataclasses.asdict(cfg).items())) + f"|{train_frac}|{lda}"
+    return hashlib.sha1(s.encode()).hexdigest()[:16]
+
+
+def load_pipeline(
+    scale: float = 1.0,
+    seed: int = 7,
+    train_frac: float = 0.7,
+    lda: bool = False,
+    **overrides,
+) -> TopicPipelineResult:
+    """Calibrated log + topic pipeline, disk-memoized."""
+    kw = dict(CALIBRATED)
+    kw.update(overrides)
+    for key in ("n_requests", "n_topical_queries", "n_notopic_queries"):
+        kw[key] = int(kw[key] * scale)
+    cfg = SynthConfig(seed=seed, **kw)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"pipe_{_fingerprint(cfg, train_frac, lda)}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    synth = generate(cfg)
+    if lda:
+        res = run_pipeline(synth, train_frac=train_frac, lda_subsample=20_000)
+    else:
+        res = oracle_pipeline(synth, train_frac=train_frac)
+    res.synth_keys = synth.keys  # type: ignore[attr-defined]
+    res.synth = synth  # type: ignore[attr-defined]
+    with open(path, "wb") as f:
+        pickle.dump(res, f)
+    return res
+
+
+_SHARED = {}
+
+
+def get_shared(scale: float, seed: int, lda: bool, train_frac: float):
+    """(pipe, AnalysisCache) shared across benchmark suites in-process --
+    the trace analyses dominate the grid cost and are identical between
+    e.g. Table 2 and Table 3."""
+    key = (scale, seed, lda, train_frac)
+    if key not in _SHARED:
+        pipe = load_pipeline(scale=scale, seed=seed, lda=lda, train_frac=train_frac)
+        _SHARED[key] = (pipe, AnalysisCache(pipe.log))
+    return _SHARED[key]
+
+
+class AnalysisCache:
+    """Memoizes TraceAnalysis by the layout's key->partition map."""
+
+    def __init__(self, log: VecLog):
+        self.log = log
+        self._cache: Dict[bytes, TraceAnalysis] = {}
+        self.passes = 0
+
+    def analysis(self, layout: Layout) -> TraceAnalysis:
+        key = hashlib.sha1(layout.key_part.tobytes()).digest()
+        ana = self._cache.get(key)
+        if ana is None:
+            self.passes += 1
+            ana = analyze(self.log, layout)
+            self._cache[key] = ana
+        return ana
+
+    def hit_rate(self, layout: Layout) -> float:
+        ana = self.analysis(layout)
+        n_test = int(ana.count_mask.sum())
+        return ana.hits(layout.capacity) / n_test if n_test else 0.0
+
+
+@dataclasses.dataclass
+class BestResult:
+    hit_rate: float
+    f_s: float = 0.0
+    f_t: float = 0.0
+    f_ts: Optional[float] = None
+
+
+# paper-faithful parameter grids (Sec. 5: f_s in 0.0..1.0 step 0.1, the
+# rest tuned on the remaining cache)
+FS_GRID = [round(x, 1) for x in np.arange(0.0, 1.0, 0.1)]
+FT_FRACS = (0.5, 0.8, 0.95)
+FTS_GRID = (0.3, 0.6)
+FS_GRID_SDCT = (0.1, 0.3, 0.5, 0.7, 0.9)  # coarser for per-config passes
+
+
+def grid_for(strategy: str):
+    if strategy == "SDC":
+        return [(fs, 0.0, None) for fs in FS_GRID]
+    if strategy in ("STDf_LRU", "STDv_LRU"):
+        return [
+            (fs, round(ftf * (1 - fs), 4), None)
+            for fs in FS_GRID
+            if fs > 0
+            for ftf in FT_FRACS
+        ]
+    if strategy in ("STDv_SDC_C1", "STDv_SDC_C2"):
+        return [
+            (fs, round(0.8 * (1 - fs), 4), fts)
+            for fs in FS_GRID_SDCT
+            for fts in FTS_GRID
+        ]
+    if strategy == "Tv_SDC":
+        return [(0.0, 0.0, fts) for fts in (0.3, 0.6, 0.9)]
+    raise ValueError(strategy)
+
+
+def best_config(
+    cache: AnalysisCache,
+    stats: VecStats,
+    strategy: str,
+    n: int,
+    admitted: Optional[np.ndarray] = None,
+) -> BestResult:
+    best = BestResult(0.0)
+    for fs, ft, fts in grid_for(strategy):
+        layout = make_layout(
+            strategy, n, stats, f_s=fs, f_t=ft, f_ts=fts, admitted=admitted
+        )
+        hr = cache.hit_rate(layout)
+        if hr > best.hit_rate:
+            best = BestResult(hr, fs, ft, fts)
+    return best
+
+
+def belady_rate(
+    keys: np.ndarray, n: int, n_train: int, admit_mask=None, bypass: bool = False
+) -> float:
+    n_test = len(keys) - n_train
+    return (
+        belady_hits(keys, n, count_from=n_train, admit_mask=admit_mask, bypass=bypass)
+        / n_test
+    )
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,47 @@
+"""Paper Figs. 7-9: SDC vs STDv_SDC(C2) hit-rate curves over f_s.
+
+Fixed split of the non-static space (80% topic / 20% dynamic, f_ts=0.4)
+exactly as the paper's RQ2 protocol."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import make_layout
+
+from .common import AnalysisCache, csv_row, load_pipeline
+
+
+def run(sizes, scale: float = 1.0, seed: int = 7) -> List[str]:
+    pipe = load_pipeline(scale=scale, seed=seed)
+    cache = AnalysisCache(pipe.log)
+    rows: List[str] = []
+    wins = total = 0
+    for n in sizes:
+        for fs in [round(x, 1) for x in np.arange(0.1, 1.0, 0.1)]:
+            t0 = time.time()
+            sdc = cache.hit_rate(make_layout("SDC", n, pipe.stats, f_s=fs))
+            std = cache.hit_rate(
+                make_layout(
+                    "STDv_SDC_C2",
+                    n,
+                    pipe.stats,
+                    f_s=fs,
+                    f_t=round(0.8 * (1 - fs), 4),
+                    f_ts=0.4,
+                )
+            )
+            us = (time.time() - t0) * 1e6
+            wins += std > sdc
+            total += 1
+            rows.append(
+                csv_row(
+                    f"fig7/N={n}/fs={fs}",
+                    us,
+                    f"sdc={sdc:.4f};std_c2={std:.4f};delta={std-sdc:+.4f}",
+                )
+            )
+    rows.append(csv_row("fig7/claim", 0.0, f"std_above_sdc={wins}/{total}"))
+    return rows

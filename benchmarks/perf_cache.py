@@ -1,0 +1,85 @@
+"""Infrastructure perf: device-cache probe/commit + reuse-distance engine.
+
+Timings are CPU-host numbers (the container has no TPU); they measure the
+framework's host-side constants and the vectorized-engine speedup over the
+sequential reference, not TPU throughput (see EXPERIMENTS.md §Perf for the
+compiled-artifact roofline instead).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fast import partitioned_prev
+from repro.core.rd_offline import reuse_distances_offline
+from repro.core.jax_sim import reuse_distances_py
+from repro.serving import DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
+
+from .common import csv_row
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    rng = np.random.default_rng(0)
+
+    # device cache probe/commit throughput
+    cfg = DeviceCacheConfig.build(
+        65536, f_s=0.2, f_t=0.6, topic_distinct={t: 100 for t in range(64)}, ways=8
+    )
+    cache = STDDeviceCache(cfg, static_hashes=splitmix64(np.arange(1, 2000)))
+    state = dict(cache.init_state)
+    probe = jax.jit(cache.probe)
+    commit = jax.jit(cache.commit)
+    for batch in (256, 4096):
+        qids = rng.integers(0, 200_000, size=batch)
+        topics = rng.integers(-1, 64, size=batch)
+        parts = jnp.asarray(cache.parts_for(topics))
+        h_hi, h_lo = pack_hashes(splitmix64(qids))
+        h_hi, h_lo = jnp.asarray(h_hi), jnp.asarray(h_lo)
+        vals = jnp.zeros((batch, cfg.value_dim), jnp.int32)
+        admit = jnp.ones(batch, bool)
+        probe(state, h_hi, h_lo, parts)[0].block_until_ready()  # compile
+        t0 = time.time()
+        reps = 20
+        for _ in range(reps):
+            hit, _, _ = probe(state, h_hi, h_lo, parts)
+        hit.block_until_ready()
+        us = (time.time() - t0) / reps * 1e6
+        rows.append(
+            csv_row(f"perf/cache_probe/B={batch}", us, f"ns_per_query={us*1000/batch:.0f}")
+        )
+        state2 = commit(state, h_hi, h_lo, parts, vals, admit)
+        jax.tree.leaves(state2)[0].block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            state2 = commit(state, h_hi, h_lo, parts, vals, admit)
+        jax.tree.leaves(state2)[0].block_until_ready()
+        us = (time.time() - t0) / 5 * 1e6
+        rows.append(
+            csv_row(f"perf/cache_commit/B={batch}", us, f"ns_per_query={us*1000/batch:.0f}")
+        )
+
+    # reuse-distance engine vs sequential Fenwick
+    n = 500_000
+    keys = rng.integers(0, n // 5, size=n).astype(np.int64)
+    part = np.zeros(n, dtype=np.int64)
+    order, prev = partitioned_prev(keys, part)
+    t0 = time.time()
+    rd_fast = reuse_distances_offline(prev)
+    fast_s = time.time() - t0
+    t0 = time.time()
+    rd_ref = reuse_distances_py(prev[:50_000])
+    ref_s = (time.time() - t0) * (n / 50_000)
+    assert (rd_fast[:50_000] == rd_ref).all()
+    rows.append(
+        csv_row(
+            "perf/reuse_distance/n=500k",
+            fast_s * 1e6,
+            f"Mreq_per_s={n/fast_s/1e6:.2f};speedup_vs_fenwick={ref_s/fast_s:.1f}x",
+        )
+    )
+    return rows

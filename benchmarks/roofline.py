@@ -1,0 +1,54 @@
+"""Roofline table renderer: reads dryrun_results.json into EXPERIMENTS.md
+markdown (per (arch x shape x mesh): three terms, dominant bottleneck,
+useful-compute ratio, roofline fraction, and the what-would-help note)."""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def _advice(r: dict) -> str:
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    kind = r["kind"]
+    if dom == "compute":
+        if rf["useful_flops_ratio"] < 0.5:
+            return "cut recompute/padding waste (remat policy, MoE capacity)"
+        return "near compute bound; only faithful-flops wins remain"
+    if dom == "memory":
+        if kind == "decode":
+            return "KV-cache bytes dominate: quantize KV / window local layers"
+        if kind == "train":
+            return "activation traffic: seq-sharded residual + smaller q-chunk"
+        return "stream larger fused blocks; bf16 intermediates"
+    if dom == "collective":
+        return "overlap or shrink collectives (reduce-scatter grads, fewer all-gathers)"
+    return "-"
+
+
+def render(path: str = "dryrun_results.json") -> List[str]:
+    rows = json.load(open(path))
+    out = []
+    out.append(
+        "| arch | shape | mesh | GiB/dev | t_comp (s) | t_mem (s) | t_coll (s) "
+        "| bound | useful | roofline frac | next lever |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL {r['status'][:40]} |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["temp_bytes"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {mem:.1f} "
+            f"| {rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} "
+            f"| {rf['dominant']} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {_advice(r)} |"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(render(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")))

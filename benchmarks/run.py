@@ -1,0 +1,71 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks the log
+and size grid (CI-scale, ~2-3 min); the default reproduces the full scaled
+paper grid.  ``--lda`` uses the end-to-end LDA pipeline for topic
+assignment instead of generator-oracle topics (paper-faithful, slower).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small log + 2 sizes")
+    ap.add_argument("--lda", action="store_true", help="LDA topics (not oracle)")
+    ap.add_argument(
+        "--only",
+        help="comma-separated subset: table2,table3,table45,table67,fig6,fig7,perf",
+    )
+    ap.add_argument(
+        "--scale", type=float, default=0.6,
+        help="stream-size multiplier over the calibrated 1.5M-request log",
+    )
+    args = ap.parse_args()
+
+    from . import (
+        fig6_miss_distance,
+        fig7_fs_sweep,
+        perf_cache,
+        perf_kernels,
+        table2_hit_rates,
+        table3_belady_gap,
+        table45_admission,
+        table67_singleton,
+    )
+    from .common import CACHE_SIZES, QUICK_SIZES
+
+    scale = 0.2 if args.quick else args.scale
+    sizes = QUICK_SIZES if args.quick else CACHE_SIZES
+    only = set(args.only.split(",")) if args.only else None
+
+    suites = [
+        ("table2", lambda: table2_hit_rates.run(sizes, scale=scale, lda=args.lda)),
+        ("table3", lambda: table3_belady_gap.run(sizes, scale=scale, lda=args.lda)),
+        ("table45", lambda: table45_admission.run(sizes, scale=scale, lda=args.lda)),
+        ("table67", lambda: table67_singleton.run(sizes, scale=scale, lda=args.lda)),
+        # fig6 needs a cache small relative to the (reduced) log so topic
+        # sections actually evict: use the second-smallest size
+        ("fig6", lambda: fig6_miss_distance.run(n=sizes[1], scale=min(scale, 0.2))),
+        ("fig7", lambda: fig7_fs_sweep.run(sizes[:2], scale=scale)),
+        ("perf", lambda: perf_cache.run() + perf_kernels.run()),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},elapsed={time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

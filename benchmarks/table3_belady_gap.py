@@ -1,0 +1,37 @@
+"""Paper Table 3: gaps of best SDC / best STD w.r.t. Bélády's optimum."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import STRATEGIES
+
+from .common import best_config, belady_rate, csv_row, get_shared
+
+
+def run(sizes, scale: float = 1.0, lda: bool = False, seed: int = 7) -> List[str]:
+    pipe, cache = get_shared(scale, seed, lda, 0.7)
+    keys = pipe.log.keys
+    rows: List[str] = []
+    for n in sizes:
+        t0 = time.time()
+        bel = belady_rate(keys, n, pipe.log.n_train)
+        sdc = best_config(cache, pipe.stats, "SDC", n).hit_rate
+        std = max(
+            best_config(cache, pipe.stats, s, n).hit_rate
+            for s in STRATEGIES
+            if s != "SDC"
+        )
+        gap_sdc = bel - sdc
+        gap_std = bel - std
+        gapred = (gap_sdc - gap_std) / gap_sdc * 100 if gap_sdc > 0 else 0.0
+        us = (time.time() - t0) * 1e6
+        rows.append(
+            csv_row(
+                f"table3/N={n}",
+                us,
+                f"belady={bel:.4f};best_sdc={sdc:.4f};best_std={std:.4f};"
+                f"gap_sdc={gap_sdc:.4f};gap_std={gap_std:.4f};gap_reduction_pct={gapred:.1f}",
+            )
+        )
+    return rows

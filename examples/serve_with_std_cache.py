@@ -1,0 +1,11 @@
+"""End-to-end serving: STD cache fronting a transformer backend.
+
+The paper's Fig. 2 as runnable code -- broker, device-resident topic-
+partitioned cache, LDA topic routing, hedged dispatch, checkpoint/restore.
+
+  PYTHONPATH=src python examples/serve_with_std_cache.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--requests", "30000", "--entries", "2048"])

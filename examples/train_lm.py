@@ -1,0 +1,11 @@
+"""Train a reduced-config LM for a few hundred steps with checkpointing.
+
+Exercises the training substrate end-to-end (AdamW, data pipeline,
+atomic checkpoints).  Loss should drop by >0.5 nats over the run.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(["--arch", "gemma-2b", "--steps", "200", "--ckpt-dir", "/tmp/repro_ckpt_ex"])

@@ -1,0 +1,20 @@
+"""repro: Topical Result Caching (STD cache) as a multi-pod JAX framework."""
+import os
+
+__version__ = "0.1.0"
+
+
+def enable_compile_cache() -> None:
+    """Opt-in persistent XLA compilation cache (dry-runs recompile identical
+    programs across processes; caching makes them restart-friendly)."""
+    try:  # pragma: no cover - best effort
+        import jax
+
+        cache_dir = os.environ.get(
+            "REPRO_COMPILE_CACHE_DIR", os.path.expanduser("~/.cache/repro_jax")
+        )
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 10.0)
+    except Exception:
+        pass

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned arch + the registry."""
+from .registry import ARCHS, Arch, ShapeSpec, all_cells, get_arch
+
+__all__ = ["ARCHS", "Arch", "ShapeSpec", "all_cells", "get_arch"]

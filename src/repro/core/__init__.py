@@ -1,0 +1,77 @@
+"""Core caching library: the paper's contribution (STD cache) + baselines.
+
+Exact per-request policies (``policies``), configuration builders
+(``build``), Bélády's optimal bound (``belady``), sequential simulation
+(``simulate``), and the vectorized reuse-distance engine (``fast`` /
+``jax_sim``) that evaluates every strategy and every cache size from one
+pass over the stream.
+"""
+from .alloc import proportional_allocation, uniform_allocation
+from .belady import belady_hit_rate, belady_hits, next_use_array
+from .build import STRATEGIES, build_lru, build_sdc, build_std, split_sizes
+from .fast import (
+    ALWAYS_HIT,
+    DYNAMIC_PART,
+    NO_CACHE,
+    Layout,
+    TraceAnalysis,
+    VecLog,
+    VecStats,
+    analyze,
+    hit_rate,
+    lru_hits_all_sizes,
+    make_layout,
+)
+from .policies import (
+    NO_TOPIC,
+    AdmissionPolicy,
+    AdmitAll,
+    CacheUnit,
+    LRUCache,
+    NullCache,
+    PollutingFilter,
+    SDCCache,
+    STDCache,
+    SingletonOracle,
+    StaticCache,
+)
+from .simulate import SimResult, simulate
+from .stats import TrainStats
+
+__all__ = [
+    "ALWAYS_HIT",
+    "AdmissionPolicy",
+    "AdmitAll",
+    "CacheUnit",
+    "DYNAMIC_PART",
+    "Layout",
+    "LRUCache",
+    "NO_CACHE",
+    "NO_TOPIC",
+    "NullCache",
+    "PollutingFilter",
+    "SDCCache",
+    "STDCache",
+    "STRATEGIES",
+    "SimResult",
+    "SingletonOracle",
+    "StaticCache",
+    "TraceAnalysis",
+    "TrainStats",
+    "VecLog",
+    "VecStats",
+    "analyze",
+    "belady_hit_rate",
+    "belady_hits",
+    "build_lru",
+    "build_sdc",
+    "build_std",
+    "hit_rate",
+    "lru_hits_all_sizes",
+    "make_layout",
+    "next_use_array",
+    "proportional_allocation",
+    "simulate",
+    "split_sizes",
+    "uniform_allocation",
+]

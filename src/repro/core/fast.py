@@ -1,0 +1,354 @@
+"""Vectorized (reuse-distance) trace analytics for every cache strategy.
+
+This module turns a query stream + a concrete cache configuration into a
+*layout*: each stream position is routed to either
+
+* ``ALWAYS_HIT``  -- key belongs to a (global or per-topic) static set;
+* ``NO_CACHE``    -- rejected by a (key-deterministic) admission policy:
+  unconditional miss, and invisible to the LRU state of everyone else;
+* an LRU partition id (a topic section or the dynamic cache) with a
+  capacity.
+
+Within each LRU partition, a request hits iff its within-partition reuse
+distance is < capacity (Mattson stack property), so one reuse-distance pass
+(`repro.core.jax_sim`) answers the whole configuration -- and, via the
+per-partition histogram, every *capacity split* of the same partitioning at
+once.  Exactness w.r.t. the sequential simulator is enforced by property
+tests in ``tests/test_core_equivalence.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from . import rd_offline
+from .alloc import proportional_allocation, uniform_allocation
+from .build import split_sizes
+from .policies import NO_TOPIC
+
+# Special partition ids (>= 0 are LRU partitions; topic t -> partition t,
+# dynamic cache -> partition DYNAMIC_PART).
+ALWAYS_HIT = -1
+NO_CACHE = -2
+DYNAMIC_PART = 10**9  # sentinel well above any topic id
+
+
+@dataclass
+class VecLog:
+    """Integer-encoded query log (train prefix + test suffix)."""
+
+    keys: np.ndarray  # (n,) int64 query ids in [0, n_queries)
+    n_train: int
+    key_topic: np.ndarray  # (n_queries,) topic id or NO_TOPIC
+    #: per-key query-string features for the admission policy
+    key_terms: Optional[np.ndarray] = None  # (n_queries,)
+    key_chars: Optional[np.ndarray] = None  # (n_queries,)
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.key_topic)
+
+    @property
+    def test_keys(self) -> np.ndarray:
+        return self.keys[self.n_train :]
+
+    @property
+    def train_keys(self) -> np.ndarray:
+        return self.keys[: self.n_train]
+
+
+@dataclass
+class VecStats:
+    """Vectorized TrainStats: everything indexed by integer key id."""
+
+    train_freq: np.ndarray  # (n_queries,)
+    key_topic: np.ndarray  # (n_queries,)
+    by_freq: np.ndarray  # key ids sorted by train freq desc (stable)
+    freq_rank: np.ndarray  # rank of each key in by_freq (0 = most frequent)
+    notopic_rank: np.ndarray  # rank among no-topic keys (or n)
+    topic_rank: np.ndarray  # rank among same-topic keys (or n)
+    topic_distinct: Dict[int, int]  # distinct *training* queries per topic
+
+    @classmethod
+    def from_log(cls, log: VecLog) -> "VecStats":
+        nq = log.n_queries
+        freq = np.bincount(log.train_keys, minlength=nq).astype(np.int64)
+        # Stable order: freq desc, first-seen asc (ties broken by key id,
+        # which the synthetic generator assigns in first-seen order).
+        by_freq = np.lexsort((np.arange(nq), -freq))
+        freq_rank = np.empty(nq, dtype=np.int64)
+        freq_rank[by_freq] = np.arange(nq)
+        topic = log.key_topic
+        seen_in_train = freq > 0
+
+        unranked = np.iinfo(np.int64).max // 2  # larger than any cache size
+
+        def _rank_within(mask: np.ndarray) -> np.ndarray:
+            """Frequency rank restricted to ``mask`` keys (others huge)."""
+            r = np.full(nq, unranked, dtype=np.int64)
+            sel = by_freq[mask[by_freq]]
+            r[sel] = np.arange(len(sel))
+            return r
+
+        notopic_rank = _rank_within((topic == NO_TOPIC) & seen_in_train)
+        topic_rank = np.full(nq, unranked, dtype=np.int64)
+        topic_distinct: Dict[int, int] = {}
+        for t in np.unique(topic[topic != NO_TOPIC]):
+            mask = (topic == t) & seen_in_train
+            topic_rank[mask] = _rank_within(mask)[mask]
+            topic_distinct[int(t)] = int(mask.sum())
+        return cls(
+            train_freq=freq,
+            key_topic=topic,
+            by_freq=by_freq,
+            freq_rank=freq_rank,
+            notopic_rank=notopic_rank,
+            topic_rank=topic_rank,
+            topic_distinct=topic_distinct,
+        )
+
+
+@dataclass
+class Layout:
+    """A concrete cache configuration, vectorized over keys."""
+
+    #: per-key routing: ALWAYS_HIT / NO_CACHE / partition id
+    key_part: np.ndarray
+    #: capacity per partition id
+    capacity: Dict[int, int]
+
+    def total_entries(self) -> int:
+        return sum(self.capacity.values())
+
+
+def make_layout(
+    strategy: str,
+    n_entries: int,
+    stats: VecStats,
+    f_s: float = 0.0,
+    f_t: float = 0.0,
+    f_ts: Optional[float] = None,
+    admitted: Optional[np.ndarray] = None,
+) -> Layout:
+    """Vectorized twin of :func:`repro.core.build.build_std`."""
+    nq = len(stats.train_freq)
+    topic = stats.key_topic
+    key_part = np.where(topic == NO_TOPIC, DYNAMIC_PART, topic).astype(np.int64)
+
+    if strategy == "LRU":
+        key_part[:] = DYNAMIC_PART
+        cap = {DYNAMIC_PART: n_entries}
+        n_s = 0
+    elif strategy == "SDC":
+        n_s = int(round(f_s * n_entries))
+        key_part[:] = DYNAMIC_PART
+        cap = {DYNAMIC_PART: n_entries - n_s}
+    elif strategy in ("STDf_LRU", "STDv_LRU"):
+        n_s, n_t, n_d = split_sizes(n_entries, f_s, f_t)
+        topics = sorted(stats.topic_distinct)
+        sizes = (
+            uniform_allocation(n_t, topics)
+            if strategy == "STDf_LRU"
+            else proportional_allocation(n_t, stats.topic_distinct)
+        )
+        cap = {int(t): int(c) for t, c in sizes.items()}
+        cap[DYNAMIC_PART] = n_d
+    elif strategy in ("STDv_SDC_C1", "STDv_SDC_C2"):
+        if f_ts is None:
+            raise ValueError(f"{strategy} requires f_ts")
+        n_s, n_t, n_d = split_sizes(n_entries, f_s, f_t)
+        sizes = proportional_allocation(n_t, stats.topic_distinct)
+        cap = {}
+        # Global static membership first (affects C2 exclusions).  The
+        # static cache can only hold queries observed in training.
+        if strategy == "STDv_SDC_C1":
+            in_global_static = stats.notopic_rank < n_s
+        else:
+            in_global_static = (stats.freq_rank < n_s) & (stats.train_freq > 0)
+        for t, c_t in sizes.items():
+            t = int(t)
+            m = int(round(f_ts * c_t))
+            mask_t = topic == t
+            if strategy == "STDv_SDC_C2":
+                # Skip queries already resident in S when filling the topic
+                # static fraction: the m best *non-S* topic queries.
+                elig = mask_t & ~in_global_static
+                # rank among eligible topic keys by (global) freq order
+                order = stats.by_freq[elig[stats.by_freq]]
+                ts_keys = order[:m]
+            else:
+                ts_keys = np.flatnonzero(mask_t & (stats.topic_rank < m))
+            topic_static = np.zeros(nq, dtype=bool)
+            topic_static[ts_keys] = True
+            key_part[mask_t & topic_static] = ALWAYS_HIT
+            cap[t] = c_t - len(ts_keys)
+        cap[DYNAMIC_PART] = n_d
+    elif strategy == "Tv_SDC":
+        if f_ts is None:
+            raise ValueError("Tv_SDC requires f_ts")
+        extra = (max(stats.topic_distinct) + 1) if stats.topic_distinct else 0
+        distinct = dict(stats.topic_distinct)
+        seen = stats.train_freq > 0
+        distinct[extra] = int(((topic == NO_TOPIC) & seen).sum())
+        sizes = proportional_allocation(n_entries, distinct)
+        key_part = np.where(topic == NO_TOPIC, extra, topic).astype(np.int64)
+        cap = {}
+        for t, c_t in sizes.items():
+            t = int(t)
+            m = int(round(f_ts * c_t))
+            if t == extra:
+                ts = (topic == NO_TOPIC) & (stats.notopic_rank < m)
+            else:
+                ts = (topic == t) & (stats.topic_rank < m)
+            key_part[ts] = ALWAYS_HIT
+            cap[t] = c_t - int(ts.sum())
+        n_s = 0
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    if strategy not in ("LRU", "Tv_SDC"):
+        if strategy == "STDv_SDC_C1":
+            global_static = stats.notopic_rank < n_s
+        else:
+            global_static = (stats.freq_rank < n_s) & (stats.train_freq > 0)
+        key_part[global_static] = ALWAYS_HIT
+
+    # topics whose section received zero entries are "not handled" (paper
+    # Alg. 1): their queries fall through to the dynamic cache, making
+    # f_t = 0 degenerate exactly to SDC.
+    zero_parts = [p for p, c in cap.items() if c == 0 and p != DYNAMIC_PART]
+    if zero_parts and strategy not in ("Tv_SDC",):
+        # keep ALWAYS_HIT (per-topic static fractions may be non-empty)
+        reroute = np.isin(key_part, zero_parts)
+        # only reroute when the *whole* section (static part included) is
+        # empty; sections with a static fraction but 0 LRU entries keep
+        # their routing (their LRU part just never hits)
+        if strategy in ("STDv_SDC_C1", "STDv_SDC_C2"):
+            sizes_total = proportional_allocation(
+                split_sizes(n_entries, f_s, f_t)[1], stats.topic_distinct
+            )
+            empty = {int(t) for t, c in sizes_total.items() if c == 0}
+            reroute = np.isin(key_part, [p for p in zero_parts if p in empty])
+        key_part[reroute] = DYNAMIC_PART
+
+    if admitted is not None:
+        key_part[(key_part != ALWAYS_HIT) & ~admitted] = NO_CACHE
+    return Layout(key_part=key_part, capacity=cap)
+
+
+# ---------------------------------------------------------------------------
+# Reuse-distance evaluation
+# ---------------------------------------------------------------------------
+
+
+def partitioned_prev(keys: np.ndarray, part: np.ndarray) -> np.ndarray:
+    """prev[i] = previous position with same (partition, key), else -1.
+
+    Positions are *renumbered by partition blocks* (stable concatenation of
+    per-partition sub-streams) so that a single reuse-distance scan treats
+    every partition as an independent cache.  Returns prev in the permuted
+    ordering along with the permutation.
+    """
+    order = np.lexsort((np.arange(len(keys)), part))  # stable by partition
+    k_sorted = keys[order]
+    prev = np.full(len(keys), -1, dtype=np.int64)
+    # previous occurrence of same key within the permuted array, computed
+    # vectorized: sort (key, permuted position); same-key neighbours with
+    # same partition give prev.
+    p_sorted = part[order]
+    idx = np.lexsort((np.arange(len(keys)), k_sorted, p_sorted))
+    kk = k_sorted[idx]
+    pp = p_sorted[idx]
+    same = np.zeros(len(keys), dtype=bool)
+    same[1:] = (kk[1:] == kk[:-1]) & (pp[1:] == pp[:-1])
+    prev_sorted = np.full(len(keys), -1, dtype=np.int64)
+    prev_sorted[1:] = idx[:-1]
+    prev_in_perm = np.where(same, prev_sorted, -1)
+    prev[idx] = prev_in_perm
+    return order, prev
+
+
+@dataclass
+class TraceAnalysis:
+    """Per-position reuse distances for one layout over one stream."""
+
+    part_pos: np.ndarray  # partition id per original position
+    rd: np.ndarray  # reuse distance per original position (-1 first occ)
+    count_mask: np.ndarray  # True on test positions
+
+    def hits(self, capacity: Dict[int, int]) -> int:
+        """Exact hit count on the test suffix for given partition sizes."""
+        m = self.count_mask
+        hits = int(((self.part_pos == ALWAYS_HIT) & m).sum())
+        for p, c in capacity.items():
+            sel = (self.part_pos == p) & m
+            if c > 0:
+                hits += int((sel & (self.rd >= 0) & (self.rd < c)).sum())
+        return hits
+
+    def hit_histograms(self, max_cap: int) -> Dict[int, np.ndarray]:
+        """cumhist[p][c] = test hits in partition p with capacity c,
+        for every c in [0, max_cap] at once."""
+        out: Dict[int, np.ndarray] = {}
+        m = self.count_mask
+        for p in np.unique(self.part_pos):
+            if p in (ALWAYS_HIT, NO_CACHE):
+                continue
+            sel = (self.part_pos == p) & m & (self.rd >= 0)
+            h = np.bincount(
+                np.clip(self.rd[sel], 0, max_cap), minlength=max_cap + 1
+            )
+            out[int(p)] = np.concatenate([[0], np.cumsum(h[:max_cap])])
+        return out
+
+    def static_hits(self) -> int:
+        return int(((self.part_pos == ALWAYS_HIT) & self.count_mask).sum())
+
+
+def analyze(log: VecLog, layout: Layout, warm: bool = True) -> TraceAnalysis:
+    """Route every position, compute within-partition reuse distances."""
+    keys = log.keys if warm else log.test_keys
+    n_train = log.n_train if warm else 0
+    part_pos = layout.key_part[keys]
+    count_mask = np.zeros(len(keys), dtype=bool)
+    count_mask[n_train:] = True
+
+    live = (part_pos != ALWAYS_HIT) & (part_pos != NO_CACHE)
+    rd = np.full(len(keys), -1, dtype=np.int64)
+    if live.any():
+        sub_keys = keys[live]
+        sub_part = part_pos[live]
+        order, prev = partitioned_prev(sub_keys, sub_part)
+        rd_perm = rd_offline.reuse_distances_offline(prev)
+        # map back: permuted position j corresponds to original order[j]
+        rd_back = np.empty(len(sub_keys), dtype=np.int64)
+        rd_back[order] = rd_perm
+        rd[live] = rd_back
+    return TraceAnalysis(part_pos=part_pos, rd=rd, count_mask=count_mask)
+
+
+def hit_rate(
+    log: VecLog,
+    layout: Layout,
+    warm: bool = True,
+    analysis: Optional[TraceAnalysis] = None,
+) -> float:
+    ana = analysis if analysis is not None else analyze(log, layout, warm=warm)
+    n_test = int(ana.count_mask.sum())
+    return ana.hits(layout.capacity) / n_test if n_test else 0.0
+
+
+def lru_hits_all_sizes(log: VecLog, max_cap: int, warm: bool = True) -> np.ndarray:
+    """hits[c] for a single LRU of every capacity c in [0, max_cap]."""
+    layout = Layout(
+        key_part=np.full(log.n_queries, DYNAMIC_PART, dtype=np.int64),
+        capacity={DYNAMIC_PART: max_cap},
+    )
+    ana = analyze(log, layout, warm=warm)
+    return ana.hit_histograms(max_cap)[DYNAMIC_PART]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as a package: ``kernel.py`` (pl.pallas_call + BlockSpec
+tiling), ``ops.py`` (jit'd public wrapper with padding & dispatch) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+
+* ``topic_score``      -- fused BOW x log-phi matmul + argmax (LDA inference)
+* ``embedding_bag``    -- scalar-prefetch gathered DMA + in-VMEM bag reduce
+* ``decode_attention`` -- GQA flash-decode over the KV cache (online softmax)
+"""
+from .decode_attention.ops import decode_attention_op
+from .embedding_bag.ops import embedding_bag_op
+from .topic_score.ops import topic_score_op
+
+__all__ = ["decode_attention_op", "embedding_bag_op", "topic_score_op"]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: GQA flash-decode attention over a KV cache.
+
+Decode attention is memory-bound: one (G, d) query group streams the
+entire (S, d) K/V cache of its kv-head from HBM.  The kernel tiles S into
+VMEM-resident blocks and maintains the online-softmax running state
+(m, l, acc) in VMEM scratch, so HBM sees exactly one read of K/V and one
+write of the (G, d) output: the roofline minimum.
+
+Grid = (B, Hkv, S/bs) with S innermost; scratch persists across the S
+sweep and re-initializes when the (b, h) pair changes (j == 0).  The
+valid cache length arrives via scalar prefetch, so compiled shapes are
+static while serving arbitrary fill levels.  Gemma-2 style logit softcap
+and sliding-window (local-layer) masking are fused in.
+
+VMEM at defaults (bs=512, d<=256, f32 math): K/V blocks 2*512*256*4 =
+1 MiB, acc <= 8*256*4 = 8 KiB -- comfortably inside v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    len_ref,  # scalar prefetch: (1,) int32 valid cache length (q position)
+    q_ref,  # (1, 1, G, d)
+    k_ref,  # (1, bs, 1, d)
+    v_ref,  # (1, bs, 1, d)
+    o_ref,  # (1, 1, G, d)
+    m_ref,  # scratch (G, 128) running max
+    l_ref,  # scratch (G, 128) running denom
+    acc_ref,  # scratch (G, d) running numerator
+    *,
+    scale: float,
+    softcap: Optional[float],
+    window: Optional[int],
+    bs: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (bs, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bs)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = pos <= cur
+    if window is not None:
+        mask = mask & (pos > cur - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[:, :1]  # (G, 1)
+    m_new = jnp.maximum(m_old[:, 0], jnp.max(s, axis=-1))[:, None]  # (G, 1)
+    alpha = jnp.exp(m_old - m_new)  # (G, 1)
+    p = jnp.exp(s - m_new)  # (G, bs)
+    l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "softcap", "window", "bs", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hkv, G, d)
+    k: jnp.ndarray,  # (B, S, Hkv, d)
+    v: jnp.ndarray,  # (B, S, Hkv, d)
+    cur_len: jnp.ndarray,  # scalar int32
+    scale: float,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    bs: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hkv, g, d = q.shape
+    s = k.shape[1]
+    bs = min(bs, s)
+    grid = (b, hkv, pl.cdiv(s, bs))
+    kernel = functools.partial(
+        _kernel, scale=scale, softcap=softcap, window=window, bs=bs
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, j, len_ref: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, hi, j, len_ref: (bi, j, hi, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda bi, hi, j, len_ref: (bi, j, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, d), lambda bi, hi, j, len_ref: (bi, hi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cur_len, jnp.int32).reshape(1), q, k, v)

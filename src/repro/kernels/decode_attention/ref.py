@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for GQA flash-decode attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, Hkv, G, d) current-token queries
+    k: jnp.ndarray,  # (B, S, Hkv, d) cache keys
+    v: jnp.ndarray,  # (B, S, Hkv, d) cache values
+    cur_len: jnp.ndarray,  # scalar int32: query position (attends to <= cur_len)
+    scale: float,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    s = jnp.einsum("bngd,bsnd->bngs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(k.shape[1])
+    mask = pos <= cur_len
+    if window is not None:
+        mask = mask & (pos > cur_len - window)
+    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bngs,bsnd->bngd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: EmbeddingBag via scalar-prefetch gathered DMA.
+
+JAX has no native EmbeddingBag; the jnp fallback materializes the gathered
+(N, D) rows in HBM before reducing.  On TPU the idiomatic pattern is
+*scalar prefetch*: the index array is prefetched to SMEM, and each grid
+step's BlockSpec index_map uses it to DMA exactly one table row-block
+HBM->VMEM -- the gathered matrix never exists.  Bags are reduced in-VMEM
+by revisiting the same output block across the (contiguous) indices of a
+segment: Pallas keeps the block resident between consecutive grid steps
+that map to it, so the accumulation is free of HBM traffic.
+
+Contract: ``segments`` ascending (sort at the wrapper), one grid step per
+index.  D is the row block (multiple of 128 lanes after padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, seg_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    is_first = jnp.where(i == 0, True, seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (N,) int32
+    segments: jnp.ndarray,  # (N,) int32 ascending
+    n_bags: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = indices.shape[0]
+    v, d = table.shape
+    scalars = jnp.stack([indices.astype(jnp.int32), segments.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref, seg_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref, seg_ref: (seg_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), table.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), segments.astype(jnp.int32), table)

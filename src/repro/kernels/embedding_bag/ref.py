@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (N,) int32 row ids, sorted by segment
+    segments: jnp.ndarray,  # (N,) int32 bag id per index, ascending
+    n_bags: int,
+    mode: str = "sum",
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0)  # (N, D)
+    import jax
+
+    out = jax.ops.segment_sum(rows, segments, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segments, dtype=table.dtype), segments, num_segments=n_bags
+        )
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out

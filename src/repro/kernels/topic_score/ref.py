@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused topic-score kernel.
+
+score[b, t] = sum_v counts[b, v] * log_phi[t, v]; the query is assigned
+its argmax topic with a softmax confidence (paper Sec. 3.3: argmax topic,
+dropped below a confidence threshold).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def topic_score_ref(counts: jnp.ndarray, log_phi_t: jnp.ndarray):
+    """counts: (B, V) f32; log_phi_t: (V, K) f32 (transposed topic-word).
+
+    Returns (scores (B, K) f32, top (B,) int32, conf (B,) f32).
+    """
+    scores = counts @ log_phi_t  # (B, K)
+    top = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    p = jax.nn.softmax(scores, axis=-1)
+    conf = jnp.take_along_axis(p, top[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return scores, top, conf

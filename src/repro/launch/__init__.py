@@ -1,0 +1,17 @@
+"""Launchers: mesh construction, shardings, step builders, drivers.
+
+NOTE: ``dryrun`` must be the process entrypoint (it sets XLA_FLAGS before
+any jax import) -- do not import it from here.
+"""
+from .mesh import batch_axes, make_production_mesh, make_smoke_mesh, mesh_device_count
+from .steps import StepBundle, build_step, input_specs
+
+__all__ = [
+    "StepBundle",
+    "batch_axes",
+    "build_step",
+    "input_specs",
+    "make_production_mesh",
+    "make_smoke_mesh",
+    "mesh_device_count",
+]

@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, print memory/cost analyses, and extract roofline terms.
+
+MUST be the process entrypoint (the XLA flag above is read once, at first
+jax init -- hence the two magic lines before any other import).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.registry import ARCHS, all_cells, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_device_count  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Hardware model: TPU v5e (target platform; CPU is only the compile host).
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per-chip effective, one direction)
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO.
+
+    Parses lines like::
+
+        %ag = bf16[2,4096,512]{...} all-gather(...)
+        ROOT %tuple = (f32[128]{0}, ...) all-reduce(...)
+
+    Conservatively uses the op *result* size (for all-gather that is the
+    gathered size; for reduce-scatter the scattered size).
+    """
+    dtype_bytes = {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+        "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+        "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":
+            continue  # avoid double counting start/done pairs
+        total = 0
+        for dm in shape_re.finditer(m.group(1)):
+            dt, dims = dm.group(1), dm.group(2)
+            if dt not in dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * dtype_bytes[dt]
+        out[kind] += total
+        counts[kind] += 1
+    out["counts"] = counts
+    return out
+
+
+def roofline(cost: dict, coll: dict, n_chips: int, model_flops: float) -> dict:
+    """cost_analysis / the compiled SPMD module are PER-DEVICE quantities;
+    model_flops is the global analytic count."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = sum(v for k, v in coll.items() if k != "counts")
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    t_bound = max(t_compute, t_memory, t_collective)
+    useful = model_flops / (flops * n_chips) if flops else 0.0
+    # roofline fraction: useful model FLOP/s at the bound vs chip peak
+    mfu_bound = (model_flops / (n_chips * PEAK_FLOPS)) / t_bound if t_bound else 0.0
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "collectives": coll,
+    }
+
+
+def _measure(arch, shape, mesh):
+    bundle = build_step(arch, shape, mesh)
+    lowered = bundle.jitted().lower(*bundle.inputs)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return bundle, compiled, cost, coll
+
+
+def _scan_corrected(arch, shape, mesh, cost, coll):
+    """XLA's cost analysis counts a `lax.scan` body ONCE, not trip-count
+    times.  For the layer-scanned LMs we compile the same cell UNROLLED at
+    L=2 and L=4 (scan_layers=False -- an unrolled body is counted per
+    layer); the delta gives exact per-layer costs, extrapolated to depth:
+
+        total(L) = cost(L2) + (L - 2) * (cost(L4) - cost(L2)) / 2
+    """
+    import dataclasses as dc
+
+    if arch.family != "lm":
+        return cost, coll
+    l_full = arch.config.n_layers
+    variants = []
+    for l_small in (2, 4):
+        cfg_s = dc.replace(arch.config, n_layers=l_small, scan_layers=False)
+        arch_s = dc.replace(arch, config=cfg_s)
+        b = build_step(arch_s, shape, mesh)
+        comp = b.jitted().lower(*b.inputs).compile()
+        variants.append(
+            (comp.cost_analysis(), collective_bytes_from_hlo(comp.as_text()))
+        )
+    (c2, k2), (c4, k4) = variants
+
+    def corr_scalar(key):
+        v2 = float(c2.get(key, 0.0))
+        v4 = float(c4.get(key, 0.0))
+        per_layer = max((v4 - v2) / 2.0, 0.0)
+        return v2 + (l_full - 2) * per_layer
+
+    cost = dict(cost)
+    cost["flops"] = corr_scalar("flops")
+    cost["bytes accessed"] = corr_scalar("bytes accessed")
+    coll_out = dict(coll)
+    for kind in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
+        v2, v4 = float(k2[kind]), float(k4[kind])
+        per_layer = max((v4 - v2) / 2.0, 0.0)
+        coll_out[kind] = v2 + (l_full - 2) * per_layer
+    return cost, coll_out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh_device_count(mesh)
+    t0 = time.time()
+    with mesh:
+        bundle = build_step(arch, shape, mesh)
+        lowered = bundle.jitted().lower(*bundle.inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        # collectives live in the post-SPMD optimized module, not the lowering
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        cost, coll = _scan_corrected(arch, shape, mesh, cost, coll)
+    rf = roofline(cost, coll, n_chips, bundle.model_flops)
+    per_dev_bytes = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+    ) / n_chips
+    # arguments/outputs are reported as global logical sizes; temp is per-
+    # device already on some backends -- record both raw and derived.
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "derived_per_device_gb": round(per_dev_bytes / 2**30, 3),
+        },
+        "roofline": rf,
+        "status": "ok",
+    }
+    if verbose:
+        print(f"== {bundle.name} on {result['mesh']} ({n_chips} chips) ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(
+            f"  cost_analysis (per device): flops={rf['hlo_flops_per_device']:.3e} "
+            f"bytes={rf['hlo_bytes_per_device']:.3e}"
+        )
+        print(
+            f"  roofline: compute={rf['t_compute_s']:.4g}s memory={rf['t_memory_s']:.4g}s "
+            f"collective={rf['t_collective_s']:.4g}s dominant={rf['dominant']}"
+        )
+        print(
+            f"  model_flops={rf['model_flops']:.3e} useful_ratio={rf['useful_flops_ratio']:.3f} "
+            f"roofline_fraction={rf['roofline_fraction']:.3f}"
+        )
+        print(f"  collectives: {coll}")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", help="write results JSON here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        cells = [(a.name, s.name) for a, s in all_cells()]
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        arch = get_arch(args.arch)
+        cells = [(arch.name, s.name) for s in arch.shapes]
+    else:
+        ap.error("need --arch [--shape] or --all")
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failed = 0
+    for mp in meshes:
+        for arch_name, shape_name in cells:
+            try:
+                results.append(run_cell(arch_name, shape_name, mp))
+            except Exception as e:  # noqa: BLE001
+                failed += 1
+                traceback.print_exc()
+                results.append(
+                    {
+                        "arch": arch_name,
+                        "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                    }
+                )
+                print(f"!! FAILED {arch_name}:{shape_name} multi_pod={mp}: {e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        print(f"wrote {args.json}")
+    print(f"{len(results) - failed}/{len(results)} cells passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

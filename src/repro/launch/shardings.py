@@ -1,0 +1,173 @@
+"""Parameter / activation sharding rules (MaxText-style path-regex rules).
+
+Weights shard over the "model" axis; batches shard over ("pod", "data").
+Rules match flattened parameter paths; the first matching rule wins.  A
+dimension is only sharded when divisible by the axis size -- otherwise the
+rule falls back to replication for that dim (checked at tree-build time, so
+dry-runs fail loudly in Python rather than deep inside GSPMD).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import batch_axes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def divisible_suffix(axes: Tuple[str, ...], dim: int, mesh: Mesh) -> Tuple[str, ...]:
+    """Longest suffix of ``axes`` (present in the mesh) whose product
+    divides ``dim`` -- e.g. 16 experts over ("pod","data")=32 fall back to
+    ("data",)=16.  The front axis (pod) is dropped first."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            return axes
+        axes = axes[1:]
+    return ()
+
+
+def _sanitize(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes missing from the mesh or not dividing the dimension."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, parts):
+        if isinstance(axis, tuple):
+            axis = divisible_suffix(axis, dim, mesh)
+            axis = axis if len(axis) > 1 else (axis[0] if axis else None)
+        elif axis is not None and axis not in mesh.axis_names:
+            axis = None
+        size = _axis_size(mesh, axis)
+        out.append(axis if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+# (path regex, PartitionSpec) -- specs written for the *stacked* (L, ...)
+# layer leaves produced by init_params.
+LM_RULES: List[Tuple[str, P]] = [
+    (r"embed$", P("model", None)),
+    (r"lm_head$", P(None, "model")),
+    (r"attn/q$", P(None, None, "model")),
+    (r"attn/k$", P(None, None, "model")),
+    (r"attn/v$", P(None, None, "model")),
+    (r"attn/o$", P(None, "model", None)),
+    (r"attn/._bias$", P(None, "model")),
+    (r"(^|/)mlp/wi$", P(None, None, "model")),
+    (r"(^|/)mlp/wo$", P(None, "model", None)),
+    (r"moe/router$", P(None, None, None)),
+    # stacked (L, E, D, 2, F): experts FSDP-shard over the batch axes (E),
+    # the FFN hidden F is tensor-parallel over "model"
+    (r"moe/wi$", P(None, ("pod", "data"), None, None, "model")),
+    (r"moe/wo$", P(None, ("pod", "data"), "model", None)),
+    (r".*", P()),  # norms, scalars
+]
+
+RECSYS_RULES: List[Tuple[str, P]] = [
+    (r"(user|item)_table$", P("model", None)),
+    (r"pos_table$", P()),
+    (r".*tower.*/w$", P(None, "model")),
+    (r".*", P()),
+]
+
+GNN_RULES: List[Tuple[str, P]] = [
+    (r".*", P()),  # PNA params are tiny; replicate, shard the graph instead
+]
+
+FAMILY_RULES = {"lm": LM_RULES, "recsys": RECSYS_RULES, "gnn": GNN_RULES}
+
+
+def path_of(key_path) -> str:
+    parts = []
+    for p in key_path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], rules, mesh: Mesh) -> P:
+    for pattern, spec in rules:
+        if re.search(pattern, path):
+            return _sanitize(spec, shape, mesh)
+    return P()
+
+
+def param_shardings(abstract_params: Any, mesh: Mesh, family: str) -> Any:
+    """NamedSharding tree matching an eval_shape'd parameter tree."""
+    rules = FAMILY_RULES[family]
+
+    def leaf_spec(key_path, leaf):
+        spec = spec_for_path(path_of(key_path), leaf.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract_params)
+
+
+def opt_state_shardings(abstract_opt: Any, param_shardings_tree: Any, mesh: Mesh, family: str) -> Any:
+    """Optimizer-state leaves inherit their parameter's spec where shapes
+    line up (moments), otherwise re-derive by matching trailing dims."""
+    rules = FAMILY_RULES[family]
+
+    def leaf_spec(key_path, leaf):
+        spec = spec_for_path(path_of(key_path), leaf.shape, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract_opt)
+
+
+def batch_spec(mesh: Mesh, batch: int, rank: int) -> P:
+    """Shard the leading batch dim over ("pod","data") when divisible."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % size == 0:
+        lead = axes if len(axes) > 1 else axes[0]
+        return P(lead, *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def data_sharding(mesh: Mesh, batch: int, rank: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, batch, rank))
+
+
+def kv_cache_spec(mesh: Mesh, batch: int, seq: int, n_kv: int) -> P:
+    """(L, B, S, n_kv, hd): shard batch over ("pod","data") when divisible,
+    otherwise shard the sequence; sequence additionally shards over "model"
+    (split-KV decode) when the kv-head dim cannot use it."""
+    axes = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    msize = mesh.shape.get("model", 1)
+    kv_shardable = n_kv % msize == 0 and n_kv >= msize
+    if batch % bsize == 0 and bsize > 1:
+        b_axis = axes if len(axes) > 1 else axes[0]
+        if kv_shardable:
+            return P(None, b_axis, None, "model", None)
+        if seq % msize == 0:
+            return P(None, b_axis, "model", None, None)
+        return P(None, b_axis, None, None, None)
+    # batch unshardable (e.g. long_500k B=1): spread sequence over everything
+    all_axes = tuple(axes) + (("model",) if msize > 1 else ())
+    total = bsize * msize
+    if seq % total == 0 and all_axes:
+        return P(None, None, all_axes if len(all_axes) > 1 else all_axes[0], None, None)
+    return P()

@@ -1,0 +1,559 @@
+"""Step builders: (arch, shape, mesh) -> jit-able step fn + specs + shardings.
+
+Every assigned cell lowers through here, both for the dry-run
+(ShapeDtypeStruct inputs, .lower().compile()) and for real smoke execution
+on reduced configs.  ``build_step`` returns a StepBundle carrying the step
+function, abstract inputs, and in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.registry import Arch, ShapeSpec
+from ..models import gnn, recsys, transformer
+from ..train import optim
+from .mesh import batch_axes
+from .shardings import (
+    batch_spec,
+    kv_cache_spec,
+    param_shardings,
+    spec_for_path,
+    FAMILY_RULES,
+)
+
+Params = Any
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    #: abstract inputs (tuple of pytrees of ShapeDtypeStruct)
+    inputs: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    #: analytic model flops per invocation (6*N*D training / 2*N*D inference
+    #: per token), for the roofline's "useful compute" ratio
+    model_flops: float = 0.0
+    #: argument indices donated to the output (KV caches, optimizer state):
+    #: enables in-place updates -- without this, every decode step pays an
+    #: op-level copy of the whole cache
+    donate: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.inputs)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _replicated_tree(tree, mesh):
+    return jax.tree.map(lambda _: _named(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_abstract_state(cfg, mesh, optimizer: str):
+    a_params = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    p_sh = param_shardings(a_params, mesh, "lm")
+    if optimizer == "adafactor":
+        a_opt = jax.eval_shape(lambda: optim.init_adafactor_state(a_params))
+    else:
+        a_opt = jax.eval_shape(lambda: optim.init_opt_state(a_params))
+    o_sh = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: _named(
+            mesh,
+            spec_for_path(
+                "/".join(_k(k) for k in kp), leaf.shape, FAMILY_RULES["lm"], mesh
+            ),
+        ),
+        a_opt,
+    )
+    return a_params, p_sh, a_opt, o_sh
+
+
+def _k(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def _lm_optimizer(arch: Arch) -> str:
+    # 20B+ models keep only factored stats (see train/optim.py, the
+    # PaLM/T5 TPU recipe); smaller dense models afford full AdamW moments.
+    if arch.config.moe is not None or arch.config.param_count() > 2e10:
+        return "adafactor"
+    return "adamw"
+
+
+def build_lm_step(
+    arch: Arch, shape: ShapeSpec, mesh: Mesh, smoke: bool = False, opts: Optional[dict] = None
+) -> StepBundle:
+    cfg: transformer.TransformerConfig = arch.smoke_config if smoke else arch.config
+    dims = shape.dims
+    seq, gb = dims["seq_len"], dims["global_batch"]
+    if smoke:
+        seq, gb = min(seq, 64), min(gb, 4)
+    if opts:
+        # perf levers (see EXPERIMENTS.md §Perf): act_seq_axis,
+        # decode_window_slice (forces unrolled layers), q_chunk, ...
+        if opts.get("decode_window_slice"):
+            opts = dict(opts, scan_layers=False)
+        transformer.set_moe_mesh(mesh)
+        if opts.get("act_seq_axis") and cfg.moe is None:
+            opts = dict(opts, moe_batch_axes=batch_axes(mesh) or ("data",))
+        cfg = dataclasses.replace(cfg, **opts)
+    if cfg.moe is not None:
+        # distribute the MoE layer: shard-local routing over the batch axes,
+        # expert FSDP over a divisible suffix of them, tensor-parallel
+        # expert FFN over "model" (see models/transformer.py)
+        from .shardings import divisible_suffix
+
+        transformer.set_moe_mesh(mesh)
+        baxes = batch_axes(mesh) or ("data",)
+        cfg = dataclasses.replace(
+            cfg,
+            moe_batch_axes=baxes,
+            moe_tp_axis="model" if "model" in mesh.axis_names else None,
+            moe_fsdp_axes=divisible_suffix(baxes, cfg.moe.n_experts, mesh),
+        )
+    optimizer = _lm_optimizer(arch)
+    a_params, p_sh, a_opt, o_sh = _lm_abstract_state(cfg, mesh, optimizer)
+
+    n_tokens = gb * seq
+    if shape.kind == "train":
+        opt_cfg = (
+            optim.AdafactorConfig() if optimizer == "adafactor" else optim.AdamWConfig()
+        )
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(transformer.loss_fn)(
+                params, batch, cfg
+            )
+            if optimizer == "adafactor":
+                params, opt_state = optim.adafactor_updates(
+                    params, grads, opt_state, opt_cfg
+                )
+            else:
+                params, opt_state = optim.apply_updates(
+                    params, grads, opt_state, opt_cfg
+                )
+            return params, opt_state, {"loss": loss}
+
+        batch = {"tokens": _sds((gb, seq), jnp.int32)}
+        b_sh = {"tokens": _named(mesh, batch_spec(mesh, gb, 2))}
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}:train",
+            fn=step,
+            inputs=(a_params, a_opt, batch),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, {"loss": _named(mesh, P())}),
+            model_flops=6.0 * cfg.active_param_count() * n_tokens,
+        )
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            return transformer.prefill(params, tokens, cfg)
+
+        tokens = _sds((gb, seq), jnp.int32)
+        t_sh = _named(mesh, batch_spec(mesh, gb, 2))
+        cache_sh = {
+            "k": _named(mesh, kv_cache_spec(mesh, gb, seq, cfg.n_kv_heads)),
+            "v": _named(mesh, kv_cache_spec(mesh, gb, seq, cfg.n_kv_heads)),
+            "len": _named(mesh, P()),
+        }
+        logits_sh = _named(mesh, batch_spec(mesh, gb, 2))
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}:prefill",
+            fn=step,
+            inputs=(a_params, tokens),
+            in_shardings=(p_sh, t_sh),
+            out_shardings=(logits_sh, cache_sh),
+            model_flops=2.0 * cfg.active_param_count() * n_tokens,
+        )
+
+    # decode: one new token against a seq-long KV cache
+    def step(params, cache, tokens):
+        return transformer.decode_step(params, cache, tokens, cfg)
+
+    cache = {
+        "k": _sds((cfg.n_layers, gb, seq, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": _sds((cfg.n_layers, gb, seq, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "len": _sds((), jnp.int32),
+    }
+    kv_sh = _named(mesh, kv_cache_spec(mesh, gb, seq, cfg.n_kv_heads))
+    cache_sh = {"k": kv_sh, "v": kv_sh, "len": _named(mesh, P())}
+    tokens = _sds((gb, 1), jnp.int32)
+    t_sh = _named(mesh, batch_spec(mesh, gb, 2))
+    logits_sh = _named(mesh, batch_spec(mesh, gb, 2))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}:decode",
+        fn=step,
+        inputs=(a_params, cache, tokens),
+        in_shardings=(p_sh, cache_sh, t_sh),
+        out_shardings=(logits_sh, cache_sh),
+        model_flops=2.0 * cfg.active_param_count() * gb,
+        donate=(1,),  # the KV cache updates in place
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN (PNA)
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_step(
+    arch: Arch, shape: ShapeSpec, mesh: Mesh, smoke: bool = False, opts: Optional[dict] = None
+) -> StepBundle:
+    cfg: gnn.PNAConfig = arch.smoke_config if smoke else arch.config
+    dist = bool(opts and opts.get("dist_edges"))
+    dims = dict(shape.dims)
+    a_params = jax.eval_shape(lambda: gnn.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = _replicated_tree(a_params, mesh)
+    opt_cfg = optim.AdamWConfig()
+    a_opt = jax.eval_shape(lambda: optim.init_opt_state(a_params))
+    opt_sh = _replicated_tree(a_opt, mesh)
+    pad = 512 if "pod" not in mesh.axis_names else 1024
+
+    if shape.name == "molecule":
+        b = dims["batch"] if not smoke else 8
+        n, e = dims["n_nodes"], dims["n_edges"]
+        # modality frontend is a stub: inputs arrive as precomputed atom
+        # embeddings at the model's feature width (see registry notes)
+        d_feat = cfg.d_in
+
+        def step(params, batch):
+            return gnn.forward_batched(
+                params, batch["x"], batch["edge_index"], batch["node_mask"], cfg
+            )
+
+        batch = {
+            "x": _sds((b, n, d_feat), jnp.float32),
+            "edge_index": _sds((b, 2, e), jnp.int32),
+            "node_mask": _sds((b, n), jnp.float32),
+        }
+        bspec = batch_spec(mesh, b, 3)
+        b_sh = {
+            "x": _named(mesh, bspec),
+            "edge_index": _named(mesh, batch_spec(mesh, b, 3)),
+            "node_mask": _named(mesh, batch_spec(mesh, b, 2)),
+        }
+        flops = 2.0 * b * (e * cfg.d_hidden**2 + n * (13 * cfg.d_hidden) * cfg.d_hidden)
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}:serve",
+            fn=step,
+            inputs=(a_params, batch),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=_named(mesh, batch_spec(mesh, b, 2)),
+            model_flops=flops,
+        )
+
+    # full-graph or sampled-block training step (node classification)
+    if shape.name == "minibatch_lg":
+        n = dims["block_nodes"]
+        e = dims["block_edges"]
+        d_feat = dims["d_feat"]
+    else:
+        n = dims["n_nodes"]
+        e = dims["n_edges"]
+        d_feat = dims["d_feat"]
+    if smoke:
+        n, e, d_feat = 64, 256, cfg.d_in
+    else:
+        n, e = _round_up(n, pad), _round_up(e, pad)
+        d_feat = cfg.d_in if d_feat != cfg.d_in else d_feat
+
+    if dist:
+        # perf lever: dst-partitioned edges + shard_map message passing
+        baxes = batch_axes(mesh) or ()
+
+        def loss_dist(params, batch):
+            logits = gnn.forward_dist(
+                params, batch["x"], batch["edge_index"], cfg, mesh, baxes
+            )
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+            return (nll * batch["label_mask"]).sum() / jnp.maximum(
+                batch["label_mask"].sum(), 1.0
+            )
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_dist)(params, batch)
+            params, opt_state = optim.apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss}
+
+    else:
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(gnn.loss_fn)(params, batch, cfg)
+            params, opt_state = optim.apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss}
+
+    batch = {
+        "x": _sds((n, d_feat), jnp.float32),
+        "edge_index": _sds((2, e), jnp.int32),
+        "labels": _sds((n,), jnp.int32),
+        "label_mask": _sds((n,), jnp.float32),
+    }
+    node_spec = batch_spec(mesh, n, 2)
+    edge_spec = P(None, node_spec[0]) if node_spec[0] is not None else P()
+    b_sh = {
+        "x": _named(mesh, node_spec),
+        "edge_index": _named(mesh, edge_spec),
+        "labels": _named(mesh, batch_spec(mesh, n, 1)),
+        "label_mask": _named(mesh, batch_spec(mesh, n, 1)),
+    }
+    flops = 2.0 * cfg.n_layers * (e * cfg.d_hidden**2 + n * (13 * cfg.d_hidden) * cfg.d_hidden) * 3
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}:train",
+        fn=step,
+        inputs=(a_params, a_opt, batch),
+        in_shardings=(p_sh, opt_sh, b_sh),
+        out_shardings=(p_sh, opt_sh, {"loss": _named(mesh, P())}),
+        model_flops=flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+_USER_BAG = 8
+_ITEM_BAG = 4
+
+
+def _recsys_fns(arch: Arch, cfg):
+    """(train_loss, serve_fn, retrieval_fn, batch makers) per architecture."""
+    name = arch.name
+    if name == "two-tower-retrieval":
+        def make_train(b):
+            return {
+                "user_feats": _sds((b, _USER_BAG), jnp.int32),
+                "item_feats": _sds((b, _ITEM_BAG), jnp.int32),
+            }
+
+        def make_serve(b):
+            return make_train(b)
+
+        def serve_fn(params, batch):
+            u = recsys.two_tower_user(params, batch["user_feats"], cfg)
+            i = recsys.two_tower_item(params, batch["item_feats"], cfg)
+            return (u * i).sum(-1)
+
+        def make_retr(c):
+            return {
+                "user_feats": _sds((1, _USER_BAG), jnp.int32),
+                "cand_feats": _sds((c, _ITEM_BAG), jnp.int32),
+            }
+
+        def retr_fn(params, batch):
+            return recsys.two_tower_score_candidates(
+                params, batch["user_feats"], batch["cand_feats"], cfg
+            )
+
+        return recsys.two_tower_loss, serve_fn, retr_fn, make_train, make_serve, make_retr
+
+    if name == "sasrec":
+        L = cfg.seq_len
+
+        def make_train(b):
+            return {
+                "seq": _sds((b, L), jnp.int32),
+                "pos_item": _sds((b,), jnp.int32),
+                "neg_item": _sds((b,), jnp.int32),
+            }
+
+        def make_serve(b):
+            return {"seq": _sds((b, L), jnp.int32), "candidates": _sds((b, 1), jnp.int32)}
+
+        def serve_fn(params, batch):
+            return recsys.sasrec_score(params, batch, cfg)[:, 0]
+
+        def make_retr(c):
+            return {"seq": _sds((1, L), jnp.int32), "candidates": _sds((1, c), jnp.int32)}
+
+        def retr_fn(params, batch):
+            return recsys.sasrec_score(params, batch, cfg)[0]
+
+        return recsys.sasrec_loss, serve_fn, retr_fn, make_train, make_serve, make_retr
+
+    if name == "din":
+        L = cfg.seq_len
+
+        def make_train(b):
+            return {
+                "hist": _sds((b, L), jnp.int32),
+                "target": _sds((b,), jnp.int32),
+                "label": _sds((b,), jnp.float32),
+            }
+
+        def make_serve(b):
+            return {"hist": _sds((b, L), jnp.int32), "target": _sds((b,), jnp.int32)}
+
+        def serve_fn(params, batch):
+            return recsys.din_forward(params, batch, cfg)
+
+        def make_retr(c):
+            return {"hist": _sds((1, L), jnp.int32), "cands": _sds((c,), jnp.int32)}
+
+        def retr_fn(params, batch):
+            hist = jnp.broadcast_to(batch["hist"], (batch["cands"].shape[0], batch["hist"].shape[1]))
+            return recsys.din_forward(
+                params, {"hist": hist, "target": batch["cands"]}, cfg
+            )
+
+        return recsys.din_loss, serve_fn, retr_fn, make_train, make_serve, make_retr
+
+    if name == "mind":
+        L = cfg.seq_len
+
+        def make_train(b):
+            return {"seq": _sds((b, L), jnp.int32), "candidates": _sds((b, 16), jnp.int32)}
+
+        def make_serve(b):
+            return {"seq": _sds((b, L), jnp.int32), "candidates": _sds((b, 1), jnp.int32)}
+
+        def serve_fn(params, batch):
+            return recsys.mind_score(params, batch, cfg)[:, 0]
+
+        def make_retr(c):
+            return {"seq": _sds((1, L), jnp.int32), "candidates": _sds((1, c), jnp.int32)}
+
+        def retr_fn(params, batch):
+            return recsys.mind_score(params, batch, cfg)[0]
+
+        return recsys.mind_loss, serve_fn, retr_fn, make_train, make_serve, make_retr
+
+    raise ValueError(name)
+
+
+_RECSYS_INIT = {
+    "two-tower-retrieval": recsys.init_two_tower,
+    "sasrec": recsys.init_sasrec,
+    "din": recsys.init_din,
+    "mind": recsys.init_mind,
+}
+
+
+def build_recsys_step(arch: Arch, shape: ShapeSpec, mesh: Mesh, smoke: bool = False) -> StepBundle:
+    cfg = arch.smoke_config if smoke else arch.config
+    init = _RECSYS_INIT[arch.name]
+    a_params = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    p_sh = param_shardings(a_params, mesh, "recsys")
+    loss_fn, serve_fn, retr_fn, make_train, make_serve, make_retr = _recsys_fns(arch, cfg)
+    dims = shape.dims
+    emb = cfg.embed_dim
+
+    if shape.kind == "train":
+        b = 64 if smoke else dims["batch"]
+        opt_cfg = optim.AdamWConfig()
+        a_opt = jax.eval_shape(lambda: optim.init_opt_state(a_params))
+        o_sh = jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: _named(
+                mesh,
+                spec_for_path("/".join(_k(k) for k in kp), leaf.shape, FAMILY_RULES["recsys"], mesh),
+            ),
+            a_opt,
+        )
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+            params, opt_state = optim.apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss}
+
+        batch = make_train(b)
+        b_sh = jax.tree.map(lambda s: _named(mesh, batch_spec(mesh, b, len(s.shape))), batch)
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}:train",
+            fn=step,
+            inputs=(a_params, a_opt, batch),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, {"loss": _named(mesh, P())}),
+            model_flops=6.0 * b * (2 * emb * 1024),
+        )
+
+    if shape.kind == "serve":
+        b = 64 if smoke else dims["batch"]
+        batch = make_serve(b)
+        b_sh = jax.tree.map(lambda s: _named(mesh, batch_spec(mesh, b, len(s.shape))), batch)
+        return StepBundle(
+            name=f"{arch.name}:{shape.name}:serve",
+            fn=serve_fn,
+            inputs=(a_params, batch),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=_named(mesh, batch_spec(mesh, b, 1)),
+            model_flops=2.0 * b * (2 * emb * 1024),
+        )
+
+    # retrieval: 1 query vs n_candidates
+    c = 4096 if smoke else dims["n_candidates"]
+    batch = make_retr(c)
+
+    def cand_sh(s):
+        # candidate-major arrays shard over "data"; tiny query arrays replicate
+        if s.shape and s.shape[0] == c:
+            return _named(mesh, batch_spec(mesh, c, len(s.shape)))
+        if len(s.shape) == 2 and s.shape[1] == c:
+            return _named(mesh, P(None, batch_spec(mesh, c, 1)[0]))
+        return _named(mesh, P())
+
+    b_sh = jax.tree.map(cand_sh, batch)
+    out_sh = _named(mesh, batch_spec(mesh, c, 1))
+    return StepBundle(
+        name=f"{arch.name}:{shape.name}:retrieval",
+        fn=retr_fn,
+        inputs=(a_params, batch),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=out_sh,
+        model_flops=2.0 * c * emb,
+    )
+
+
+def build_step(
+    arch: Arch, shape: ShapeSpec, mesh: Mesh, smoke: bool = False, opts: Optional[dict] = None
+) -> StepBundle:
+    if arch.family == "lm":
+        return build_lm_step(arch, shape, mesh, smoke, opts=opts)
+    if arch.family == "gnn":
+        return build_gnn_step(arch, shape, mesh, smoke, opts=opts)
+    if arch.family == "recsys":
+        return build_recsys_step(arch, shape, mesh, smoke)
+    raise ValueError(arch.family)
+
+
+def input_specs(arch: Arch, shape: ShapeSpec, mesh: Mesh, smoke: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run contract)."""
+    return build_step(arch, shape, mesh, smoke=smoke).inputs

@@ -1,0 +1,4 @@
+"""Model zoo: composable transformer (LM family), PNA GNN, recsys archs."""
+from . import common, gnn, recsys, transformer
+
+__all__ = ["common", "gnn", "recsys", "transformer"]

@@ -1,0 +1,314 @@
+"""RecSys architectures: two-tower retrieval, SASRec, DIN, MIND.
+
+The shared hot path is the sparse **EmbeddingBag**: JAX has no native
+equivalent, so it is built from ``jnp.take`` + ``jax.ops.segment_sum``
+(the ``repro.kernels.embedding_bag`` Pallas kernel is the TPU-tiled
+version of the same contract).  Tables shard rows over the "model" mesh
+axis; batches shard over ("pod", "data").
+
+These are the paper's most natural backend: a query/user -> results
+service fronted by the STD result cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import truncated_normal
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jnp.ndarray,  # (V, D)
+    indices: jnp.ndarray,  # (B, L) int32, padded with -1
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """Multi-hot bag lookup: gather rows, masked segment-reduce per bag."""
+    mask = (indices >= 0).astype(table.dtype)  # (B, L)
+    safe = jnp.maximum(indices, 0)
+    rows = jnp.take(table, safe, axis=0)  # (B, L, D)
+    rows = rows * mask[..., None]
+    if mode == "sum":
+        return rows.sum(axis=1)
+    if mode == "mean":
+        return rows.sum(axis=1) / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    if mode == "max":
+        rows = jnp.where(mask[..., None] > 0, rows, -jnp.inf)
+        out = rows.max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)
+
+
+def init_mlp(key, dims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": truncated_normal(ks[i], (dims[i], dims[i + 1]), dims[i] ** -0.5, dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    ]
+
+
+def mlp(params: Params, x: jnp.ndarray, final_act: bool = False) -> jnp.ndarray:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"].astype(x.dtype) + layer["b"].astype(x.dtype)
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval [Yi et al., RecSys'19]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    n_users: int = 2_000_000
+    n_items: int = 1_000_000
+    n_user_feats: int = 8  # multi-hot user feature bag length
+    n_item_feats: int = 4
+    embed_dim: int = 256
+    tower_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: Any = jnp.float32
+
+
+def init_two_tower(key, cfg: TwoTowerConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {
+        "user_table": truncated_normal(ks[0], (cfg.n_users, d), 0.05, cfg.dtype),
+        "item_table": truncated_normal(ks[1], (cfg.n_items, d), 0.05, cfg.dtype),
+        "user_tower": init_mlp(ks[2], (d,) + cfg.tower_dims, cfg.dtype),
+        "item_tower": init_mlp(ks[3], (d,) + cfg.tower_dims, cfg.dtype),
+    }
+
+
+def two_tower_user(params: Params, user_feats: jnp.ndarray, cfg: TwoTowerConfig) -> jnp.ndarray:
+    u = embedding_bag(params["user_table"], user_feats, "mean")
+    u = mlp(params["user_tower"], u)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_item(params: Params, item_feats: jnp.ndarray, cfg: TwoTowerConfig) -> jnp.ndarray:
+    i = embedding_bag(params["item_table"], item_feats, "mean")
+    i = mlp(params["item_tower"], i)
+    return i / jnp.maximum(jnp.linalg.norm(i, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: TwoTowerConfig) -> jnp.ndarray:
+    """Sampled softmax with in-batch negatives (the standard recipe)."""
+    u = two_tower_user(params, batch["user_feats"], cfg)  # (B, d)
+    i = two_tower_item(params, batch["item_feats"], cfg)  # (B, d)
+    logits = (u @ i.T).astype(jnp.float32) / 0.05  # (B, B), temperature
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def two_tower_score_candidates(
+    params: Params, user_feats: jnp.ndarray, cand_feats: jnp.ndarray, cfg: TwoTowerConfig
+) -> jnp.ndarray:
+    """retrieval_cand shape: one query against n_candidates items."""
+    u = two_tower_user(params, user_feats, cfg)  # (1, d)
+    c = two_tower_item(params, cand_feats, cfg)  # (C, d)
+    return (u @ c.T)[0]  # (C,)
+
+
+# ---------------------------------------------------------------------------
+# SASRec [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    n_items: int = 2_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    d_ff: int = 200
+    dtype: Any = jnp.float32
+
+
+def init_sasrec(key, cfg: SASRecConfig) -> Params:
+    ks = jax.random.split(key, 2 + 4 * cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for b in range(cfg.n_blocks):
+        k0, k1, k2, k3 = ks[2 + 4 * b : 6 + 4 * b]
+        blocks.append(
+            {
+                "wq": truncated_normal(k0, (d, d), d**-0.5, cfg.dtype),
+                "wk": truncated_normal(k1, (d, d), d**-0.5, cfg.dtype),
+                "wv": truncated_normal(k2, (d, d), d**-0.5, cfg.dtype),
+                "ffn": init_mlp(k3, (d, cfg.d_ff, d), cfg.dtype),
+            }
+        )
+    return {
+        "item_table": truncated_normal(ks[0], (cfg.n_items, d), 0.05, cfg.dtype),
+        "pos_table": truncated_normal(ks[1], (cfg.seq_len, d), 0.05, cfg.dtype),
+        "blocks": blocks,
+    }
+
+
+def sasrec_encode(params: Params, seq: jnp.ndarray, cfg: SASRecConfig) -> jnp.ndarray:
+    """seq (B, L) item history -> (B, d) user state (last position)."""
+    b, l = seq.shape
+    mask = seq >= 0
+    x = jnp.take(params["item_table"], jnp.maximum(seq, 0), axis=0)
+    x = x + params["pos_table"][None, :l]
+    x = x * mask[..., None].astype(x.dtype)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    for blk in params["blocks"]:
+        q = x @ blk["wq"].astype(x.dtype)
+        k = x @ blk["wk"].astype(x.dtype)
+        v = x @ blk["wv"].astype(x.dtype)
+        logits = jnp.einsum("bld,bmd->blm", q, k).astype(jnp.float32)
+        logits /= np.sqrt(cfg.embed_dim)
+        valid = causal[None] & mask[:, None, :]
+        logits = jnp.where(valid, logits, -1e30)
+        att = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        x = x + jnp.einsum("blm,bmd->bld", att, v)
+        x = x + mlp(blk["ffn"], x)
+        x = x * mask[..., None].astype(x.dtype)
+    return x[:, -1]
+
+
+def sasrec_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: SASRecConfig) -> jnp.ndarray:
+    state = sasrec_encode(params, batch["seq"], cfg)  # (B, d)
+    pos = jnp.take(params["item_table"], batch["pos_item"], axis=0)
+    neg = jnp.take(params["item_table"], batch["neg_item"], axis=0)
+    pos_s = (state * pos).sum(-1).astype(jnp.float32)
+    neg_s = (state * neg).sum(-1).astype(jnp.float32)
+    return -(jax.nn.log_sigmoid(pos_s) + jax.nn.log_sigmoid(-neg_s)).mean()
+
+
+def sasrec_score(params: Params, batch: Dict[str, jnp.ndarray], cfg: SASRecConfig) -> jnp.ndarray:
+    state = sasrec_encode(params, batch["seq"], cfg)
+    items = jnp.take(params["item_table"], batch["candidates"], axis=0)  # (B,C,d)
+    return jnp.einsum("bd,bcd->bc", state, items)
+
+
+# ---------------------------------------------------------------------------
+# DIN [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    n_items: int = 5_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_dims: Tuple[int, ...] = (80, 40)
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    dtype: Any = jnp.float32
+
+
+def init_din(key, cfg: DINConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_table": truncated_normal(ks[0], (cfg.n_items, d), 0.05, cfg.dtype),
+        # attention MLP input: [hist, target, hist-target, hist*target]
+        "attn": init_mlp(ks[1], (4 * d,) + cfg.attn_dims + (1,), cfg.dtype),
+        "mlp": init_mlp(ks[2], (2 * d,) + cfg.mlp_dims + (1,), cfg.dtype),
+    }
+
+
+def din_forward(params: Params, batch: Dict[str, jnp.ndarray], cfg: DINConfig) -> jnp.ndarray:
+    """CTR logit per (user history, target item) pair."""
+    hist = jnp.take(params["item_table"], jnp.maximum(batch["hist"], 0), axis=0)  # (B,L,d)
+    mask = (batch["hist"] >= 0).astype(hist.dtype)
+    target = jnp.take(params["item_table"], batch["target"], axis=0)  # (B,d)
+    t = jnp.broadcast_to(target[:, None], hist.shape)
+    feat = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)  # (B,L,4d)
+    scores = mlp(params["attn"], feat)[..., 0].astype(jnp.float32)  # (B,L)
+    scores = jnp.where(mask > 0, scores, -1e30)
+    # DIN uses un-normalized attention weights (sigmoid), paper Sec. 4.3;
+    # we keep softmax + mask for numeric stability (noted in DESIGN.md).
+    w = jax.nn.softmax(scores, axis=-1).astype(hist.dtype)
+    interest = jnp.einsum("bl,bld->bd", w, hist)
+    x = jnp.concatenate([interest, target], axis=-1)
+    return mlp(params["mlp"], x)[..., 0]
+
+
+def din_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: DINConfig) -> jnp.ndarray:
+    logit = din_forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# MIND [arXiv:1904.08030] -- multi-interest capsule routing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    n_items: int = 2_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    dtype: Any = jnp.float32
+
+
+def init_mind(key, cfg: MINDConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_table": truncated_normal(ks[0], (cfg.n_items, d), 0.05, cfg.dtype),
+        "bilinear": truncated_normal(ks[1], (d, d), d**-0.5, cfg.dtype),
+        "label_attn_pow": jnp.asarray(2.0, jnp.float32),
+    }
+
+
+def _squash(v: jnp.ndarray) -> jnp.ndarray:
+    n2 = jnp.sum(jnp.square(v), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: Params, seq: jnp.ndarray, cfg: MINDConfig) -> jnp.ndarray:
+    """Dynamic-routing capsules: history (B, L) -> interests (B, K, d)."""
+    mask = (seq >= 0)
+    e = jnp.take(params["item_table"], jnp.maximum(seq, 0), axis=0)
+    e = e * mask[..., None].astype(e.dtype)
+    u = e @ params["bilinear"].astype(e.dtype)  # (B, L, d) behaviour capsules
+    b, l = seq.shape
+    k = cfg.n_interests
+    logits = jnp.zeros((b, k, l), jnp.float32)  # routing logits
+    interests = jnp.zeros((b, k, cfg.embed_dim), u.dtype)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(logits, axis=1)  # over interests
+        w = w * mask[:, None, :].astype(w.dtype)
+        s = jnp.einsum("bkl,bld->bkd", w.astype(u.dtype), u)
+        interests = _squash(s.astype(jnp.float32)).astype(u.dtype)
+        logits = logits + jnp.einsum("bkd,bld->bkl", interests, u).astype(jnp.float32)
+    return interests
+
+
+def mind_score(params: Params, batch: Dict[str, jnp.ndarray], cfg: MINDConfig) -> jnp.ndarray:
+    """Label-aware attention scoring of candidates against interests."""
+    interests = mind_interests(params, batch["seq"], cfg)  # (B,K,d)
+    items = jnp.take(params["item_table"], batch["candidates"], axis=0)  # (B,C,d)
+    sim = jnp.einsum("bkd,bcd->bkc", interests, items).astype(jnp.float32)
+    p = jax.nn.softmax(params["label_attn_pow"] * sim, axis=1)
+    return jnp.sum(p * sim, axis=1)  # (B, C)
+
+
+def mind_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: MINDConfig) -> jnp.ndarray:
+    scores = mind_score(params, batch, cfg)  # (B, C) candidate 0 is positive
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    return -logp[:, 0].mean()

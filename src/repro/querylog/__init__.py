@@ -1,0 +1,14 @@
+"""Query-log substrate: synthetic generation, real-log parsing, splitting."""
+from .parse import ParsedLog, normalize_query, parse_aol, parse_msn, time_split
+from .synth import SynthConfig, SynthLog, generate
+
+__all__ = [
+    "ParsedLog",
+    "SynthConfig",
+    "SynthLog",
+    "generate",
+    "normalize_query",
+    "parse_aol",
+    "parse_msn",
+    "time_split",
+]

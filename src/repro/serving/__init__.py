@@ -1,0 +1,21 @@
+"""Serving runtime: device-resident STD cache + front-end broker."""
+from .broker import Backend, Broker, BrokerStats, HedgePolicy
+from .device_cache import (
+    DYNAMIC,
+    DeviceCacheConfig,
+    STDDeviceCache,
+    pack_hashes,
+    splitmix64,
+)
+
+__all__ = [
+    "Backend",
+    "Broker",
+    "BrokerStats",
+    "DYNAMIC",
+    "DeviceCacheConfig",
+    "HedgePolicy",
+    "STDDeviceCache",
+    "pack_hashes",
+    "splitmix64",
+]

@@ -1,0 +1,197 @@
+"""Front-end broker (paper Fig. 2): cache -> backend dispatch -> reply.
+
+The broker owns the device-resident STD cache and a set of backend
+executors (model shards).  Per batch:
+
+1. hash + topic-route every query,
+2. parallel cache probe; hits are answered immediately,
+3. misses run through the admission policy and are dispatched to a
+   backend in micro-batches with **hedged requests** (a straggling
+   micro-batch is re-dispatched to a backup executor; first result wins),
+4. results are committed to the cache (exact LRU order) and returned.
+
+Fault tolerance: `checkpoint` / `restore` snapshot the full cache state
+atomically (repro.train.checkpoint); a broker can restart mid-stream and
+continue with its hit rate intact -- exercised by tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train import checkpoint as ckpt_lib
+from .device_cache import DYNAMIC, DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
+
+
+@dataclasses.dataclass
+class BrokerStats:
+    requests: int = 0
+    hits: int = 0
+    static_hits: int = 0
+    topic_hits: int = 0
+    backend_calls: int = 0
+    hedged_calls: int = 0
+    admitted: int = 0
+    #: duplicate in-batch misses answered from a single backend call
+    coalesced: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+
+Backend = Callable[[np.ndarray], np.ndarray]  # query ids -> values (B, V)
+
+
+@dataclasses.dataclass
+class HedgePolicy:
+    """Straggler mitigation: re-dispatch a micro-batch that exceeds
+    ``deadline_s`` to the next executor; first completed result wins."""
+
+    deadline_s: float = 0.5
+    max_hedges: int = 1
+
+
+class Broker:
+    def __init__(
+        self,
+        cache: STDDeviceCache,
+        backends: Sequence[Backend],
+        topic_of: Callable[[np.ndarray], np.ndarray],
+        admission: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        hedge: Optional[HedgePolicy] = None,
+        microbatch: int = 256,
+        coalesce: bool = True,
+    ):
+        self.cache = cache
+        self.state = dict(cache.init_state)
+        self.backends = list(backends)
+        self.topic_of = topic_of
+        self.admission = admission
+        self.hedge = hedge
+        self.microbatch = microbatch
+        #: in-flight request coalescing: duplicate keys inside one batch
+        #: are dispatched to the backend only once (the duplicates are
+        #: answered from the first result)
+        self.coalesce = coalesce
+        self.stats = BrokerStats()
+        self._probe = jax.jit(cache.probe)
+        self._commit = jax.jit(cache.commit)
+        self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
+
+    # -- serving -------------------------------------------------------------
+
+    def serve(self, query_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Serve one batch of query ids -> (values (B, V), hit mask).
+
+        Probes are atomic per batch: a duplicate key inside one batch is
+        probed before its first occurrence commits, so it counts as a miss
+        (both go to the backend).  Sequential (batch=1) serving matches the
+        trace simulator request-for-request; production deployments would
+        add in-flight request coalescing on top.
+        """
+        b = len(query_ids)
+        topics = self.topic_of(query_ids)
+        parts = self.cache.parts_for(topics)
+        h64 = splitmix64(query_ids)
+        h_hi, h_lo = pack_hashes(h64)
+        hit, layer, value = self._probe(
+            self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts)
+        )
+        hit = np.asarray(hit)
+        layer = np.asarray(layer)
+        values = np.array(value)  # writable copy
+
+        miss_idx = np.flatnonzero(~hit)
+        if len(miss_idx):
+            if self.coalesce:
+                uniq, inverse = np.unique(query_ids[miss_idx], return_inverse=True)
+                self.stats.coalesced += len(miss_idx) - len(uniq)
+                miss_values = self._dispatch(uniq)[inverse]
+            else:
+                miss_values = self._dispatch(query_ids[miss_idx])
+            values[miss_idx] = miss_values
+            admit = (
+                self.admission(query_ids[miss_idx])
+                if self.admission is not None
+                else np.ones(len(miss_idx), bool)
+            )
+            self.stats.admitted += int(admit.sum())
+            self.state = self._commit(
+                self.state,
+                jnp.asarray(h_hi[miss_idx]),
+                jnp.asarray(h_lo[miss_idx]),
+                jnp.asarray(parts[miss_idx]),
+                jnp.asarray(miss_values),
+                jnp.asarray(admit),
+            )
+        # hits refresh recency too (exact LRU semantics)
+        hit_idx = np.flatnonzero(hit & (layer == 1))
+        if len(hit_idx):
+            self.state = self._commit(
+                self.state,
+                jnp.asarray(h_hi[hit_idx]),
+                jnp.asarray(h_lo[hit_idx]),
+                jnp.asarray(parts[hit_idx]),
+                jnp.asarray(values[hit_idx]),
+                jnp.zeros(len(hit_idx), bool),  # refresh only, never insert
+            )
+        self.stats.requests += b
+        self.stats.hits += int(hit.sum())
+        self.stats.static_hits += int((layer == 0).sum())
+        self.stats.topic_hits += int(((layer == 1) & hit).sum())
+        return values, hit
+
+    def _dispatch(self, miss_ids: np.ndarray) -> np.ndarray:
+        """Micro-batched backend dispatch with hedging."""
+        out = []
+        for lo in range(0, len(miss_ids), self.microbatch):
+            chunk = miss_ids[lo : lo + self.microbatch]
+            out.append(self._call_hedged(chunk))
+        return np.concatenate(out, axis=0)
+
+    def _call_hedged(self, chunk: np.ndarray) -> np.ndarray:
+        self.stats.backend_calls += 1
+        if self.hedge is None or len(self.backends) == 1:
+            return self.backends[0](chunk)
+        fut = self._pool.submit(self.backends[0], chunk)
+        done, _ = wait([fut], timeout=self.hedge.deadline_s, return_when=FIRST_COMPLETED)
+        if done:
+            return fut.result()
+        # straggler: hedge to backups, first result wins
+        futs = [fut]
+        for backup in self.backends[1 : 1 + self.hedge.max_hedges]:
+            self.stats.hedged_calls += 1
+            futs.append(self._pool.submit(backup, chunk))
+        while True:
+            done, pending = wait(futs, return_when=FIRST_COMPLETED)
+            for f in done:
+                if f.exception() is None:
+                    return f.result()
+                futs = list(pending)
+            if not futs:
+                raise RuntimeError("all backends failed")
+
+    # -- fault tolerance -------------------------------------------------------
+
+    def save(self, ckpt_dir: str, step: int) -> str:
+        tree = {"cache": self.state, "stats": dataclasses.asdict(self.stats)}
+        tree["stats"] = {k: np.asarray(v) for k, v in tree["stats"].items()}
+        return ckpt_lib.save(ckpt_dir, step, tree)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        tree_like = {
+            "cache": self.state,
+            "stats": {k: np.asarray(v) for k, v in dataclasses.asdict(self.stats).items()},
+        }
+        tree, got = ckpt_lib.restore(ckpt_dir, tree_like, step)
+        self.state = jax.tree.map(jnp.asarray, tree["cache"])
+        for k, v in tree["stats"].items():
+            setattr(self.stats, k, int(v))
+        return got

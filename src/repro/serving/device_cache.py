@@ -1,0 +1,277 @@
+"""Device-resident STD cache: the paper's data structure, TPU-native.
+
+The CPU hash-table LRU of the paper becomes four dense arrays -- a W-way
+set-associative cache whose *address space is partitioned by topic*:
+
+    key_hi/key_lo : (S, W) uint32   packed 64-bit query hashes (0 = empty)
+    stamp         : (S, W) int32    recency stamps (W-way LRU)
+    value         : (S, W, V) int32 cached result payload (doc ids)
+
+Topic tau owns the contiguous set range [offset[tau], offset[tau]+sets[tau])
+sized by the paper's proportional allocation; the dynamic cache is
+partition k; the static cache is a sorted hash array probed by vectorized
+lexicographic binary search (read-only, refreshed offline).
+
+Probes are fully parallel (gather + compare); updates serialize within a
+batch via `lax.fori_loop` to preserve exact LRU semantics under set
+conflicts (the Pallas kernel in repro/kernels mirrors the probe path).
+Because partitions are independent, sharding the set axis across devices
+creates zero cross-device traffic beyond routing -- the paper's own design
+choice is what makes the cache scale out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.alloc import proportional_allocation
+
+DYNAMIC = -1  # callers pass topic=-1 for no-topic queries
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Deterministic 64-bit mix of query ids (host side, numpy uint64)."""
+    z = (np.asarray(x, dtype=np.uint64) + np.uint64(0x9E3779B97F4A7C15))
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    z[z == 0] = 1  # 0 is the empty-slot sentinel
+    return z
+
+
+def pack_hashes(h64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    return (h64 >> np.uint64(32)).astype(np.uint32), (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCacheConfig:
+    total_entries: int
+    ways: int = 8
+    value_dim: int = 8
+    #: per-topic entry counts (proportional allocation); dynamic entries
+    #: are whatever remains
+    topic_entries: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    dynamic_entries: int = 0
+    static_entries: int = 0
+
+    @classmethod
+    def build(
+        cls,
+        n: int,
+        f_s: float,
+        f_t: float,
+        topic_distinct: Mapping[int, int],
+        ways: int = 8,
+        value_dim: int = 8,
+    ) -> "DeviceCacheConfig":
+        n_s = int(round(f_s * n))
+        n_t = int(round(f_t * n))
+        n_d = n - n_s - n_t
+        sizes = proportional_allocation(n_t, topic_distinct, exact=True)
+        return cls(
+            total_entries=n,
+            ways=ways,
+            value_dim=value_dim,
+            topic_entries=sizes,
+            dynamic_entries=n_d,
+            static_entries=n_s,
+        )
+
+
+class STDDeviceCache:
+    """Functional cache: state is a pytree of arrays, ops are jittable."""
+
+    def __init__(
+        self,
+        cfg: DeviceCacheConfig,
+        static_hashes: Optional[np.ndarray] = None,
+        static_values: Optional[np.ndarray] = None,
+    ):
+        self.cfg = cfg
+        w = cfg.ways
+        topics = sorted(cfg.topic_entries)
+        self.topic_ids = topics
+        self.k = len(topics)
+        sets = []
+        for t in topics:
+            sets.append(max(cfg.topic_entries[t] // w, 1) if cfg.topic_entries[t] > 0 else 0)
+        sets.append(max(cfg.dynamic_entries // w, 1) if cfg.dynamic_entries > 0 else 0)
+        self.part_sets = np.asarray(sets, dtype=np.int32)
+        self.part_offset = np.concatenate([[0], np.cumsum(self.part_sets)]).astype(np.int32)
+        self.n_sets = int(self.part_offset[-1])
+        #: topic id -> partition index (dynamic = k)
+        self.part_of_topic = {t: i for i, t in enumerate(topics)}
+
+        if static_hashes is not None and len(static_hashes):
+            order = np.argsort(static_hashes.astype(np.uint64))
+            static = static_hashes.astype(np.uint64)[order]
+            if static_values is None:
+                static_values = np.zeros((len(static), cfg.value_dim), np.int32)
+            s_vals = np.asarray(static_values, np.int32)[order]
+        else:
+            static = np.zeros(0, np.uint64)
+            s_vals = np.zeros((0, cfg.value_dim), np.int32)
+        s_hi, s_lo = pack_hashes(static)
+        self.init_state = {
+            "key_hi": jnp.zeros((max(self.n_sets, 1), w), jnp.uint32),
+            "key_lo": jnp.zeros((max(self.n_sets, 1), w), jnp.uint32),
+            "stamp": jnp.zeros((max(self.n_sets, 1), w), jnp.int32),
+            "value": jnp.zeros((max(self.n_sets, 1), w, cfg.value_dim), jnp.int32),
+            "clock": jnp.zeros((), jnp.int32),
+            "static_hi": jnp.asarray(s_hi),
+            "static_lo": jnp.asarray(s_lo),
+            "static_value": jnp.asarray(s_vals),
+        }
+        self._part_sets_dev = jnp.asarray(self.part_sets)
+        self._part_offset_dev = jnp.asarray(self.part_offset[:-1])
+
+    # -- routing ----------------------------------------------------------
+
+    def parts_for(self, topics: np.ndarray) -> np.ndarray:
+        """topic ids (host) -> partition indices (dynamic cache = k)."""
+        out = np.full(len(topics), self.k, dtype=np.int32)
+        for t, i in self.part_of_topic.items():
+            out[topics == t] = i
+        # topics whose partition got zero sets fall through to dynamic
+        zero = self.part_sets[out] == 0
+        out[zero] = self.k
+        return out
+
+    # -- jittable ops -------------------------------------------------------
+
+    def _set_index(self, h_lo: jnp.ndarray, part: jnp.ndarray) -> jnp.ndarray:
+        n_sets = self._part_sets_dev[part]
+        off = self._part_offset_dev[part]
+        return off + (h_lo % jnp.maximum(n_sets.astype(jnp.uint32), 1).astype(jnp.uint32)).astype(jnp.int32)
+
+    def static_lookup(self, state, h_hi: jnp.ndarray, h_lo: jnp.ndarray):
+        """Vectorized lexicographic binary search over the sorted static set.
+
+        Returns (hit mask, index of the matching entry)."""
+        s_hi, s_lo = state["static_hi"], state["static_lo"]
+        n = s_hi.shape[0]
+        if n == 0:
+            z = jnp.zeros(h_hi.shape, jnp.int32)
+            return jnp.zeros(h_hi.shape, bool), z
+        steps = max(int(np.ceil(np.log2(n + 1))), 1)
+        lo = jnp.zeros(h_hi.shape, jnp.int32)
+        hi = jnp.full(h_hi.shape, n, jnp.int32)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = (lo + hi) // 2
+            m_hi = s_hi[jnp.minimum(mid, n - 1)]
+            m_lo = s_lo[jnp.minimum(mid, n - 1)]
+            less = (m_hi < h_hi) | ((m_hi == h_hi) & (m_lo < h_lo))
+            lo = jnp.where(less, mid + 1, lo)
+            hi = jnp.where(less, hi, mid)
+            return lo, hi
+
+        lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        idx = jnp.minimum(lo, n - 1)
+        return (s_hi[idx] == h_hi) & (s_lo[idx] == h_lo), idx
+
+    def probe(self, state, h_hi, h_lo, part):
+        """Parallel probe: returns (hit, layer, value).
+
+        layer: 0 = static, 1 = set-associative partition, -1 = miss.
+        """
+        static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
+        set_idx = self._set_index(h_lo, part)
+        keys_hi = state["key_hi"][set_idx]  # (B, W)
+        keys_lo = state["key_lo"][set_idx]
+        match = (keys_hi == h_hi[:, None]) & (keys_lo == h_lo[:, None]) & (keys_hi != 0)
+        way_hit = match.any(axis=1)
+        way = jnp.argmax(match, axis=1)
+        value = state["value"][set_idx, way]
+        if state["static_value"].shape[0]:
+            value = jnp.where(
+                static_hit[:, None], state["static_value"][static_idx], value
+            )
+        hit = static_hit | way_hit
+        layer = jnp.where(static_hit, 0, jnp.where(way_hit, 1, -1))
+        return hit, layer, value
+
+    def commit(self, state, h_hi, h_lo, part, values, admit):
+        """Serialized batch update preserving exact W-way LRU order.
+
+        Hits refresh stamps; admitted misses evict the LRU way of their
+        set.  Items are processed in request order (fori_loop), so two
+        same-set requests in one batch behave exactly like back-to-back
+        requests in the sequential simulator.
+        """
+        b = h_hi.shape[0]
+        static_hit, _ = self.static_lookup(state, h_hi, h_lo)
+        set_idx = self._set_index(h_lo, part)
+
+        def body(i, st):
+            key_hi, key_lo, stamp, value, clock = st
+            s = set_idx[i]
+            row_hi = key_hi[s]
+            row_lo = key_lo[s]
+            match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0)
+            is_hit = match.any()
+            way_h = jnp.argmax(match, axis=0)
+            way_e = jnp.argmin(stamp[s], axis=0)
+            do_write = (~static_hit[i]) & (is_hit | admit[i])
+            way = jnp.where(is_hit, way_h, way_e)
+            new_stamp = clock + 1 + i
+            key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
+            key_lo = key_lo.at[s, way].set(jnp.where(do_write, h_lo[i], key_lo[s, way]))
+            stamp = stamp.at[s, way].set(jnp.where(do_write, new_stamp, stamp[s, way]))
+            value = value.at[s, way].set(
+                jnp.where(do_write & ~is_hit, values[i], value[s, way])
+            )
+            return key_hi, key_lo, stamp, value, clock
+
+        key_hi, key_lo, stamp, value, clock = jax.lax.fori_loop(
+            0,
+            b,
+            body,
+            (state["key_hi"], state["key_lo"], state["stamp"], state["value"], state["clock"]),
+        )
+        out = dict(state)
+        out.update(
+            key_hi=key_hi, key_lo=key_lo, stamp=stamp, value=value, clock=clock + b
+        )
+        return out
+
+    # -- elastic re-partitioning -------------------------------------------
+
+    def repartition(self, state, new_cfg: DeviceCacheConfig) -> Tuple["STDDeviceCache", Any]:
+        """Rebuild the partition table (e.g., fresh topic popularity) and
+        migrate resident entries host-side, preserving recency order."""
+        new_cache = STDDeviceCache(new_cfg, static_hashes=None)
+        new_state = dict(new_cache.init_state)
+        new_state["static_hi"] = state["static_hi"]
+        new_state["static_lo"] = state["static_lo"]
+        key_hi = np.asarray(state["key_hi"])
+        key_lo = np.asarray(state["key_lo"])
+        stamp = np.asarray(state["stamp"])
+        value = np.asarray(state["value"])
+        # partition of each old set
+        old_part = np.searchsorted(self.part_offset[1:], np.arange(self.n_sets), side="right")
+        live = key_hi != 0
+        order = np.argsort(stamp[live])  # oldest first so newest survive
+        sets_l, ways_l = np.nonzero(live)
+        sets_l, ways_l = sets_l[order], ways_l[order]
+        h64 = (key_hi[sets_l, ways_l].astype(np.uint64) << np.uint64(32)) | key_lo[
+            sets_l, ways_l
+        ].astype(np.uint64)
+        parts = old_part[sets_l].astype(np.int32)
+        topics = np.full(len(parts), DYNAMIC, dtype=np.int64)
+        for t, i in self.part_of_topic.items():
+            topics[parts == i] = t
+        new_parts = new_cache.parts_for(topics)
+        hi = jnp.asarray((h64 >> np.uint64(32)).astype(np.uint32))
+        lo = jnp.asarray((h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        vals = jnp.asarray(value[sets_l, ways_l])
+        admit = jnp.ones(len(parts), bool)
+        new_state = new_cache.commit(
+            new_state, hi, lo, jnp.asarray(new_parts), vals, admit
+        )
+        return new_cache, new_state

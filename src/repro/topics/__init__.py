@@ -1,0 +1,18 @@
+"""Topic substrate: LDA training/inference + query-topic assignment."""
+from .assign import TopicAssignment, assign_topics
+from .lda import BagOfWords, LDAModel, em_train, gibbs_train, infer_argmax, infer_scores
+from .pipeline import TopicPipelineResult, oracle_pipeline, run_pipeline
+
+__all__ = [
+    "BagOfWords",
+    "LDAModel",
+    "TopicAssignment",
+    "TopicPipelineResult",
+    "assign_topics",
+    "em_train",
+    "gibbs_train",
+    "infer_argmax",
+    "infer_scores",
+    "oracle_pipeline",
+    "run_pipeline",
+]

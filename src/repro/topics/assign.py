@@ -1,0 +1,62 @@
+"""Query -> topic assignment (paper Sec. 3.3, "Query Topic Assignment").
+
+A query may appear in several query-document pairs (several clicked
+results), possibly classified into different topics.  The paper adopts a
+voting scheme: the query receives the topic of the query-document pair
+with the most clicks.  Assignments below a classification confidence are
+dropped (the query competes for the dynamic cache instead), and only
+queries *seen in the training stream* can carry a topic (unseen queries
+have no clicked-document proxy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.policies import NO_TOPIC
+from .lda import BagOfWords, LDAModel, infer_argmax
+
+
+@dataclass
+class TopicAssignment:
+    #: (n_queries,) predicted topic id or NO_TOPIC
+    key_topic: np.ndarray
+    #: (n_queries,) confidence of the assignment (0 where unassigned)
+    confidence: np.ndarray
+    #: fraction of *requests* in a stream carrying a topic (diagnostics)
+    coverage: float = 0.0
+
+
+def assign_topics(
+    n_queries: int,
+    query_docs: Mapping[int, Sequence[Tuple[np.ndarray, int]]],
+    model: LDAModel,
+    train_seen: np.ndarray,
+    confidence: float = 0.0,
+) -> TopicAssignment:
+    """Assign one topic per query by click-weighted voting.
+
+    ``query_docs`` maps query id -> [(doc tokens, click count), ...].
+    ``train_seen`` is a boolean mask: only training-period queries are
+    classifiable (paper: "the LDA classifier is able to classify only
+    queries already seen in the training query log").
+    """
+    qids: List[int] = []
+    docs: List[np.ndarray] = []
+    for qid, pairs in query_docs.items():
+        if not train_seen[qid] or not pairs:
+            continue
+        # voting: the most-clicked document represents the query
+        best = max(pairs, key=lambda p: p[1])
+        qids.append(qid)
+        docs.append(best[0])
+    key_topic = np.full(n_queries, NO_TOPIC, dtype=np.int64)
+    conf_arr = np.zeros(n_queries, dtype=np.float32)
+    if qids:
+        bow = BagOfWords.from_docs(docs, model.n_words)
+        top, conf = infer_argmax(model, bow, confidence=confidence)
+        key_topic[np.asarray(qids)] = top
+        conf_arr[np.asarray(qids)] = conf
+    return TopicAssignment(key_topic=key_topic, confidence=conf_arr)

@@ -1,0 +1,170 @@
+"""AdamW optimizer implemented directly in JAX (no optax dependency).
+
+Optimizer state is kept in f32 regardless of parameter dtype (mixed
+precision training: bf16 params / f32 moments), with optional global-norm
+clipping and decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import global_norm
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Params  # first moment (f32)
+    nu: Params  # second moment (f32)
+
+
+def init_opt_state(params: Params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, optional momentum-free) for 100B+ models:
+# AdamW's two f32 moments are 8 bytes/param -- arctic-480b's optimizer state
+# alone would exceed a 256-chip pod's HBM.  Factored row/col statistics cut
+# that to ~0 (Shazeer & Stern, arXiv:1804.04235), the standard TPU recipe.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8  # beta2_t = 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+
+
+class FactoredState(NamedTuple):
+    step: jnp.ndarray
+    #: per-leaf: dict with "row"/"col" (factored) or "full" (vectors)
+    stats: Params
+
+
+def _factored_shape(shape) -> Tuple[Tuple[int, ...], bool]:
+    """View used for row/col factoring.
+
+    Adafactor factors the last two axes.  A tiny penultimate axis (e.g. the
+    gate/up axis of the fused MoE wi: (L, E, D, 2, F)) would make the "col"
+    statistic nearly as large as the parameter itself -- merge such axes
+    into their neighbour so the factored pair is (D*2, F).
+    """
+    shape = tuple(shape)
+    if len(shape) >= 3 and shape[-2] < 8:
+        shape = shape[:-3] + (shape[-3] * shape[-2], shape[-1])
+    return shape, len(shape) >= 2
+
+
+def init_adafactor_state(params: Params) -> FactoredState:
+    def init_leaf(p):
+        view, factored = _factored_shape(p.shape)
+        if factored:
+            return {
+                "row": jnp.zeros(view[:-1], jnp.float32),
+                "col": jnp.zeros(view[:-2] + view[-1:], jnp.float32),
+            }
+        return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+    return FactoredState(
+        step=jnp.zeros((), jnp.int32),
+        stats=jax.tree.map(init_leaf, params, is_leaf=lambda x: hasattr(x, "ndim")),
+    )
+
+
+def adafactor_updates(
+    params: Params, grads: Params, state: FactoredState, cfg: AdafactorConfig
+) -> Tuple[Params, FactoredState]:
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(cfg.warmup_steps, 1))
+    lr = cfg.lr * warm
+
+    def upd(p, g, s):
+        gf = g.astype(jnp.float32)
+        view, factored = _factored_shape(p.shape)
+        g2 = gf * gf + cfg.eps
+        if factored:
+            g2v = g2.reshape(view)
+            row = beta2 * s["row"] + (1 - beta2) * g2v.mean(axis=-1)
+            col = beta2 * s["col"] + (1 - beta2) * g2v.mean(axis=-2)
+            denom = row[..., None] * col[..., None, :] / jnp.maximum(
+                row.mean(axis=-1)[..., None, None], 1e-30
+            )
+            denom = denom.reshape(p.shape)
+            new_s = {"row": row, "col": col}
+        else:
+            denom = beta2 * s["full"] + (1 - beta2) * g2
+            new_s = {"full": denom}
+        u = gf * jax.lax.rsqrt(jnp.maximum(denom, 1e-30))
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = tdef.flatten_up_to(state.stats)
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_s = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, FactoredState(step=step, stats=new_s)
+
+
+def apply_updates(
+    params: Params, grads: Params, state: OptState, cfg: AdamWConfig
+) -> Tuple[Params, OptState]:
+    step = state.step + 1
+    if cfg.clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    lr = _schedule(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,137 @@
+"""Property tests (hypothesis): system invariants of the caching core.
+
+1. The vectorized reuse-distance engine == the exact sequential simulator,
+   for every strategy, with and without admission policies.
+2. LRU stack inclusion: hits monotone non-decreasing in capacity.
+3. Bélády dominates every online policy.
+4. STD with f_t=0 degenerates to SDC; SDC with f_s=0 to LRU.
+5. Offline reuse distances == brute-force distinct counts.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NO_TOPIC,
+    VecLog,
+    VecStats,
+    belady_hits,
+    build_lru,
+    build_std,
+    hit_rate,
+    make_layout,
+    simulate,
+)
+from repro.core.rd_offline import reuse_distances_offline
+from repro.core.stats import TrainStats
+
+
+@st.composite
+def stream_case(draw):
+    n_queries = draw(st.integers(8, 60))
+    n = draw(st.integers(20, 300))
+    n_topics = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_queries, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=n_queries).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(n_queries, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    return keys, topic, n_train, seed
+
+
+def _both_sims(keys, topic, n_train, strategy, n_entries, fs, ft, fts, admitted=None):
+    nq = len(topic)
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    stats_vec = VecStats.from_log(log)
+    layout = make_layout(
+        strategy, n_entries, stats_vec, f_s=fs, f_t=ft, f_ts=fts, admitted=admitted
+    )
+    fast = hit_rate(log, layout)
+    topic_map = {int(k): int(topic[k]) for k in range(nq) if topic[k] != NO_TOPIC}
+    stats_ex = TrainStats.from_stream(keys[:n_train].tolist(), topic_map)
+    if strategy == "LRU":
+        cache = build_lru(n_entries)
+    else:
+        cache = build_std(strategy, n_entries, stats_ex, f_s=fs, f_t=ft, f_ts=fts)
+    admission = None
+    if admitted is not None:
+        class _A:
+            def admits(self, k):
+                return bool(admitted[k])
+        admission = _A()
+    exact = simulate(
+        cache, keys[n_train:].tolist(), warm_keys=keys[:n_train].tolist(),
+        admission=admission,
+    ).hit_rate
+    return exact, fast
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    case=stream_case(),
+    strategy=st.sampled_from(
+        ["LRU", "SDC", "STDf_LRU", "STDv_LRU", "STDv_SDC_C1", "STDv_SDC_C2", "Tv_SDC"]
+    ),
+    n_entries=st.integers(2, 48),
+    fs=st.sampled_from([0.0, 0.2, 0.5, 0.9]),
+    ftf=st.sampled_from([0.3, 0.8]),
+    fts=st.sampled_from([0.2, 0.7]),
+)
+def test_exact_equals_vectorized(case, strategy, n_entries, fs, ftf, fts):
+    keys, topic, n_train, _ = case
+    ft = round(ftf * (1 - fs), 4)
+    exact, fast = _both_sims(keys, topic, n_train, strategy, n_entries, fs, ft, fts)
+    assert abs(exact - fast) < 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=stream_case(), n_entries=st.integers(2, 48))
+def test_exact_equals_vectorized_with_admission(case, n_entries):
+    keys, topic, n_train, seed = case
+    rng = np.random.default_rng(seed + 1)
+    admitted = rng.random(len(topic)) > 0.4
+    exact, fast = _both_sims(
+        keys, topic, n_train, "STDv_LRU", n_entries, 0.3, 0.4, None, admitted=admitted
+    )
+    assert abs(exact - fast) < 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=stream_case())
+def test_lru_inclusion_monotone(case):
+    keys, _, n_train, _ = case
+    prev_hits = -1
+    for cap in (1, 2, 4, 8, 16, 32):
+        cache = build_lru(cap)
+        res = simulate(cache, keys[n_train:].tolist(), warm_keys=keys[:n_train].tolist())
+        assert res.hits >= prev_hits
+        prev_hits = res.hits
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=stream_case(), cap=st.integers(1, 32))
+def test_belady_dominates(case, cap):
+    keys, topic, n_train, _ = case
+    opt = belady_hits(keys, cap, count_from=n_train)
+    for strategy, fs, ft in [("LRU", 0, 0), ("SDC", 0.5, 0), ("STDv_LRU", 0.3, 0.4)]:
+        exact, _ = _both_sims(keys, topic, n_train, strategy, cap, fs, ft, None)
+        assert exact * (len(keys) - n_train) <= opt + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(10, 200))
+def test_reuse_distance_brute_force(seed, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, max(2, n // 4), size=n)
+    last = {}
+    prev = np.full(n, -1, np.int64)
+    for i, k in enumerate(keys):
+        prev[i] = last.get(k, -1)
+        last[k] = i
+    rd = reuse_distances_offline(prev)
+    for i in range(n):
+        j = prev[i]
+        expect = -1 if j < 0 else len(set(keys[j + 1 : i].tolist()))
+        assert rd[i] == expect

@@ -1,0 +1,149 @@
+"""Unit tests: exact cache policies, builders, allocation, admission."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    NO_TOPIC,
+    LRUCache,
+    NullCache,
+    PollutingFilter,
+    SDCCache,
+    STDCache,
+    SingletonOracle,
+    StaticCache,
+    build_std,
+    proportional_allocation,
+    split_sizes,
+    uniform_allocation,
+)
+from repro.core.stats import TrainStats
+
+
+class TestLRU:
+    def test_basic_eviction(self):
+        c = LRUCache(2)
+        assert not c.request("a")
+        assert not c.request("b")
+        assert not c.request("c")  # evicts a
+        assert not c.request("a")  # miss: was evicted
+        assert c.request("c")
+
+    def test_recency_update(self):
+        c = LRUCache(2)
+        c.request("a")
+        c.request("b")
+        assert c.request("a")  # refresh a -> b is now LRU
+        c.request("c")  # evicts b
+        assert c.request("a")
+        assert not c.request("b")
+
+    def test_capacity_zero(self):
+        c = NullCache()
+        assert not c.request("a")
+        assert not c.request("a")
+
+    def test_paper_intro_example(self):
+        # stream abcadeafg with LRU(2): all misses (paper Sec. 1)
+        c = LRUCache(2)
+        hits = sum(c.request(x) for x in "abcadeafg")
+        assert hits == 0
+
+    def test_paper_intro_example_with_topic(self):
+        # 1 entry for topic of 'a' + 1 LRU entry: a hits twice (2/9 = 22.2%)
+        std = STDCache((), {0: LRUCache(1)}, 1, lambda k: 0 if k == "a" else NO_TOPIC)
+        hits = sum(std.request(x) for x in "abcadeafg")
+        assert hits == 2
+
+
+class TestSDC:
+    def test_static_always_hits(self):
+        c = SDCCache(["x"], 1)
+        assert c.request("x")
+        c.request("a")
+        c.request("b")  # evicts a from dynamic
+        assert c.request("x")
+
+    def test_no_admission(self):
+        c = SDCCache([], 2)
+        assert not c.request("a", admit=False)
+        assert not c.request("a")  # still a miss: was never admitted
+        assert c.request("a")
+
+
+class TestAllocation:
+    def test_paper_worked_example(self):
+        # |T| = 5, 6 weather + 3 education -> 3 and 2 (paper Sec. 3.3)
+        sizes = proportional_allocation(5, {0: 6, 1: 3})
+        assert sizes == {0: 3, 1: 2}
+
+    def test_exact_mode_sums(self):
+        sizes = proportional_allocation(100, {i: (i + 1) * 7 for i in range(9)}, exact=True)
+        assert sum(sizes.values()) == 100
+
+    def test_uniform(self):
+        assert uniform_allocation(10, [0, 1, 2]) == {0: 3, 1: 3, 2: 3}
+
+    def test_zero_entries(self):
+        assert proportional_allocation(0, {0: 5}) == {0: 0}
+
+    def test_split_sizes(self):
+        s, t, d = split_sizes(100, 0.5, 0.4)
+        assert (s, t, d) == (50, 40, 10)
+        s, t, d = split_sizes(10, 0.99, 0.5)
+        assert s + t + d == 10 and d >= 0
+
+
+class TestSTD:
+    def _stats(self):
+        train = [0, 0, 0, 1, 1, 2, 3, 4, 5, 5]
+        topics = {0: 0, 1: 0, 2: 1, 5: 1}
+        return TrainStats.from_stream(train, topics)
+
+    def test_alg1_routing(self):
+        stats = self._stats()
+        cache = build_std("STDv_LRU", 8, stats, f_s=0.25, f_t=0.5)
+        # key 0 is most frequent -> static
+        assert cache.request_ex(0).layer == "static"
+        # key 2 has topic 1 -> topic section
+        r = cache.request_ex(2)
+        assert r.layer == "topic" and r.topic == 1
+        # key 4 has no topic -> dynamic
+        assert cache.request_ex(4).layer == "dynamic"
+
+    def test_ft_zero_equals_sdc(self):
+        stats = self._stats()
+        rng = np.random.default_rng(0)
+        stream = rng.integers(0, 6, size=500).tolist()
+        std = build_std("STDv_LRU", 6, stats, f_s=0.5, f_t=0.0)
+        sdc = build_std("SDC", 6, stats, f_s=0.5)
+        h1 = sum(std.request(k) for k in stream)
+        h2 = sum(sdc.request(k) for k in stream)
+        assert h1 == h2
+
+    def test_strategies_build(self):
+        stats = self._stats()
+        for strat in ("SDC", "STDf_LRU", "STDv_LRU", "STDv_SDC_C1", "STDv_SDC_C2", "Tv_SDC"):
+            cache = build_std(strat, 8, stats, f_s=0.25, f_t=0.5, f_ts=0.5)
+            for k in [0, 1, 2, 3, 4, 5, 0, 2]:
+                cache.request(k)
+
+    def test_c1_static_hosts_only_notopic(self):
+        stats = self._stats()
+        c1 = build_std("STDv_SDC_C1", 8, stats, f_s=0.25, f_t=0.5, f_ts=0.5)
+        # global static of C1 holds top *no-topic* queries (3, 4 freq 1 each)
+        for key in c1.static._keys:
+            assert stats.topic(key) == NO_TOPIC
+
+
+class TestAdmission:
+    def test_polluting_filter(self):
+        f = PollutingFilter({"a": 5, "b": 1}, {"a": 2, "b": 2, "c": 9}, {"a": 5, "b": 5, "c": 5})
+        assert f.admits("a")
+        assert not f.admits("b")  # too rare
+        assert not f.admits("c")  # unseen + too many terms
+
+    def test_singleton_oracle(self):
+        o = SingletonOracle.from_stream(["a", "b", "a", "c"])
+        assert o.admits("a")
+        assert not o.admits("b")
+        assert not o.admits("c")

@@ -1,0 +1,210 @@
+"""Device-resident STD cache: exactness, broker, fault tolerance."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LRUCache
+from repro.serving import (
+    Broker,
+    DeviceCacheConfig,
+    HedgePolicy,
+    STDDeviceCache,
+    pack_hashes,
+    splitmix64,
+)
+
+
+def _drive(cache, state, keys, probe, commit):
+    hits = []
+    for k in keys:
+        h = splitmix64(np.array([k]))
+        hi, lo = pack_hashes(h)
+        part = np.zeros(1, np.int32)
+        hit, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part))
+        state = commit(
+            state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part),
+            jnp.zeros((1, cache.cfg.value_dim), jnp.int32), jnp.ones(1, bool),
+        )
+        hits.append(bool(hit[0]))
+    return hits, state
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_single_set_equals_exact_lru(seed, ways):
+    """W ways in one set == exact LRU of capacity W (stack property)."""
+    rng = np.random.default_rng(seed)
+    cfg = DeviceCacheConfig(
+        total_entries=ways, ways=ways, value_dim=1, topic_entries={}, dynamic_entries=ways
+    )
+    cache = STDDeviceCache(cfg)
+    probe, commit = jax.jit(cache.probe), jax.jit(cache.commit)
+    keys = rng.integers(0, 5 * ways, size=120)
+    hits, _ = _drive(cache, dict(cache.init_state), keys, probe, commit)
+    ref = LRUCache(ways)
+    expect = [ref.request(int(k)) for k in keys]
+    assert hits == expect
+
+
+def test_batch_conflicts_match_sequential():
+    """Same-set requests inside one batch behave like sequential requests."""
+    ways = 4
+    cfg = DeviceCacheConfig(
+        total_entries=ways, ways=ways, value_dim=1, topic_entries={}, dynamic_entries=ways
+    )
+    cache = STDDeviceCache(cfg)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 12, size=64)
+    # batched drive (one commit for all 64)
+    h = splitmix64(keys)
+    hi, lo = pack_hashes(h)
+    part = np.zeros(64, np.int32)
+    state = jax.jit(cache.commit)(
+        dict(cache.init_state), jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part),
+        jnp.zeros((64, 1), jnp.int32), jnp.ones(64, bool),
+    )
+    # sequential reference over the same stream
+    ref = LRUCache(ways)
+    for k in keys:
+        ref.request(int(k))
+    resident = set(ref.state())
+    got = set()
+    key_hi = np.asarray(state["key_hi"])
+    key_lo = np.asarray(state["key_lo"])
+    h_all = splitmix64(np.arange(12))
+    for k in range(12):
+        hi_k, lo_k = int(h_all[k] >> np.uint64(32)), int(h_all[k] & np.uint64(0xFFFFFFFF))
+        if ((key_hi == hi_k) & (key_lo == lo_k)).any():
+            got.add(k)
+    assert got == resident
+
+
+def test_static_layer_and_values():
+    static_q = np.array([5, 9])
+    vals = np.array([[50], [90]], np.int32)
+    cfg = DeviceCacheConfig(
+        total_entries=8, ways=4, value_dim=1, topic_entries={}, dynamic_entries=8
+    )
+    cache = STDDeviceCache(cfg, static_hashes=splitmix64(static_q), static_values=vals)
+    probe = jax.jit(cache.probe)
+    h = splitmix64(np.array([5, 9, 7]))
+    hi, lo = pack_hashes(h)
+    hit, layer, val = probe(
+        dict(cache.init_state), jnp.asarray(hi), jnp.asarray(lo), jnp.zeros(3, jnp.int32)
+    )
+    assert list(np.asarray(hit)) == [True, True, False]
+    assert list(np.asarray(layer)) == [0, 0, -1]
+    assert np.asarray(val)[0, 0] == 50 and np.asarray(val)[1, 0] == 90
+
+
+def test_topic_partition_isolation():
+    """A flood in one topic partition never evicts another topic's entries."""
+    cfg = DeviceCacheConfig(
+        total_entries=64, ways=4, value_dim=1,
+        topic_entries={0: 16, 1: 16}, dynamic_entries=32,
+    )
+    cache = STDDeviceCache(cfg)
+    probe, commit = jax.jit(cache.probe), jax.jit(cache.commit)
+    state = dict(cache.init_state)
+
+    def req(state, qid, topic):
+        h = splitmix64(np.array([qid]))
+        hi, lo = pack_hashes(h)
+        part = jnp.asarray(cache.parts_for(np.array([topic])))
+        hit, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), part)
+        state = commit(state, jnp.asarray(hi), jnp.asarray(lo), part,
+                       jnp.zeros((1, 1), jnp.int32), jnp.ones(1, bool))
+        return bool(hit[0]), state
+
+    _, state = req(state, 1234, 0)  # topic 0 resident
+    for q in range(2000, 2400):  # flood topic 1 and dynamic
+        _, state = req(state, q, 1)
+        _, state = req(state, q + 10_000, -1)
+    hit, state = req(state, 1234, 0)
+    assert hit, "topic-0 entry must survive floods in other partitions"
+
+
+def test_broker_end_to_end_and_restart():
+    rng = np.random.default_rng(0)
+    topic_of_q = rng.integers(-1, 4, size=300)
+    cfg = DeviceCacheConfig.build(
+        64, f_s=0.1, f_t=0.6, topic_distinct={t: 10 + t for t in range(4)}, ways=4, value_dim=2
+    )
+    static_q = np.array([0, 1])
+    cache = STDDeviceCache(
+        cfg,
+        static_hashes=splitmix64(static_q),
+        static_values=np.stack([static_q, static_q * 2], 1).astype(np.int32),
+    )
+
+    def backend(qids):
+        return np.stack([qids, qids * 2], axis=1).astype(np.int32)
+
+    broker = Broker(cache, [backend], lambda q: topic_of_q[q])
+    stream = rng.integers(0, 300, size=1024)
+    for lo in range(0, 1024, 64):
+        vals, hit = broker.serve(stream[lo : lo + 64])
+        assert (vals[:, 0] == stream[lo : lo + 64]).all()
+        assert (vals[:, 1] == stream[lo : lo + 64] * 2).all()
+    assert broker.stats.hits > 0
+
+    with tempfile.TemporaryDirectory() as d:
+        broker.save(d, 3)
+        hr = broker.stats.hit_rate
+        snapshot = np.asarray(broker.state["key_hi"]).copy()
+        broker.state = dict(cache.init_state)  # simulate crash
+        broker.stats.hits = 0
+        step = broker.restore(d)
+        assert step == 3
+        assert (np.asarray(broker.state["key_hi"]) == snapshot).all()
+        assert broker.stats.hit_rate == hr
+
+
+def test_broker_hedging_prefers_fast_backup():
+    import time
+
+    def slow(qids):
+        time.sleep(0.8)
+        return np.stack([qids, qids], 1).astype(np.int32)
+
+    def fast(qids):
+        return np.stack([qids, qids], 1).astype(np.int32)
+
+    cfg = DeviceCacheConfig(
+        total_entries=16, ways=4, value_dim=2, topic_entries={}, dynamic_entries=16
+    )
+    b = Broker(
+        STDDeviceCache(cfg), [slow, fast], lambda q: np.full(len(q), -1),
+        hedge=HedgePolicy(deadline_s=0.05),
+    )
+    vals, _ = b.serve(np.arange(8))
+    assert b.stats.hedged_calls >= 1
+    assert (vals[:, 0] == np.arange(8)).all()
+
+
+def test_repartition_preserves_entries():
+    cfg = DeviceCacheConfig.build(
+        64, f_s=0.0, f_t=0.8, topic_distinct={0: 30, 1: 10}, ways=4, value_dim=1
+    )
+    cache = STDDeviceCache(cfg)
+    commit = jax.jit(cache.commit)
+    state = dict(cache.init_state)
+    qids = np.arange(100, 110)
+    h = splitmix64(qids)
+    hi, lo = pack_hashes(h)
+    parts = jnp.asarray(cache.parts_for(np.zeros(10, np.int64)))
+    state = commit(state, jnp.asarray(hi), jnp.asarray(lo), parts,
+                   jnp.arange(10, dtype=jnp.int32)[:, None], jnp.ones(10, bool))
+    new_cfg = DeviceCacheConfig.build(
+        64, f_s=0.0, f_t=0.8, topic_distinct={0: 10, 1: 30}, ways=4, value_dim=1
+    )
+    new_cache, new_state = cache.repartition(state, new_cfg)
+    probe = jax.jit(new_cache.probe)
+    hit, _, val = probe(new_state, jnp.asarray(hi), jnp.asarray(lo),
+                        jnp.asarray(new_cache.parts_for(np.zeros(10, np.int64))))
+    assert np.asarray(hit).all()
+    assert (np.asarray(val)[:, 0] == np.arange(10)).all()

@@ -1,0 +1,69 @@
+"""Unit tests for the dry-run analysis helpers (no 512-device init)."""
+import jax
+import numpy as np
+
+# lock the backend to the real device count BEFORE importing repro.launch.
+# dryrun (whose module header sets XLA_FLAGS=...device_count=512 for its
+# intended use as a process entrypoint)
+jax.devices()
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes_from_hlo
+
+    hlo = """
+  %ag = bf16[2,128,512]{2,1,0} all-gather(bf16[1,128,512]{2,1,0} %p), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %ar2.start = f32[256]{0} all-reduce-start(f32[256]{0} %y), to_apply=%add
+  %ar2.done = f32[256]{0} all-reduce-done(f32[256]{0} %ar2.start)
+  %cp = u32[64]{0} collective-permute(u32[64]{0} %z), source_target_pairs={{0,1}}
+  %nothing = f32[8]{0} add(f32[8]{0} %a, f32[8]{0} %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 2 * 128 * 512 * 2
+    assert out["all-reduce"] == 1024 * 4 + 256 * 4  # start counted, done skipped
+    assert out["collective-permute"] == 64 * 4
+    assert out["all-to-all"] == 0
+    assert out["counts"]["all-reduce"] == 2
+
+
+def test_roofline_terms_and_dominance():
+    from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, roofline
+
+    cost = {"flops": PEAK_FLOPS * 2.0, "bytes accessed": HBM_BW * 0.5}
+    coll = {"all-gather": int(ICI_BW * 0.25), "all-reduce": 0, "reduce-scatter": 0,
+            "all-to-all": 0, "collective-permute": 0, "counts": {}}
+    rf = roofline(cost, coll, n_chips=4, model_flops=PEAK_FLOPS * 4.0)
+    assert abs(rf["t_compute_s"] - 2.0) < 1e-9
+    assert abs(rf["t_memory_s"] - 0.5) < 1e-9
+    assert abs(rf["t_collective_s"] - 0.25) < 1e-9
+    assert rf["dominant"] == "compute"
+    # useful ratio: model / (per-device flops * chips)
+    assert abs(rf["useful_flops_ratio"] - 4.0 / (2.0 * 4)) < 1e-9
+    # roofline fraction: (model/(chips*peak)) / t_bound = 1.0 / 2.0
+    assert abs(rf["roofline_fraction"] - 0.5) < 1e-9
+
+
+def test_divisible_suffix_and_sanitize():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.shardings import _sanitize, divisible_suffix
+
+    mesh = make_smoke_mesh((1, 1), ("data", "model"))
+    assert divisible_suffix(("pod", "data"), 16, mesh) == ()  # size-1 axes
+    spec = _sanitize(P(("pod", "data"), "model"), (16, 32), mesh)
+    assert spec == P(None, None)
+
+
+def test_batch_spec_divisibility():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.shardings import batch_spec
+
+    mesh = make_smoke_mesh((1, 1), ("data", "model"))
+    # on a size-1 mesh both forms are equivalent
+    assert batch_spec(mesh, 16, 2) in (P(None, None), P("data", None))
+    assert batch_spec(mesh, 15, 1) in (P(None,), P("data",))

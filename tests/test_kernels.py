@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_attention_op, embedding_bag_op, topic_score_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.topic_score.ref import topic_score_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "b,v,k",
+    [(4, 300, 37), (64, 1024, 500), (256, 513, 96), (8, 128, 8), (130, 640, 200)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_topic_score_sweep(b, v, k, dtype):
+    counts = jnp.asarray(RNG.poisson(0.05, size=(b, v)).astype(np.float32)).astype(dtype)
+    counts = counts.at[:, 0].add(1.0)  # avoid degenerate empty rows
+    phi = jnp.asarray(
+        np.log(RNG.dirichlet(np.ones(v) * 0.1, size=k).T + 1e-12).astype(np.float32)
+    ).astype(dtype)
+    s1, t1, c1 = topic_score_op(counts, phi, use_kernel=True, interpret=True)
+    s0, t0, c0 = topic_score_ref(counts, phi)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-4, atol=1e-3)
+    assert (np.asarray(t1) == np.asarray(t0)).all()
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c0), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("v,d,b,l", [(50, 128, 8, 5), (200, 256, 16, 9), (33, 128, 4, 3)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_sweep(v, d, b, l, mode, dtype):
+    table = jnp.asarray(RNG.normal(size=(v, d)).astype(np.float32)).astype(dtype)
+    bags = jnp.asarray(RNG.integers(-1, v, size=(b, l)).astype(np.int32))
+    out1 = embedding_bag_op(table, bags, mode=mode, use_kernel=True, interpret=True)
+    out0 = embedding_bag_op(table, bags, mode=mode, use_kernel=False)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out1, np.float32), np.asarray(out0, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_embedding_bag_matches_manual_ref():
+    table = jnp.asarray(RNG.normal(size=(20, 128)).astype(np.float32))
+    idx = jnp.asarray([3, 5, 5, 7, 0], jnp.int32)
+    seg = jnp.asarray([0, 0, 1, 1, 2], jnp.int32)
+    out = embedding_bag_ref(table, idx, seg, 3)
+    expect0 = np.asarray(table)[3] + np.asarray(table)[5]
+    np.testing.assert_allclose(np.asarray(out[0]), expect0, rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "b,hkv,g,d,s,cap,win",
+    [
+        (2, 2, 4, 64, 256, None, None),
+        (1, 1, 8, 128, 1024, 50.0, 300),
+        (3, 4, 1, 128, 777, None, None),
+        (2, 1, 4, 256, 100, 30.0, 64),
+        (1, 2, 2, 64, 513, None, 128),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, hkv, g, d, s, cap, win, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hkv, g, d)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)).astype(np.float32)).astype(dtype)
+    cur = s - 7
+    o1 = decode_attention_op(
+        q, k, v, cur, scale=d**-0.5, softcap=cap, window=win, use_kernel=True, interpret=True
+    )
+    o0 = decode_attention_ref(q, k, v, jnp.asarray(cur), d**-0.5, cap, win)
+    tol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o0, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attention_partial_fill():
+    """Only the first cur_len+1 cache slots may influence the output."""
+    b, hkv, g, d, s = 1, 1, 2, 64, 512
+    q = jnp.asarray(RNG.normal(size=(b, hkv, g, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)).astype(np.float32))
+    cur = 100
+    o1 = decode_attention_op(q, k, v, cur, scale=d**-0.5, use_kernel=True, interpret=True)
+    # poison the invalid region: result must not change
+    k2 = k.at[:, cur + 1 :].set(1e9)
+    v2 = v.at[:, cur + 1 :].set(-1e9)
+    o2 = decode_attention_op(q, k2, v2, cur, scale=d**-0.5, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop: synthetic log -> LDA topic discovery -> STD cache vs SDC ->
+the paper's claims hold (STD >= SDC, Bélády dominates); plus the serving
+path (broker + device-resident cache) reproduces the trace simulator's
+hit rate exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, belady_hit_rate, hit_rate, make_layout
+from repro.core.alloc import uniform_allocation
+from repro.core.fast import DYNAMIC_PART, Layout, VecLog
+from repro.querylog import SynthConfig, generate
+from repro.serving import Broker, DeviceCacheConfig, STDDeviceCache, splitmix64
+from repro.topics import run_pipeline
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    cfg = SynthConfig(
+        n_requests=150_000,
+        n_topics=24,
+        n_topical_queries=30_000,
+        n_notopic_queries=15_000,
+        vocab_size=512,
+        seed=9,
+    )
+    synth = generate(cfg)
+    return synth, run_pipeline(synth, train_frac=0.7, lda_iters=15, lda_subsample=6_000)
+
+
+def _best(pipe, strategy, n):
+    best = 0.0
+    for fs in (0.5, 0.7, 0.9):
+        for ftf, fts in ((0.8, 0.6), (0.95, 0.6)):
+            hr = hit_rate(
+                pipe.log,
+                make_layout(strategy, n, pipe.stats, f_s=fs, f_t=ftf * (1 - fs), f_ts=fts),
+            )
+            best = max(best, hr)
+    return best
+
+
+def test_paper_claims_on_synthetic_log(pipeline):
+    """STD beats SDC; Bélády dominates; topical coverage in paper range."""
+    synth, pipe = pipeline
+    assert 0.35 < pipe.topical_request_fraction < 0.8
+    n = 8192
+    sdc = _best(pipe, "SDC", n)
+    std = max(_best(pipe, "STDv_SDC_C2", n), _best(pipe, "STDv_LRU", n))
+    bel = belady_hit_rate(synth.keys, n, count_from=pipe.log.n_train)
+    assert std >= sdc, "STD must beat SDC (RQ1)"
+    assert bel >= max(std, sdc), "Belady bound must dominate"
+
+
+def test_serving_path_matches_trace_simulator(pipeline):
+    """Broker + device cache == vectorized simulator, request for request.
+
+    Uniform per-topic capacities with ways == capacity give one set per
+    partition, i.e. exact full-LRU semantics on both sides.
+    """
+    synth, pipe = pipeline
+    log, stats = pipe.log, pipe.stats
+    key_topic = pipe.assignment.key_topic
+
+    n, f_s, f_t = 512, 0.25, 0.5
+    topics = sorted(stats.topic_distinct)
+    cap = max(uniform_allocation(int(round(f_t * n)), topics)[topics[0]], 1)
+    n_s = int(round(f_s * n))
+    static_keys = stats.by_freq[:n_s].astype(np.int64)
+    # restrict static to train-seen keys (paper semantics, matched by the
+    # simulator layout)
+    static_keys = static_keys[stats.train_freq[static_keys] > 0]
+
+    # simulator side: same partitioning + capacities
+    layout_ref = make_layout("STDf_LRU", n, stats, f_s=f_s, f_t=f_t)
+    layout = Layout(
+        key_part=layout_ref.key_part,
+        capacity={**{t: cap for t in topics}, DYNAMIC_PART: cap},
+    )
+    warm = log.train_keys[-6_000:]
+    test = log.test_keys[:6_000]
+    sub = VecLog(keys=np.concatenate([warm, test]), n_train=len(warm), key_topic=key_topic)
+    sim_rate = hit_rate(sub, layout)
+
+    # device side: 1 set x cap ways per partition
+    cfg = DeviceCacheConfig(
+        total_entries=len(static_keys) + cap * (len(topics) + 1),
+        ways=cap,
+        value_dim=1,
+        topic_entries={t: cap for t in topics},
+        dynamic_entries=cap,
+    )
+    cache = STDDeviceCache(cfg, static_hashes=splitmix64(static_keys))
+    broker = Broker(
+        cache, [lambda q: np.zeros((len(q), 1), np.int32)],
+        topic_of=lambda q: key_topic[q], microbatch=512,
+    )
+    # per-request serving: batched probes are atomic (a duplicate key in
+    # one batch is probed before its first occurrence commits), so exact
+    # request-for-request equality needs batch size 1
+    for k in warm:
+        broker.serve(np.asarray([k]))
+    h0, r0 = broker.stats.hits, broker.stats.requests
+    for k in test:
+        broker.serve(np.asarray([k]))
+    dev_rate = (broker.stats.hits - h0) / (broker.stats.requests - r0)
+    assert abs(dev_rate - sim_rate) < 1e-9, (dev_rate, sim_rate)

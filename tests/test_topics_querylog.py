@@ -1,0 +1,146 @@
+"""Topic substrate + query-log substrate tests."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.policies import NO_TOPIC
+from repro.querylog import SynthConfig, generate, normalize_query, parse_aol, parse_msn
+from repro.topics import (
+    BagOfWords,
+    LDAModel,
+    assign_topics,
+    em_train,
+    gibbs_train,
+    infer_argmax,
+    oracle_pipeline,
+    run_pipeline,
+)
+
+
+def _planted_collection(k=3, vocab=60, docs_per_topic=40, seed=0):
+    """Topics with disjoint vocabulary blocks: trivially recoverable."""
+    rng = np.random.default_rng(seed)
+    block = vocab // k
+    docs, labels = [], []
+    for t in range(k):
+        for _ in range(docs_per_topic):
+            words = rng.integers(t * block, (t + 1) * block, size=30)
+            docs.append(words.astype(np.int32))
+            labels.append(t)
+    return docs, np.array(labels), vocab
+
+
+def _purity(pred, labels, k):
+    total = 0
+    for c in np.unique(pred):
+        sel = labels[pred == c]
+        if len(sel):
+            total += np.bincount(sel, minlength=k).max()
+    return total / len(labels)
+
+
+def test_em_lda_recovers_planted_topics():
+    docs, labels, vocab = _planted_collection()
+    bow = BagOfWords.from_docs(docs, vocab)
+    model = em_train(bow, n_topics=3, n_iters=40, seed=0)
+    pred, conf = infer_argmax(model, bow)
+    assert _purity(pred, labels, 3) > 0.95
+    assert (conf > 0.5).mean() > 0.9
+
+
+def test_gibbs_lda_recovers_planted_topics():
+    docs, labels, vocab = _planted_collection(docs_per_topic=15)
+    model = gibbs_train(docs, n_topics=3, n_words=vocab, n_iters=30, seed=0)
+    bow = BagOfWords.from_docs(docs, vocab)
+    pred, _ = infer_argmax(model, bow)
+    assert _purity(pred, labels, 3) > 0.9
+
+
+def test_click_voting_and_train_seen_gate():
+    docs, labels, vocab = _planted_collection()
+    bow = BagOfWords.from_docs(docs, vocab)
+    model = em_train(bow, n_topics=3, n_iters=30, seed=0)
+    # query 0: two docs, the more-clicked one decides; query 1 unseen
+    qd = {0: [(docs[0], 1), (docs[50], 9)], 1: [(docs[0], 5)]}
+    train_seen = np.array([True, False])
+    out = assign_topics(2, qd, model, train_seen)
+    bow_ref = BagOfWords.from_docs([docs[50]], vocab)
+    expect, _ = infer_argmax(model, bow_ref)
+    assert out.key_topic[0] == expect[0]
+    assert out.key_topic[1] == NO_TOPIC  # unseen in training -> no topic
+
+
+def test_confidence_threshold_drops_to_no_topic():
+    docs, labels, vocab = _planted_collection()
+    bow = BagOfWords.from_docs(docs, vocab)
+    model = em_train(bow, n_topics=3, n_iters=30, seed=0)
+    qd = {0: [(docs[0], 1)]}
+    out = assign_topics(1, qd, model, np.array([True]), confidence=1.01)
+    assert out.key_topic[0] == NO_TOPIC
+
+
+def test_synth_generator_invariants():
+    cfg = SynthConfig(
+        n_requests=50_000, n_topics=8, n_topical_queries=5_000,
+        n_notopic_queries=2_000, vocab_size=256, seed=3,
+    )
+    log = generate(cfg)
+    assert len(log.keys) == 50_000
+    assert log.keys.max() < log.n_queries
+    freq = np.bincount(log.keys, minlength=log.n_queries)
+    # singleton ids occur exactly once
+    singles = np.arange(log.n_queries)[log.true_topic == NO_TOPIC][2_000:]
+    assert (freq[singles] <= 1).all()
+    # topical requests follow ground-truth topics; docs only for topical
+    assert all(log.true_topic[q] != NO_TOPIC for q in log.docs)
+    # timestamps ascending
+    assert (np.diff(log.timestamps) >= 0).all()
+
+
+def test_pipeline_end_to_end_lda_coverage():
+    cfg = SynthConfig(
+        n_requests=60_000, n_topics=8, n_topical_queries=6_000,
+        n_notopic_queries=2_500, vocab_size=512, seed=4,
+    )
+    synth = generate(cfg)
+    res = run_pipeline(synth, train_frac=0.7, n_topics=8, lda_iters=15, lda_subsample=4_000)
+    # paper: 55-65% of test requests carry a topic
+    assert 0.3 < res.topical_request_fraction < 0.9
+    # predicted topics should align with ground truth (purity over queries)
+    pred = res.assignment.key_topic
+    mask = (pred != NO_TOPIC) & (synth.true_topic != NO_TOPIC)
+    assert mask.sum() > 100
+    assert _purity(pred[mask], synth.true_topic[mask], 8) > 0.7
+
+
+def test_aol_parser_dedups_multi_click_rows():
+    lines = io.StringIO(
+        "AnonID\tQuery\tQueryTime\tItemRank\tClickURL\n"
+        "1\tWeather Boston!\t2006-03-01 07:17:12\t1\thttp://a\n"
+        "1\tWeather Boston!\t2006-03-01 07:17:12\t2\thttp://b\n"
+        "2\tbank of america\t2006-03-01 08:00:00\t\t\n"
+        "1\tweather boston\t2006-03-02 07:00:00\t1\thttp://a\n"
+    )
+    log = parse_aol(lines)
+    assert len(log.keys) == 3  # dup click row collapsed
+    assert log.query_text[log.keys[0]] == "weather boston"
+    assert log.keys[0] == log.keys[2]  # normalization unifies the variants
+    terms, chars = log.term_char_counts()
+    assert terms[log.keys[1]] == 3
+
+
+def test_msn_parser():
+    lines = io.StringIO(
+        "Time\tQuery\tQueryID\tSessionID\tResultCount\n"
+        "2006-05-01 00:00:08.790\tsome query\t1\ts1\t10\n"
+        "2006-05-01 00:01:08.790\tSOME Query\t2\ts1\t10\n"
+    )
+    log = parse_msn(lines)
+    assert len(log.keys) == 2
+    assert log.keys[0] == log.keys[1]
+
+
+def test_normalize_query():
+    assert normalize_query("  Hello,   WORLD!! ") == "hello world"
+    assert normalize_query("***") == ""

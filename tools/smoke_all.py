@@ -1,0 +1,80 @@
+"""Run every (arch x shape) cell with its reduced smoke config on CPU.
+
+The pytest suite samples two shapes per arch for CI time; this sweeps all
+40 cells (a few minutes).  Usage: PYTHONPATH=src python tools/smoke_all.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.registry import ARCHS  # noqa: E402
+from repro.launch.mesh import make_smoke_mesh  # noqa: E402
+from repro.launch.steps import _RECSYS_INIT, build_step  # noqa: E402
+from repro.models import gnn  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.train import optim  # noqa: E402
+
+RNG = np.random.default_rng(0)
+
+
+def concretize(spec):
+    def make(s):
+        if s.dtype == jnp.int32 and len(s.shape) >= 1:
+            return jnp.asarray(RNG.integers(0, 8, size=s.shape), jnp.int32)
+        if s.dtype == jnp.float32:
+            return jnp.asarray(RNG.normal(size=s.shape).astype(np.float32))
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(make, spec)
+
+
+def main() -> int:
+    mesh = make_smoke_mesh()
+    failed = 0
+    for arch in ARCHS.values():
+        for shape in arch.shapes:
+            try:
+                with mesh:
+                    bundle = build_step(arch, shape, mesh, smoke=True)
+                    inputs = list(bundle.inputs)
+                    if arch.family == "lm":
+                        inputs[0] = tf.init_params(jax.random.PRNGKey(0), arch.smoke_config)
+                    elif arch.family == "gnn":
+                        inputs[0] = gnn.init_params(jax.random.PRNGKey(0), arch.smoke_config)
+                    else:
+                        inputs[0] = _RECSYS_INIT[arch.name](jax.random.PRNGKey(0), arch.smoke_config)
+                    if shape.kind == "train":
+                        big = arch.family == "lm" and (
+                            arch.config.moe is not None or arch.config.param_count() > 2e10
+                        )
+                        inputs[1] = (
+                            optim.init_adafactor_state(inputs[0]) if big
+                            else optim.init_opt_state(inputs[0])
+                        )
+                        inputs[2] = concretize(inputs[2])
+                    elif shape.kind == "decode":
+                        inputs[1] = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), inputs[1])
+                        inputs[2] = concretize(inputs[2])
+                    else:
+                        inputs[1] = concretize(inputs[1])
+                    out = bundle.jitted()(*inputs)
+                finite = all(
+                    bool(jnp.isfinite(l).all())
+                    for l in jax.tree.leaves(out)
+                    if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+                )
+                print(f"OK   {arch.name}:{shape.name} finite={finite}", flush=True)
+                failed += 0 if finite else 1
+            except Exception as e:  # noqa: BLE001
+                failed += 1
+                print(f"FAIL {arch.name}:{shape.name}: {type(e).__name__}: {str(e)[:120]}", flush=True)
+    print(f"{'PASS' if not failed else 'FAIL'}: {40 - failed}/40 cells")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,12 +21,12 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import (
+    CacheSpec,
     TraceAnalysis,
     VecLog,
     VecStats,
     analyze,
     belady_hits,
-    make_layout,
 )
 from repro.core.fast import Layout
 from repro.querylog import SynthConfig, generate
@@ -106,12 +106,17 @@ def get_shared(scale: float, seed: int, lda: bool, train_frac: float):
 
 
 class AnalysisCache:
-    """Memoizes TraceAnalysis by the layout's key->partition map."""
+    """Memoizes TraceAnalysis by the layout's key->partition map, and whole
+    hit-rate results by declarative spec (``CacheSpec.to_json()`` is the
+    cache key, in memory and on disk)."""
 
-    def __init__(self, log: VecLog):
+    def __init__(self, log: VecLog, disk: bool = True):
         self.log = log
         self._cache: Dict[bytes, TraceAnalysis] = {}
         self.passes = 0
+        self._disk = disk
+        self._log_tag: Optional[str] = None
+        self._spec_rates: Optional[Dict[str, float]] = None
 
     def analysis(self, layout: Layout) -> TraceAnalysis:
         key = hashlib.sha1(layout.key_part.tobytes()).digest()
@@ -126,6 +131,58 @@ class AnalysisCache:
         ana = self.analysis(layout)
         n_test = int(ana.count_mask.sum())
         return ana.hits(layout.capacity) / n_test if n_test else 0.0
+
+    # -- spec-keyed result cache -----------------------------------------
+
+    def _spec_store(self) -> Dict[str, float]:
+        """Lazy-load the per-log disk store of spec -> hit_rate results."""
+        if self._spec_rates is None:
+            self._log_tag = hashlib.sha1(
+                self.log.keys.tobytes()
+                + self.log.key_topic.tobytes()
+                + str(self.log.n_train).encode()
+            ).hexdigest()[:16]
+            self._spec_rates = {}
+            if self._disk:
+                path = os.path.join(CACHE_DIR, f"specrates_{self._log_tag}.pkl")
+                if os.path.exists(path):
+                    try:
+                        with open(path, "rb") as f:
+                            self._spec_rates = pickle.load(f)
+                    except Exception:
+                        self._spec_rates = {}
+        return self._spec_rates
+
+    def _spec_store_save(self) -> None:
+        if not self._disk:
+            return
+        os.makedirs(CACHE_DIR, exist_ok=True)
+        path = os.path.join(CACHE_DIR, f"specrates_{self._log_tag}.pkl")
+        tmp = path + f".tmp{os.getpid()}"
+        with open(tmp, "wb") as f:
+            pickle.dump(self._spec_rates, f)
+        os.replace(tmp, path)
+
+    def hit_rate_spec(
+        self,
+        spec: CacheSpec,
+        stats: VecStats,
+        admitted: Optional[np.ndarray] = None,
+    ) -> float:
+        """Hit rate for a declarative spec; the spec's JSON (plus the
+        admission mask fingerprint) keys the memo, so re-running a benchmark
+        grid against an unchanged log costs zero analysis passes."""
+        store = self._spec_store()
+        key = spec.to_json()
+        if admitted is not None:
+            key += "|admitted=" + hashlib.sha1(admitted.tobytes()).hexdigest()[:16]
+        if key in store:
+            return store[key]
+        # log= lets admission-bearing specs compile their own mask
+        hr = self.hit_rate(spec.to_layout(stats, admitted=admitted, log=self.log))
+        store[key] = hr
+        self._spec_store_save()
+        return hr
 
 
 @dataclasses.dataclass
@@ -172,12 +229,11 @@ def best_config(
     n: int,
     admitted: Optional[np.ndarray] = None,
 ) -> BestResult:
+    """Grid-search a strategy's (f_s, f_t, f_ts) via declarative specs."""
     best = BestResult(0.0)
     for fs, ft, fts in grid_for(strategy):
-        layout = make_layout(
-            strategy, n, stats, f_s=fs, f_t=ft, f_ts=fts, admitted=admitted
-        )
-        hr = cache.hit_rate(layout)
+        spec = CacheSpec.from_strategy(strategy, n, f_s=fs, f_t=ft, f_ts=fts)
+        hr = cache.hit_rate_spec(spec, stats, admitted=admitted)
         if hr > best.hit_rate:
             best = BestResult(hr, fs, ft, fts)
     return best

@@ -10,7 +10,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import NO_TOPIC, TrainStats, build_std, simulate
+from repro.core import NO_TOPIC, CacheSpec, TrainStats, simulate
 
 from .common import csv_row, load_pipeline
 
@@ -29,7 +29,7 @@ def run(n: int = 16384, scale: float = 0.2, seed: int = 7) -> List[str]:
         ("SDC", dict(f_s=0.9)),
         ("STDv_SDC_C2", dict(f_s=0.9, f_t=0.08, f_ts=0.6)),
     ]:
-        cache = build_std(strategy, n, stats, **kw)
+        cache = CacheSpec.from_strategy(strategy, n, **kw).to_exact(stats)
         t0 = time.time()
         res = simulate(
             cache, log.test_keys.tolist(), warm_keys=log.train_keys.tolist(), track=True

@@ -9,7 +9,7 @@ from typing import List
 
 import numpy as np
 
-from repro.core import make_layout
+from repro.core import CacheSpec
 
 from .common import AnalysisCache, csv_row, load_pipeline
 
@@ -22,16 +22,18 @@ def run(sizes, scale: float = 1.0, seed: int = 7) -> List[str]:
     for n in sizes:
         for fs in [round(x, 1) for x in np.arange(0.1, 1.0, 0.1)]:
             t0 = time.time()
-            sdc = cache.hit_rate(make_layout("SDC", n, pipe.stats, f_s=fs))
-            std = cache.hit_rate(
-                make_layout(
+            sdc = cache.hit_rate_spec(
+                CacheSpec.from_strategy("SDC", n, f_s=fs), pipe.stats
+            )
+            std = cache.hit_rate_spec(
+                CacheSpec.from_strategy(
                     "STDv_SDC_C2",
                     n,
-                    pipe.stats,
                     f_s=fs,
                     f_t=round(0.8 * (1 - fs), 4),
                     f_ts=0.4,
-                )
+                ),
+                pipe.stats,
             )
             us = (time.time() - t0) * 1e6
             wins += std > sdc

@@ -7,16 +7,17 @@ from typing import List
 
 import numpy as np
 
-from repro.core import STRATEGIES
+from repro.core import STRATEGIES, AdmissionSpec
 
 from .common import best_config, belady_rate, csv_row, get_shared
 
 
 def polluting_mask(pipe, x: int = 3, y: int = 5, z: int = 20) -> np.ndarray:
     """Per-key admission mask (stateful train freq + stateless lengths)."""
-    log = pipe.log
-    train_freq = np.bincount(log.train_keys, minlength=log.n_queries)
-    return (train_freq >= x) & (log.key_terms < y) & (log.key_chars < z)
+    spec = AdmissionSpec(
+        kind="polluting", min_train_freq=x, max_terms=y, max_chars=z
+    )
+    return spec.to_mask(pipe.log)
 
 
 def run(sizes, scale: float = 1.0, lda: bool = False, seed: int = 7) -> List[str]:

@@ -8,7 +8,7 @@ rates and the Bélády bound.
 """
 import numpy as np
 
-from repro.core import STRATEGIES, belady_hit_rate, hit_rate, make_layout
+from repro.core import STRATEGIES, CacheSpec, belady_hit_rate, hit_rate
 from repro.querylog import SynthConfig, generate
 from repro.topics import run_pipeline
 
@@ -29,18 +29,21 @@ synth = generate(cfg)
 pipe = run_pipeline(synth, train_frac=0.7, lda_iters=15, lda_subsample=8_000)
 print(f"topical test requests: {pipe.topical_request_fraction:.1%}")
 
-# 3) evaluate every caching strategy of the paper at N = 4096 entries
+# 3) evaluate every caching strategy of the paper at N = 4096 entries:
+#    one declarative CacheSpec per grid point, compiled to the vectorized
+#    reuse-distance engine (the same spec compiles to the exact simulator
+#    via .to_exact and to the device cache via .to_device)
 N = 4096
 print(f"\ncache size N={N}:")
 for strategy in STRATEGIES:
     best, best_cfg = 0.0, None
     for f_s in np.arange(0.1, 1.0, 0.2):
         for ft_frac, f_ts in ((0.8, 0.5), (0.5, 0.5)):
-            layout = make_layout(
-                strategy, N, pipe.stats,
+            spec = CacheSpec.from_strategy(
+                strategy, N,
                 f_s=f_s, f_t=ft_frac * (1 - f_s), f_ts=f_ts,
             )
-            hr = hit_rate(pipe.log, layout)
+            hr = hit_rate(pipe.log, spec.to_layout(pipe.stats))
             if hr > best:
                 best, best_cfg = hr, (round(float(f_s), 1), round(float(ft_frac * (1 - f_s)), 2))
     print(f"  {strategy:13s} hit_rate={best:.4f}  (f_s, f_t)={best_cfg}")

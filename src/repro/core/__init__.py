@@ -36,14 +36,24 @@ from .policies import (
     StaticCache,
 )
 from .simulate import SimResult, simulate
+from .spec import (
+    AdmissionSpec,
+    CacheSpec,
+    DynamicSpec,
+    StaticSpec,
+    TopicLayerSpec,
+)
 from .stats import TrainStats
 
 __all__ = [
     "ALWAYS_HIT",
     "AdmissionPolicy",
+    "AdmissionSpec",
     "AdmitAll",
+    "CacheSpec",
     "CacheUnit",
     "DYNAMIC_PART",
+    "DynamicSpec",
     "Layout",
     "LRUCache",
     "NO_CACHE",
@@ -56,6 +66,8 @@ __all__ = [
     "SimResult",
     "SingletonOracle",
     "StaticCache",
+    "StaticSpec",
+    "TopicLayerSpec",
     "TraceAnalysis",
     "TrainStats",
     "VecLog",

@@ -1,5 +1,13 @@
 """Builders wiring TrainStats into the cache configurations of the paper.
 
+Since the ``CacheSpec`` redesign this module is a thin backward-compatible
+wrapper: every strategy name maps to a declarative spec
+(:func:`repro.core.spec.CacheSpec.from_strategy`) which is compiled to the
+exact per-request engine.  The vectorized twin
+(:func:`repro.core.fast.make_layout`) and the device engine
+(``CacheSpec.to_device``) compile the *same* spec, so the three engines are
+guaranteed to evaluate the same cache.
+
 Configurations (paper Sec. 3.2 / Sec. 5):
 
 * ``SDC``            -- baseline: static top-|S| + LRU.
@@ -15,58 +23,19 @@ Configurations (paper Sec. 3.2 / Sec. 5):
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional
+from typing import Optional
 
-from .alloc import proportional_allocation, uniform_allocation
-from .policies import (
-    NO_TOPIC,
-    CacheUnit,
-    LRUCache,
-    NullCache,
-    SDCCache,
-    STDCache,
-    StaticCache,
-)
+from .policies import CacheUnit, LRUCache, SDCCache
+from .spec import STRATEGIES, CacheSpec, split_sizes
 from .stats import TrainStats
 
-STRATEGIES = (
-    "SDC",
-    "STDf_LRU",
-    "STDv_LRU",
-    "STDv_SDC_C1",
-    "STDv_SDC_C2",
-    "Tv_SDC",
-)
-
-
-def split_sizes(n: int, f_s: float, f_t: float) -> tuple[int, int, int]:
-    """(|S|, |T|, |D|) with |S| = round(f_s*N), |T| = round(f_t*N), rest D."""
-    s = int(round(f_s * n))
-    t = int(round(f_t * n))
-    s = min(s, n)
-    t = min(t, n - s)
-    return s, t, n - s - t
-
-
-def _topic_section(
-    capacity: int,
-    topic_queries_by_freq: List,
-    f_ts: Optional[float],
-    exclude: frozenset = frozenset(),
-) -> CacheUnit:
-    """One per-topic section: LRU when ``f_ts`` is None, else SDC."""
-    if capacity <= 0:
-        return NullCache()
-    if f_ts is None:
-        return LRUCache(capacity)
-    n_static = int(round(f_ts * capacity))
-    static_keys = []
-    for k in topic_queries_by_freq:
-        if len(static_keys) >= n_static:
-            break
-        if k not in exclude:
-            static_keys.append(k)
-    return SDCCache(static_keys, capacity - len(static_keys))
+__all__ = [
+    "STRATEGIES",
+    "build_lru",
+    "build_sdc",
+    "build_std",
+    "split_sizes",
+]
 
 
 def build_sdc(n: int, f_s: float, stats: TrainStats) -> SDCCache:
@@ -91,67 +60,7 @@ def build_std(
     ``f_d`` is implied (= 1 - f_s - f_t), matching the paper's tuning: "the
     other parameters are tuned based on the remaining size of the cache".
     """
-    if strategy == "SDC":
-        return build_sdc(n, f_s, stats)
-    if strategy == "LRU":
-        return build_lru(n)
-    if strategy == "Tv_SDC":
-        return _build_t_sdc(n, stats, f_ts if f_ts is not None else 0.5)
-    n_s, n_t, n_d = split_sizes(n, f_s, f_t)
-    topics = stats.topics
-
-    if strategy == "STDf_LRU":
-        sizes = uniform_allocation(n_t, topics)
-        sections = {t: _topic_section(sizes[t], [], None) for t in topics}
-        static_keys = stats.by_freq[:n_s]
-    elif strategy == "STDv_LRU":
-        sizes = proportional_allocation(n_t, stats.topic_distinct)
-        sections = {t: _topic_section(sizes[t], [], None) for t in topics}
-        static_keys = stats.by_freq[:n_s]
-    elif strategy == "STDv_SDC_C1":
-        if f_ts is None:
-            raise ValueError("STDv_SDC_C1 requires f_ts")
-        sizes = proportional_allocation(n_t, stats.topic_distinct)
-        # C1: the global static cache hosts only *no-topic* queries.
-        static_keys = stats.notopic_by_freq[:n_s]
-        sections = {
-            t: _topic_section(sizes[t], stats.topic_by_freq.get(t, []), f_ts)
-            for t in topics
-        }
-    elif strategy == "STDv_SDC_C2":
-        if f_ts is None:
-            raise ValueError("STDv_SDC_C2 requires f_ts")
-        sizes = proportional_allocation(n_t, stats.topic_distinct)
-        # C2: S holds the top queries overall; topical queries already in S
-        # are skipped when filling the per-topic static fractions.
-        static_keys = stats.by_freq[:n_s]
-        in_s = frozenset(static_keys)
-        sections = {
-            t: _topic_section(
-                sizes[t], stats.topic_by_freq.get(t, []), f_ts, exclude=in_s
-            )
-            for t in topics
-        }
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
-
-    return STDCache(static_keys, sections, n_d, stats.topic)
-
-
-def _build_t_sdc(n: int, stats: TrainStats, f_ts: float) -> STDCache:
-    """Tv_SDC: the whole cache is topic sections; no-topic = topic k+1."""
-    extra = (max(stats.topics) + 1) if stats.topics else 0
-    distinct = dict(stats.topic_distinct)
-    distinct[extra] = len(stats.notopic_by_freq)
-    sizes = proportional_allocation(n, distinct)
-    by_freq = dict(stats.topic_by_freq)
-    by_freq[extra] = stats.notopic_by_freq
-
-    def topic_or_extra(key):
-        t = stats.topic(key)
-        return t if t != NO_TOPIC else extra
-
-    sections = {
-        t: _topic_section(sizes[t], by_freq.get(t, []), f_ts) for t in sizes
-    }
-    return STDCache((), sections, 0, topic_or_extra)
+    if strategy == "Tv_SDC" and f_ts is None:
+        f_ts = 0.5  # historical default of this entry point
+    spec = CacheSpec.from_strategy(strategy, n, f_s=f_s, f_t=f_t, f_ts=f_ts)
+    return spec.to_exact(stats)

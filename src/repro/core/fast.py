@@ -24,8 +24,6 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from . import rd_offline
-from .alloc import proportional_allocation, uniform_allocation
-from .build import split_sizes
 from .policies import NO_TOPIC
 
 # Special partition ids (>= 0 are LRU partitions; topic t -> partition t,
@@ -136,110 +134,16 @@ def make_layout(
     f_ts: Optional[float] = None,
     admitted: Optional[np.ndarray] = None,
 ) -> Layout:
-    """Vectorized twin of :func:`repro.core.build.build_std`."""
-    nq = len(stats.train_freq)
-    topic = stats.key_topic
-    key_part = np.where(topic == NO_TOPIC, DYNAMIC_PART, topic).astype(np.int64)
+    """Vectorized twin of :func:`repro.core.build.build_std`.
 
-    if strategy == "LRU":
-        key_part[:] = DYNAMIC_PART
-        cap = {DYNAMIC_PART: n_entries}
-        n_s = 0
-    elif strategy == "SDC":
-        n_s = int(round(f_s * n_entries))
-        key_part[:] = DYNAMIC_PART
-        cap = {DYNAMIC_PART: n_entries - n_s}
-    elif strategy in ("STDf_LRU", "STDv_LRU"):
-        n_s, n_t, n_d = split_sizes(n_entries, f_s, f_t)
-        topics = sorted(stats.topic_distinct)
-        sizes = (
-            uniform_allocation(n_t, topics)
-            if strategy == "STDf_LRU"
-            else proportional_allocation(n_t, stats.topic_distinct)
-        )
-        cap = {int(t): int(c) for t, c in sizes.items()}
-        cap[DYNAMIC_PART] = n_d
-    elif strategy in ("STDv_SDC_C1", "STDv_SDC_C2"):
-        if f_ts is None:
-            raise ValueError(f"{strategy} requires f_ts")
-        n_s, n_t, n_d = split_sizes(n_entries, f_s, f_t)
-        sizes = proportional_allocation(n_t, stats.topic_distinct)
-        cap = {}
-        # Global static membership first (affects C2 exclusions).  The
-        # static cache can only hold queries observed in training.
-        if strategy == "STDv_SDC_C1":
-            in_global_static = stats.notopic_rank < n_s
-        else:
-            in_global_static = (stats.freq_rank < n_s) & (stats.train_freq > 0)
-        for t, c_t in sizes.items():
-            t = int(t)
-            m = int(round(f_ts * c_t))
-            mask_t = topic == t
-            if strategy == "STDv_SDC_C2":
-                # Skip queries already resident in S when filling the topic
-                # static fraction: the m best *non-S* topic queries.
-                elig = mask_t & ~in_global_static
-                # rank among eligible topic keys by (global) freq order
-                order = stats.by_freq[elig[stats.by_freq]]
-                ts_keys = order[:m]
-            else:
-                ts_keys = np.flatnonzero(mask_t & (stats.topic_rank < m))
-            topic_static = np.zeros(nq, dtype=bool)
-            topic_static[ts_keys] = True
-            key_part[mask_t & topic_static] = ALWAYS_HIT
-            cap[t] = c_t - len(ts_keys)
-        cap[DYNAMIC_PART] = n_d
-    elif strategy == "Tv_SDC":
-        if f_ts is None:
-            raise ValueError("Tv_SDC requires f_ts")
-        extra = (max(stats.topic_distinct) + 1) if stats.topic_distinct else 0
-        distinct = dict(stats.topic_distinct)
-        seen = stats.train_freq > 0
-        distinct[extra] = int(((topic == NO_TOPIC) & seen).sum())
-        sizes = proportional_allocation(n_entries, distinct)
-        key_part = np.where(topic == NO_TOPIC, extra, topic).astype(np.int64)
-        cap = {}
-        for t, c_t in sizes.items():
-            t = int(t)
-            m = int(round(f_ts * c_t))
-            if t == extra:
-                ts = (topic == NO_TOPIC) & (stats.notopic_rank < m)
-            else:
-                ts = (topic == t) & (stats.topic_rank < m)
-            key_part[ts] = ALWAYS_HIT
-            cap[t] = c_t - int(ts.sum())
-        n_s = 0
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
+    Backward-compatible wrapper: builds the declarative
+    :class:`repro.core.spec.CacheSpec` for the named strategy and compiles
+    it to a layout (``CacheSpec.to_layout``).
+    """
+    from .spec import CacheSpec  # deferred: spec lazily imports this module
 
-    if strategy not in ("LRU", "Tv_SDC"):
-        if strategy == "STDv_SDC_C1":
-            global_static = stats.notopic_rank < n_s
-        else:
-            global_static = (stats.freq_rank < n_s) & (stats.train_freq > 0)
-        key_part[global_static] = ALWAYS_HIT
-
-    # topics whose section received zero entries are "not handled" (paper
-    # Alg. 1): their queries fall through to the dynamic cache, making
-    # f_t = 0 degenerate exactly to SDC.
-    zero_parts = [p for p, c in cap.items() if c == 0 and p != DYNAMIC_PART]
-    if zero_parts and strategy not in ("Tv_SDC",):
-        # keep ALWAYS_HIT (per-topic static fractions may be non-empty)
-        reroute = np.isin(key_part, zero_parts)
-        # only reroute when the *whole* section (static part included) is
-        # empty; sections with a static fraction but 0 LRU entries keep
-        # their routing (their LRU part just never hits)
-        if strategy in ("STDv_SDC_C1", "STDv_SDC_C2"):
-            sizes_total = proportional_allocation(
-                split_sizes(n_entries, f_s, f_t)[1], stats.topic_distinct
-            )
-            empty = {int(t) for t, c in sizes_total.items() if c == 0}
-            reroute = np.isin(key_part, [p for p in zero_parts if p in empty])
-        key_part[reroute] = DYNAMIC_PART
-
-    if admitted is not None:
-        key_part[(key_part != ALWAYS_HIT) & ~admitted] = NO_CACHE
-    return Layout(key_part=key_part, capacity=cap)
+    spec = CacheSpec.from_strategy(strategy, n_entries, f_s=f_s, f_t=f_t, f_ts=f_ts)
+    return spec.to_layout(stats, admitted=admitted)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from .policies import NO_TOPIC, AdmissionPolicy, CacheUnit, STDCache
+from .policies import NO_TOPIC, AdmissionPolicy, CacheUnit, SDCCache, STDCache
 
 
 @dataclass
@@ -38,8 +38,13 @@ def simulate(
 ) -> SimResult:
     """Warm with ``warm_keys`` (admission applies there too — the policy is a
     property of the cache manager, not of the measurement phase), then replay
-    ``test_keys`` counting hits."""
+    ``test_keys`` counting hits.
+
+    With ``track=True`` the per-layer dicts are populated for every cache
+    type: STD caches report static/topic/dynamic, SDC caches static/dynamic,
+    and everything else (LRU, ...) counts under "dynamic"."""
     is_std = isinstance(cache, STDCache)
+    is_sdc = isinstance(cache, SDCCache)
 
     def admit_ok(k) -> bool:
         return admission is None or admission.admits(k)
@@ -72,13 +77,21 @@ def simulate(
                         dist_cnt[topic] = dist_cnt.get(topic, 0) + 1
                     last_miss[k] = i
         else:
+            # layer attribution for non-STD caches: an SDC splits into its
+            # static membership vs the LRU part; anything else is "dynamic"
+            in_static = is_sdc and track and k in cache.static
             hit = cache.request(k, admit=admit_ok(k))
-            if track and not hit:
-                j = last_miss.get(k)
-                if j is not None:
-                    dist_sum[NO_TOPIC] = dist_sum.get(NO_TOPIC, 0) + (i - j - 1)
-                    dist_cnt[NO_TOPIC] = dist_cnt.get(NO_TOPIC, 0) + 1
-                last_miss[k] = i
+            if track:
+                layer = "static" if in_static else "dynamic"
+                layer_requests[layer] += 1
+                if hit:
+                    layer_hits[layer] += 1
+                else:
+                    j = last_miss.get(k)
+                    if j is not None:
+                        dist_sum[NO_TOPIC] = dist_sum.get(NO_TOPIC, 0) + (i - j - 1)
+                        dist_cnt[NO_TOPIC] = dist_cnt.get(NO_TOPIC, 0) + 1
+                    last_miss[k] = i
         hits += hit
 
     avg_dist = {

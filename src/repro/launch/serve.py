@@ -18,10 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import get_arch
-from ..core import NO_TOPIC, VecStats
+from ..core import CacheSpec
+from ..core.spec import STRATEGIES
 from ..models import transformer as tf
 from ..querylog import SynthConfig, generate
-from ..serving import Broker, DeviceCacheConfig, HedgePolicy, STDDeviceCache, splitmix64
+from ..serving import Broker, HedgePolicy, STDDeviceCache
 from ..topics import run_pipeline
 
 
@@ -30,11 +31,25 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--requests", type=int, default=50_000)
     ap.add_argument("--entries", type=int, default=4096)
+    ap.add_argument(
+        "--strategy", default="STDv_LRU", choices=("LRU",) + STRATEGIES,
+        help="paper strategy compiled to the device cache via CacheSpec",
+    )
     ap.add_argument("--f-s", type=float, default=0.5)
     ap.add_argument("--f-t", type=float, default=0.4)
+    ap.add_argument("--f-ts", type=float, default=None)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--value-dim", type=int, default=8)
     args = ap.parse_args(argv)
+
+    # build the declarative spec up front so configuration errors (e.g. an
+    # SDC-section strategy without --f-ts) fail before the expensive log
+    # generation; it is compiled to the device engine below, and the same
+    # spec would drive the exact and reuse-distance engines bit-identically
+    spec = CacheSpec.from_strategy(
+        args.strategy, args.entries, f_s=args.f_s, f_t=args.f_t, f_ts=args.f_ts
+    )
+    print(f"cache spec: {spec.to_json()}")
 
     print("generating calibrated query log + LDA topics ...")
     cfg = SynthConfig(
@@ -50,10 +65,6 @@ def main(argv=None) -> int:
     log, stats = pipe.log, pipe.stats
     key_topic = pipe.assignment.key_topic
 
-    # static content/values from training frequency
-    n_static = int(round(args.f_s * args.entries))
-    static_keys = stats.by_freq[:n_static].astype(np.int64)
-
     arch = get_arch(args.arch)
     mcfg = arch.smoke_config
     params = tf.init_params(jax.random.PRNGKey(0), mcfg)
@@ -68,17 +79,8 @@ def main(argv=None) -> int:
         tokens = (qids[:, None] * 31 + np.arange(8)[None, :]) % mcfg.vocab_size
         return np.asarray(model_scores(jnp.asarray(tokens, jnp.int32)), np.int32)
 
-    dcfg = DeviceCacheConfig.build(
-        args.entries,
-        f_s=args.f_s,
-        f_t=args.f_t,
-        topic_distinct=stats.topic_distinct,
-        value_dim=args.value_dim,
-    )
-    cache = STDDeviceCache(
-        dcfg,
-        static_hashes=splitmix64(static_keys),
-        static_values=backend(static_keys),
+    cache = STDDeviceCache.from_spec(
+        spec, stats, value_fn=backend, value_dim=args.value_dim
     )
     broker = Broker(
         cache,
@@ -86,6 +88,7 @@ def main(argv=None) -> int:
         topic_of=lambda q: key_topic[q],
         hedge=HedgePolicy(deadline_s=2.0),
         microbatch=args.batch,
+        spec=spec,
     )
 
     test = log.test_keys

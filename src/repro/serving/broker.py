@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.spec import CacheSpec
 from ..train import checkpoint as ckpt_lib
 from .device_cache import DYNAMIC, DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
 
@@ -68,8 +69,19 @@ class Broker:
         hedge: Optional[HedgePolicy] = None,
         microbatch: int = 256,
         coalesce: bool = True,
+        spec: Optional[CacheSpec] = None,
     ):
         self.cache = cache
+        #: declarative configuration this cache was compiled from (embedded
+        #: in checkpoints so a restored broker can verify it serves the
+        #: same cache)
+        self.spec = spec
+        if spec is not None and not spec.admission.trivial and admission is None:
+            raise ValueError(
+                "spec carries a non-trivial AdmissionSpec but no admission "
+                "callable was provided; the broker would silently admit "
+                "everything the spec says to filter"
+            )
         self.state = dict(cache.init_state)
         self.backends = list(backends)
         self.topic_of = topic_of
@@ -144,7 +156,10 @@ class Broker:
             )
         self.stats.requests += b
         self.stats.hits += int(hit.sum())
-        self.stats.static_hits += int((layer == 0).sum())
+        # layer is 0/1 only on hits (misses are -1), but mask with `hit`
+        # anyway so both counters stay correct if the probe's layer
+        # convention ever changes
+        self.stats.static_hits += int(((layer == 0) & hit).sum())
         self.stats.topic_hits += int(((layer == 1) & hit).sum())
         return values, hit
 
@@ -183,6 +198,10 @@ class Broker:
     def save(self, ckpt_dir: str, step: int) -> str:
         tree = {"cache": self.state, "stats": dataclasses.asdict(self.stats)}
         tree["stats"] = {k: np.asarray(v) for k, v in tree["stats"].items()}
+        if self.spec is not None:
+            tree["spec_json"] = np.frombuffer(
+                self.spec.to_json().encode("utf-8"), dtype=np.uint8
+            )
         return ckpt_lib.save(ckpt_dir, step, tree)
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
@@ -190,6 +209,22 @@ class Broker:
             "cache": self.state,
             "stats": {k: np.asarray(v) for k, v in dataclasses.asdict(self.stats).items()},
         }
+        if step is None:
+            step = ckpt_lib.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        # verify the embedded spec *before* loading state, so a
+        # configuration mismatch reports as such rather than as a shape
+        # mismatch deep inside the cache arrays
+        if self.spec is not None:
+            raw = ckpt_lib.load_leaf(ckpt_dir, step, "spec_json")
+            if raw is not None:
+                saved = CacheSpec.from_json(bytes(np.asarray(raw)).decode("utf-8"))
+                if saved != self.spec:
+                    raise ValueError(
+                        "checkpoint was produced under a different CacheSpec: "
+                        f"{saved.to_json()} != {self.spec.to_json()}"
+                    )
         tree, got = ckpt_lib.restore(ckpt_dir, tree_like, step)
         self.state = jax.tree.map(jnp.asarray, tree["cache"])
         for k, v in tree["stats"].items():

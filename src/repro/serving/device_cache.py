@@ -81,6 +81,17 @@ class DeviceCacheConfig:
             static_entries=n_s,
         )
 
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        topic_distinct: Mapping[int, int],
+        ways: int = 8,
+        value_dim: int = 8,
+    ) -> "DeviceCacheConfig":
+        """Compile a :class:`repro.core.spec.CacheSpec` to a device config."""
+        return spec.to_device(topic_distinct, ways=ways, value_dim=value_dim)
+
 
 class STDDeviceCache:
     """Functional cache: state is a pytree of arrays, ops are jittable."""
@@ -128,6 +139,31 @@ class STDDeviceCache:
         }
         self._part_sets_dev = jnp.asarray(self.part_sets)
         self._part_offset_dev = jnp.asarray(self.part_offset[:-1])
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        stats,
+        value_fn=None,
+        ways: int = 8,
+        value_dim: int = 8,
+    ) -> "STDDeviceCache":
+        """Build the device cache straight from a declarative spec.
+
+        ``stats`` is the vectorized :class:`repro.core.fast.VecStats`; the
+        static array is preloaded with exactly the spec's always-hit set
+        (global static + per-topic static fractions), with values from
+        ``value_fn(key_ids) -> (n, value_dim)`` when provided.
+        """
+        cfg = spec.to_device(stats.topic_distinct, ways=ways, value_dim=value_dim)
+        static_keys = spec.device_static_keys(stats)
+        static_values = value_fn(static_keys) if value_fn is not None else None
+        return cls(
+            cfg,
+            static_hashes=splitmix64(static_keys) if len(static_keys) else None,
+            static_values=static_values,
+        )
 
     # -- routing ----------------------------------------------------------
 

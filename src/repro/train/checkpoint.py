@@ -94,6 +94,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def load_leaf(ckpt_dir: str, step: int, key: str) -> Optional[np.ndarray]:
+    """Load one leaf by path key, or None if absent (optional metadata --
+    e.g. the serialized CacheSpec a broker checkpoint was produced under)."""
+    target = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(target, "arrays.npz")) as data:
+        return data[key] if key in data.files else None
+
+
 def restore(ckpt_dir: str, tree_like, step: Optional[int] = None):
     """Restore into the structure of ``tree_like`` (shapes validated)."""
     if step is None:

@@ -8,6 +8,9 @@
 5. Offline reuse distances == brute-force distinct counts.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

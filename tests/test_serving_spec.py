@@ -1,0 +1,110 @@
+"""Spec-driven serving: device compilation, broker stats, spec checkpoints."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, CacheSpec, VecLog, VecStats
+from repro.serving import Broker, STDDeviceCache, pack_hashes, splitmix64
+
+
+def _stats(seed=0, nq=300, n=3000, n_topics=6):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    return log, VecStats.from_log(log)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(qids[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def test_from_spec_builds_consistent_device_cache():
+    log, stats = _stats()
+    spec = CacheSpec.from_strategy("STDv_SDC_C2", 256, f_s=0.25, f_t=0.6, f_ts=0.5)
+    value_dim = 2
+    cache = STDDeviceCache.from_spec(
+        spec, stats, value_fn=_backend(value_dim), ways=4, value_dim=value_dim
+    )
+    # config is the spec's device compilation
+    assert cache.cfg == spec.to_device(stats.topic_distinct, ways=4, value_dim=value_dim)
+    # every spec static key answers as a static-layer hit with its value
+    static_keys = spec.device_static_keys(stats)
+    assert len(static_keys) > 0
+    import jax
+
+    probe = jax.jit(cache.probe)
+    h_hi, h_lo = pack_hashes(splitmix64(static_keys))
+    parts = cache.parts_for(np.asarray(stats.key_topic[static_keys]))
+    hit, layer, value = probe(dict(cache.init_state), h_hi, h_lo, parts)
+    assert np.asarray(hit).all()
+    assert (np.asarray(layer) == 0).all()
+    assert (np.asarray(value)[:, 0] == static_keys).all()
+
+
+def test_broker_layer_stats_consistent():
+    """static_hits counts only actual hits and only the static layer."""
+    log, stats = _stats(seed=4)
+    spec = CacheSpec.from_strategy("STDv_LRU", 128, f_s=0.5, f_t=0.4)
+    cache = STDDeviceCache.from_spec(spec, stats, value_fn=_backend(1), value_dim=1)
+    broker = Broker(
+        cache,
+        [_backend(1)],
+        topic_of=lambda q: stats.key_topic[q],
+        spec=spec,
+    )
+    static_set = set(spec.device_static_keys(stats).tolist())
+    stream = log.test_keys[:2000]
+    for lo in range(0, len(stream), 64):
+        broker.serve(stream[lo : lo + 64])
+    s = broker.stats
+    assert s.requests == len(stream)
+    assert 0 < s.hits <= s.requests
+    # every static-key request hits the static layer; nothing else does
+    expected_static = int(sum(1 for k in stream if int(k) in static_set))
+    assert s.static_hits == expected_static
+    assert s.static_hits + s.topic_hits <= s.hits
+
+
+def test_broker_checkpoint_embeds_spec():
+    log, stats = _stats(seed=8)
+    spec = CacheSpec.from_strategy("STDv_LRU", 64, f_s=0.25, f_t=0.5)
+    cache = STDDeviceCache.from_spec(spec, stats, value_fn=_backend(1), value_dim=1)
+
+    def make_broker(sp):
+        c = STDDeviceCache.from_spec(sp, stats, value_fn=_backend(1), value_dim=1)
+        return Broker(c, [_backend(1)], topic_of=lambda q: stats.key_topic[q], spec=sp)
+
+    broker = make_broker(spec)
+    for lo in range(0, 512, 64):
+        broker.serve(log.test_keys[lo : lo + 64])
+
+    with tempfile.TemporaryDirectory() as d:
+        broker.save(d, 1)
+        # same spec: restores fine, stats intact
+        again = make_broker(spec)
+        assert again.restore(d) == 1
+        assert again.stats.hits == broker.stats.hits
+
+        # different spec: loud failure instead of silently serving the
+        # wrong cache
+        other = CacheSpec.from_strategy("STDv_LRU", 64, f_s=0.5, f_t=0.25)
+        with pytest.raises(ValueError, match="different CacheSpec"):
+            make_broker(other).restore(d)
+
+        # spec-less broker still restores spec-less checkpoints (and
+        # spec-bearing ones: the extra leaf is simply ignored)
+        legacy = Broker(
+            STDDeviceCache.from_spec(spec, stats, value_fn=_backend(1), value_dim=1),
+            [_backend(1)],
+            topic_of=lambda q: stats.key_topic[q],
+        )
+        assert legacy.restore(d) == 1

@@ -1,0 +1,374 @@
+"""CacheSpec: serialization, wrapper compatibility, cross-engine conformance.
+
+These tests are deliberately hypothesis-free so they run on a bare
+environment; the property tests in ``test_core_equivalence.py`` fuzz the
+same invariants harder when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    NO_TOPIC,
+    AdmissionSpec,
+    CacheSpec,
+    DynamicSpec,
+    StaticSpec,
+    TopicLayerSpec,
+    VecLog,
+    VecStats,
+    analyze,
+    build_lru,
+    build_std,
+    make_layout,
+    simulate,
+)
+from repro.core.spec import STRATEGIES
+from repro.core.stats import TrainStats
+
+ALL_STRATEGIES = ("LRU",) + STRATEGIES
+
+#: (f_s, f_t, f_ts) exercised per strategy in the conformance tests
+PARAMS = {
+    "LRU": (0.0, 0.0, None),
+    "SDC": (0.5, 0.0, None),
+    "STDf_LRU": (0.3, 0.5, None),
+    "STDv_LRU": (0.3, 0.5, None),
+    "STDv_SDC_C1": (0.25, 0.6, 0.5),
+    "STDv_SDC_C2": (0.25, 0.6, 0.5),
+    "Tv_SDC": (0.0, 0.0, 0.5),
+}
+
+
+def synthetic_case(seed: int, n: int = 4000, nq: int = 400, n_topics: int = 8):
+    """A small Zipf-ish log with topics on train-seen keys only."""
+    rng = np.random.default_rng(seed)
+    # Zipf-ish popularity so static layers and LRU layers both matter
+    p = 1.0 / np.arange(1, nq + 1) ** 0.9
+    keys = rng.choice(nq, size=n, p=p / p.sum()).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    topic_map = {int(k): int(topic[k]) for k in range(nq) if topic[k] != NO_TOPIC}
+    exact_stats = TrainStats.from_stream(keys[:n_train].tolist(), topic_map)
+    return log, VecStats.from_log(log), exact_stats
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_json_round_trip_named_strategies(strategy):
+    f_s, f_t, f_ts = PARAMS[strategy]
+    spec = CacheSpec.from_strategy(strategy, 1024, f_s=f_s, f_t=f_t, f_ts=f_ts)
+    again = CacheSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.name == strategy
+    # round-trip is lossless, so a second trip is bit-identical JSON
+    assert again.to_json() == spec.to_json()
+
+
+def test_json_round_trip_heterogeneous_spec():
+    """A hand-built spec no named strategy produces: no-topic static source
+    feeding SDC topic sections with C2 exclusions and a polluting gate."""
+    spec = CacheSpec(
+        n_entries=4096,
+        static=StaticSpec(fraction=0.2, source="notopic"),
+        topic=TopicLayerSpec(
+            fraction=0.6,
+            allocation="uniform",
+            section="sdc",
+            static_fraction=0.35,
+            exclude_global_static=True,
+        ),
+        dynamic=DynamicSpec(policy="lru"),
+        admission=AdmissionSpec(kind="polluting", min_train_freq=2, max_terms=7),
+        name="custom_mixed",
+    )
+    again = CacheSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.topic.static_fraction == 0.35
+    assert again.admission.min_train_freq == 2
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        CacheSpec.from_strategy("STDx_FANCY", 1024)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        build_std("STDx_FANCY", 64, TrainStats.from_stream([], {}))
+
+
+def test_invalid_specs_raise():
+    with pytest.raises(ValueError):
+        StaticSpec(fraction=1.5)
+    with pytest.raises(ValueError):
+        TopicLayerSpec(section="sdc")  # missing f_ts
+    with pytest.raises(ValueError):
+        TopicLayerSpec(allocation="zipf")
+    with pytest.raises(ValueError):
+        AdmissionSpec(kind="lucky")
+    with pytest.raises(ValueError):
+        CacheSpec(n_entries=-1)
+    for strategy in ("STDv_SDC_C1", "STDv_SDC_C2", "Tv_SDC"):
+        with pytest.raises(ValueError):
+            CacheSpec.from_strategy(strategy, 64, f_s=0.2, f_t=0.4, f_ts=None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine conformance: one spec, identical hit counts in both engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("n_entries", (16, 64, 256))
+def test_exact_and_vectorized_hits_identical(strategy, n_entries):
+    log, vec_stats, exact_stats = synthetic_case(seed=7)
+    f_s, f_t, f_ts = PARAMS[strategy]
+    spec = CacheSpec.from_strategy(strategy, n_entries, f_s=f_s, f_t=f_t, f_ts=f_ts)
+
+    cache = spec.to_exact(exact_stats)
+    exact_hits = simulate(
+        cache, log.test_keys.tolist(), warm_keys=log.train_keys.tolist()
+    ).hits
+
+    layout = spec.to_layout(vec_stats)
+    vec_hits = analyze(log, layout).hits(layout.capacity)
+
+    assert exact_hits == vec_hits
+    # and the spec round-trips losslessly for every exercised config
+    assert CacheSpec.from_json(spec.to_json()) == spec
+
+
+def test_conformance_with_admission_mask():
+    log, vec_stats, exact_stats = synthetic_case(seed=11)
+    rng = np.random.default_rng(3)
+    admitted = rng.random(log.n_queries) > 0.4
+    spec = CacheSpec.from_strategy("STDv_LRU", 64, f_s=0.3, f_t=0.4)
+
+    class _A:
+        def admits(self, k):
+            return bool(admitted[k])
+
+    exact_hits = simulate(
+        spec.to_exact(exact_stats),
+        log.test_keys.tolist(),
+        warm_keys=log.train_keys.tolist(),
+        admission=_A(),
+    ).hits
+    layout = spec.to_layout(vec_stats, admitted=admitted)
+    assert exact_hits == analyze(log, layout).hits(layout.capacity)
+
+
+# ---------------------------------------------------------------------------
+# Backward-compatible wrappers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_wrappers_match_spec(strategy):
+    """build_std / make_layout produce the same caches as the spec they
+    wrap (same layout routing, same exact hit counts)."""
+    log, vec_stats, exact_stats = synthetic_case(seed=23)
+    f_s, f_t, f_ts = PARAMS[strategy]
+    n = 128
+    spec = CacheSpec.from_strategy(strategy, n, f_s=f_s, f_t=f_t, f_ts=f_ts)
+
+    layout_wrap = make_layout(strategy, n, vec_stats, f_s=f_s, f_t=f_t, f_ts=f_ts)
+    layout_spec = spec.to_layout(vec_stats)
+    assert (layout_wrap.key_part == layout_spec.key_part).all()
+    assert layout_wrap.capacity == layout_spec.capacity
+
+    cache_wrap = (
+        build_lru(n)
+        if strategy == "LRU"
+        else build_std(strategy, n, exact_stats, f_s=f_s, f_t=f_t, f_ts=f_ts)
+    )
+    test = log.test_keys.tolist()
+    warm = log.train_keys.tolist()
+    assert (
+        simulate(cache_wrap, test, warm_keys=warm).hits
+        == simulate(spec.to_exact(exact_stats), test, warm_keys=warm).hits
+    )
+
+
+def test_tv_sdc_wrapper_default_fts():
+    """build_std keeps its historical f_ts=0.5 default for Tv_SDC."""
+    _, _, exact_stats = synthetic_case(seed=5)
+    assert build_std("Tv_SDC", 64, exact_stats) is not None
+
+
+# ---------------------------------------------------------------------------
+# Device compilation
+# ---------------------------------------------------------------------------
+
+
+def test_to_device_partition_budget():
+    """Device config conserves the entry budget across layers."""
+    _, vec_stats, _ = synthetic_case(seed=9)
+    spec = CacheSpec.from_strategy("STDv_SDC_C2", 1024, f_s=0.25, f_t=0.6, f_ts=0.5)
+    cfg = spec.to_device(vec_stats.topic_distinct, ways=4, value_dim=2)
+    n_s, n_t, n_d = spec.sizes()
+    total = cfg.static_entries + sum(cfg.topic_entries.values()) + cfg.dynamic_entries
+    assert total == n_s + n_t + n_d
+    # per-topic static fractions moved into the static layer
+    assert cfg.static_entries > n_s
+
+    lru_spec = CacheSpec.from_strategy("STDv_LRU", 1024, f_s=0.25, f_t=0.6)
+    lru_cfg = lru_spec.to_device(vec_stats.topic_distinct)
+    assert lru_cfg.static_entries == n_s
+    assert sum(lru_cfg.topic_entries.values()) == n_t
+
+
+def test_device_static_keys_match_layout_always_hit():
+    from repro.core.fast import ALWAYS_HIT
+
+    _, vec_stats, _ = synthetic_case(seed=13)
+    spec = CacheSpec.from_strategy("STDv_SDC_C1", 512, f_s=0.3, f_t=0.5, f_ts=0.4)
+    static_keys = spec.device_static_keys(vec_stats)
+    layout = spec.to_layout(vec_stats)
+    assert set(static_keys.tolist()) == set(
+        np.flatnonzero(layout.key_part == ALWAYS_HIT).tolist()
+    )
+    assert len(static_keys) > 0
+
+
+# ---------------------------------------------------------------------------
+# Admission spec compilation
+# ---------------------------------------------------------------------------
+
+
+def test_admission_spec_mask_and_policy_agree():
+    rng = np.random.default_rng(2)
+    nq, n = 100, 1000
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    log = VecLog(
+        keys=keys,
+        n_train=n // 2,
+        key_topic=np.full(nq, NO_TOPIC, dtype=np.int64),
+        key_terms=rng.integers(1, 9, size=nq),
+        key_chars=rng.integers(1, 30, size=nq),
+    )
+    spec = AdmissionSpec(kind="polluting")
+    mask = spec.to_mask(log)
+    train_freq = np.bincount(log.train_keys, minlength=nq)
+    policy = spec.to_policy(
+        train_freq={k: int(train_freq[k]) for k in range(nq)},
+        n_terms={k: int(log.key_terms[k]) for k in range(nq)},
+        n_chars={k: int(log.key_chars[k]) for k in range(nq)},
+    )
+    for k in range(nq):
+        assert policy.admits(k) == bool(mask[k])
+
+    oracle_mask = AdmissionSpec(kind="singleton_oracle").to_mask(log)
+    oracle = AdmissionSpec(kind="singleton_oracle").to_policy(stream=keys.tolist())
+    for k in range(nq):
+        assert oracle.admits(k) == bool(oracle_mask[k])
+
+    assert AdmissionSpec(kind="all").to_mask(log) is None
+    assert AdmissionSpec(kind="all").to_policy() is None
+
+
+def test_polluting_policy_requires_maps():
+    """An empty polluting filter would reject every key: loud error."""
+    with pytest.raises(ValueError, match="polluting admission needs"):
+        AdmissionSpec(kind="polluting").to_policy()
+
+
+def test_admission_bearing_spec_is_never_silently_admit_all():
+    """Compilers refuse to drop a non-trivial AdmissionSpec on the floor."""
+    rng = np.random.default_rng(6)
+    nq, n = 60, 600
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    log = VecLog(
+        keys=keys,
+        n_train=n // 2,
+        key_topic=np.full(nq, NO_TOPIC, dtype=np.int64),
+        key_terms=rng.integers(1, 9, size=nq),
+        key_chars=rng.integers(1, 30, size=nq),
+    )
+    vec_stats = VecStats.from_log(log)
+    exact_stats = TrainStats.from_stream(keys[: n // 2].tolist(), {})
+    spec = CacheSpec(
+        n_entries=32, admission=AdmissionSpec(kind="polluting"), name="gated"
+    )
+
+    with pytest.raises(ValueError, match="non-trivial AdmissionSpec"):
+        spec.to_layout(vec_stats)
+    with pytest.raises(ValueError, match="non-trivial AdmissionSpec"):
+        spec.to_exact(exact_stats)
+
+    # with the log supplied, the mask is compiled from the spec itself and
+    # the gate actually bites (vs the same structure without admission)
+    layout = spec.to_layout(vec_stats, log=log)
+    open_layout = spec.without_admission().to_layout(vec_stats)
+    gated = analyze(log, layout).hits(layout.capacity)
+    ungated = analyze(log, open_layout).hits(open_layout.capacity)
+    assert gated < ungated
+
+    # and the two engines still agree on the gated configuration
+    policy = spec.admission.to_policy(
+        train_freq={k: int(np.bincount(log.train_keys, minlength=nq)[k]) for k in range(nq)},
+        n_terms={k: int(log.key_terms[k]) for k in range(nq)},
+        n_chars={k: int(log.key_chars[k]) for k in range(nq)},
+    )
+    exact_hits = simulate(
+        spec.without_admission().to_exact(exact_stats),
+        log.test_keys.tolist(),
+        warm_keys=log.train_keys.tolist(),
+        admission=policy,
+    ).hits
+    assert exact_hits == gated
+
+
+def test_from_strategy_accepts_numpy_scalars():
+    """Numpy n / fractions must not poison JSON serialization."""
+    spec = CacheSpec.from_strategy(
+        "STDv_SDC_C2",
+        np.int64(1024),
+        f_s=np.float64(0.25),
+        f_t=np.float32(0.5),
+        f_ts=np.float64(0.5),
+    )
+    assert CacheSpec.from_json(spec.to_json()) == spec
+    assert type(spec.n_entries) is int
+    direct = CacheSpec(n_entries=np.int64(64))
+    assert CacheSpec.from_json(direct.to_json()) == direct
+
+
+# ---------------------------------------------------------------------------
+# simulate(track=True) regression: layer dicts populated for every cache
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_track_populates_layers_non_std():
+    log, vec_stats, exact_stats = synthetic_case(seed=17)
+    test = log.test_keys.tolist()[:500]
+    warm = log.train_keys.tolist()
+
+    # plain LRU: everything is dynamic
+    res = simulate(build_lru(64), test, warm_keys=warm, track=True)
+    assert res.layer_requests["dynamic"] == len(test)
+    assert res.layer_hits["dynamic"] == res.hits
+    assert res.layer_requests["static"] == 0
+
+    # SDC: static + dynamic split, totals consistent
+    sdc = CacheSpec.from_strategy("SDC", 64, f_s=0.5).to_exact(exact_stats)
+    res = simulate(sdc, test, warm_keys=warm, track=True)
+    assert sum(res.layer_requests.values()) == len(test)
+    assert sum(res.layer_hits.values()) == res.hits
+    assert res.layer_requests["static"] > 0
+    assert res.layer_hits["static"] == res.layer_requests["static"]  # S never misses
+
+    # STD: all three layers accounted
+    std = CacheSpec.from_strategy("STDv_LRU", 64, f_s=0.3, f_t=0.5).to_exact(exact_stats)
+    res = simulate(std, test, warm_keys=warm, track=True)
+    assert sum(res.layer_requests.values()) == len(test)
+    assert sum(res.layer_hits.values()) == res.hits
+
+    # track=False keeps returning empty dicts
+    res = simulate(build_lru(64), test, warm_keys=warm, track=False)
+    assert res.layer_hits == {} and res.layer_requests == {}

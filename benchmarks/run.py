@@ -1,15 +1,34 @@
 """Benchmark runner: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks the log
-and size grid (CI-scale, ~2-3 min); the default reproduces the full scaled
-paper grid.  ``--lda`` uses the end-to-end LDA pipeline for topic
-assignment instead of generator-oracle topics (paper-faithful, slower).
+Prints ``name,us_per_call,derived`` CSV rows and mirrors them into a
+machine-readable JSON file (``--json-out``, default ``BENCH_serving.json``)
+mapping name -> {us_per_call, <derived metrics>} so the perf trajectory is
+diffable across PRs.  ``--quick`` shrinks the log and size grid (CI-scale,
+~2-3 min); the default reproduces the full scaled paper grid.  ``--lda``
+uses the end-to-end LDA pipeline for topic assignment instead of
+generator-oracle topics (paper-faithful, slower).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _row_to_json(row: str):
+    """'name,us,k=v;k=v' -> (name, {us_per_call: us, k: v, ...})."""
+    name, us, derived = row.split(",", 2)
+    out = {"us_per_call": float(us)}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return name, out
 
 
 def main() -> None:
@@ -23,6 +42,10 @@ def main() -> None:
     ap.add_argument(
         "--scale", type=float, default=0.6,
         help="stream-size multiplier over the calibrated 1.5M-request log",
+    )
+    ap.add_argument(
+        "--json-out", default="BENCH_serving.json",
+        help="machine-readable mirror of the CSV rows ('' disables)",
     )
     args = ap.parse_args()
 
@@ -51,9 +74,10 @@ def main() -> None:
         # sections actually evict: use the second-smallest size
         ("fig6", lambda: fig6_miss_distance.run(n=sizes[1], scale=min(scale, 0.2))),
         ("fig7", lambda: fig7_fs_sweep.run(sizes[:2], scale=scale)),
-        ("perf", lambda: perf_cache.run() + perf_kernels.run()),
+        ("perf", lambda: perf_cache.run(quick=args.quick) + perf_kernels.run()),
     ]
     print("name,us_per_call,derived")
+    results = {}
     for name, fn in suites:
         if only and name not in only:
             continue
@@ -61,10 +85,16 @@ def main() -> None:
         try:
             for row in fn():
                 print(row, flush=True)
+                row_name, metrics = _row_to_json(row)
+                results[row_name] = metrics
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             raise
         print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},elapsed={time.time()-t0:.1f}s", flush=True)
+    if args.json_out and results:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json_out} ({len(results)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -7,9 +7,17 @@ tiling), ``ops.py`` (jit'd public wrapper with padding & dispatch) and
 * ``topic_score``      -- fused BOW x log-phi matmul + argmax (LDA inference)
 * ``embedding_bag``    -- scalar-prefetch gathered DMA + in-VMEM bag reduce
 * ``decode_attention`` -- GQA flash-decode over the KV cache (online softmax)
+* ``cache_ops``        -- fused probe + conflict-aware batch commit for the
+  device STD cache (segment-tiled replay, VMEM-resident request window)
 """
+from .cache_ops.ops import probe_and_commit_op
 from .decode_attention.ops import decode_attention_op
 from .embedding_bag.ops import embedding_bag_op
 from .topic_score.ops import topic_score_op
 
-__all__ = ["decode_attention_op", "embedding_bag_op", "topic_score_op"]
+__all__ = [
+    "decode_attention_op",
+    "embedding_bag_op",
+    "probe_and_commit_op",
+    "topic_score_op",
+]

@@ -1,0 +1,3 @@
+from .ops import plan_segments, probe_and_commit_op, resolve_conflicts
+
+__all__ = ["plan_segments", "probe_and_commit_op", "resolve_conflicts"]

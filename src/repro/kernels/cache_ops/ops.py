@@ -1,0 +1,199 @@
+"""Public op: conflict-aware fused probe-and-commit with kernel dispatch.
+
+The sequential `STDDeviceCache.commit` replays a batch one request at a
+time (O(B) device steps).  This op reproduces its semantics bit-exactly
+with three data-parallel phases:
+
+1. **plan** -- stable-sort the batch by set index; each run of equal sets
+   is a *segment* whose requests must apply in arrival order;
+2. **resolve** -- gather one row of (key_hi, key_lo, stamp) per segment
+   and replay round j = 0, 1, ... across *all* segments at once: round j
+   applies every segment's j-th request.  The loop runs max-segment-length
+   times, not B times;
+3. **scatter** -- write each resolved row back in a single scatter.
+
+`use_kernel=True` routes phase 2 through the Pallas kernel (interpret=True
+on CPU hosts); otherwise a pure-jnp implementation of the same rounds loop
+runs (the broker's default on CPU).  Values never enter the op: an
+admitted miss's result only exists after the backend replies, so the op
+reports per-request write slots (`wrote`, `way`) and callers apply the
+deferred value fill (``STDDeviceCache.fill_values``) -- last insert per
+slot wins, exactly the order the sequential commit writes them.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conflict_round, probe_and_commit as _kernel_call
+from .ref import probe_and_commit_ref  # noqa: F401  (re-exported for tests)
+
+
+def plan_segments(
+    set_idx: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Describe the per-set conflict structure of a batch.
+
+    Returns ``(order, seg_id, leader, seg_len, seg_set)``: a stable
+    sort permutation grouping equal sets while preserving arrival order,
+    the segment id of each sorted item, and per-segment (padded to B with
+    ``leader == B`` / ``seg_len == 0``) first-item index, length and set.
+    """
+    b = set_idx.shape[0]
+    order = jnp.argsort(set_idx)  # jnp.argsort is stable: ties keep arrival order
+    sset = set_idx[order]
+    start = jnp.concatenate([jnp.ones((1,), bool), sset[1:] != sset[:-1]])
+    seg_id = jnp.cumsum(start) - 1
+    arange = jnp.arange(b, dtype=jnp.int32)
+    leader = jnp.full((b,), b, jnp.int32).at[seg_id].min(arange)
+    seg_len = jnp.zeros((b,), jnp.int32).at[seg_id].add(1)
+    seg_set = sset[jnp.minimum(leader, b - 1)]  # padded slots repeat the last set
+    return order, seg_id, leader, seg_len, seg_set
+
+
+def resolve_conflicts(
+    rows_hi: jnp.ndarray,  # (B, W) one pristine row per segment
+    rows_lo: jnp.ndarray,
+    rows_st: jnp.ndarray,
+    s_hi: jnp.ndarray,  # (B,) sorted request fields
+    s_lo: jnp.ndarray,
+    s_pos: jnp.ndarray,  # original batch positions (stamps follow arrival)
+    s_admit: jnp.ndarray,
+    s_static: jnp.ndarray,
+    leader: jnp.ndarray,
+    seg_len: jnp.ndarray,
+    clock: jnp.ndarray,
+):
+    """Pure-jnp rounds loop: replay round j across all segments at once.
+
+    Bit-exact with the sequential fori_loop commit: within a segment the
+    evolving row sees exactly the same match / argmin-eviction / stamp
+    sequence, and segments never share a set so rounds are independent.
+    """
+    b = rows_hi.shape[0]
+
+    def body(j, carry):
+        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = carry
+        idx = jnp.minimum(leader + j, b - 1)
+        act = j < seg_len
+        hi_i = s_hi[idx]
+        lo_i = s_lo[idx]
+        admit_i = s_admit[idx]
+        static_i = s_static[idx]
+        pos_i = s_pos[idx]
+        pm = (rows_hi == hi_i[:, None]) & (rows_lo == lo_i[:, None]) & (rows_hi != 0)
+        r_hi, r_lo, r_st, is_hit, way, do_write = conflict_round(
+            r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, clock + 1 + pos_i, act
+        )
+        tgt = jnp.where(act, idx, b)
+        p_hit = p_hit.at[tgt].set(pm.any(axis=1), mode="drop")
+        p_way = p_way.at[tgt].set(jnp.argmax(pm, axis=1).astype(jnp.int32), mode="drop")
+        wr = wr.at[tgt].set(do_write & ~is_hit, mode="drop")
+        wy = wy.at[tgt].set(way, mode="drop")
+        return r_hi, r_lo, r_st, p_hit, p_way, wr, wy
+
+    init = (
+        rows_hi,
+        rows_lo,
+        rows_st,
+        jnp.zeros(b, bool),
+        jnp.zeros(b, jnp.int32),
+        jnp.zeros(b, bool),
+        jnp.zeros(b, jnp.int32),
+    )
+    return jax.lax.fori_loop(0, jnp.max(seg_len), body, init)
+
+
+def _pad(x: jnp.ndarray, target: int, value=0):
+    if x.shape[0] == target:
+        return x
+    pad = [(0, target - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def probe_and_commit_op(
+    key_hi: jnp.ndarray,  # (S, W) uint32 cache state
+    key_lo: jnp.ndarray,
+    stamp: jnp.ndarray,  # (S, W) int32
+    h_hi: jnp.ndarray,  # (B,) uint32 request hashes
+    h_lo: jnp.ndarray,
+    set_idx: jnp.ndarray,  # (B,) int32
+    admit: jnp.ndarray,  # (B,) bool
+    static_hit: jnp.ndarray,  # (B,) bool (static-layer hits never write)
+    clock: jnp.ndarray,  # () int32
+    use_kernel: bool = False,
+    interpret: bool = True,
+    bm: int = 256,
+) -> Dict[str, jnp.ndarray]:
+    """Fused probe + batch commit over raw state arrays.
+
+    Returns the updated ``key_hi``/``key_lo``/``stamp`` plus, per request
+    (original batch order): ``pre_hit``/``pre_way`` -- the probe outcome
+    against pre-commit state, and ``wrote``/``way`` -- the deferred value
+    fill plan.  The caller owns the clock bump and value scatter.
+    """
+    b = h_hi.shape[0]
+    if b == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return dict(
+            key_hi=key_hi, key_lo=key_lo, stamp=stamp,
+            pre_hit=jnp.zeros((0,), bool), pre_way=z,
+            wrote=jnp.zeros((0,), bool), way=z,
+        )
+    order, seg_id, leader, seg_len, seg_set = plan_segments(set_idx)
+    rows_hi = key_hi[seg_set]  # out-of-range sets clamp, matching jnp gathers
+    rows_lo = key_lo[seg_set]
+    rows_st = stamp[seg_set]
+    s_hi, s_lo = h_hi[order], h_lo[order]
+    s_pos = order.astype(jnp.int32)
+    s_admit, s_static = admit[order], static_hit[order]
+
+    if use_kernel:
+        bp = ((b + bm - 1) // bm) * bm if b > bm else b
+        col = lambda x: _pad(x, bp)[:, None]
+        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = _kernel_call(
+            _pad(rows_hi, bp),
+            _pad(rows_lo, bp),
+            _pad(rows_st, bp),
+            col(leader),
+            col(seg_len),
+            col(s_hi),
+            col(s_lo),
+            col(s_pos),
+            col(s_admit.astype(jnp.int32)),
+            col(s_static.astype(jnp.int32)),
+            jnp.reshape(clock.astype(jnp.int32), (1, 1)),
+            bm=bm,
+            interpret=interpret,
+        )
+        r_hi, r_lo, r_st = r_hi[:b], r_lo[:b], r_st[:b]
+        p_hit = p_hit[:b, 0] != 0
+        p_way = p_way[:b, 0]
+        wr = wr[:b, 0] != 0
+        wy = wy[:b, 0]
+    else:
+        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = resolve_conflicts(
+            rows_hi, rows_lo, rows_st, s_hi, s_lo, s_pos,
+            s_admit, s_static, leader, seg_len, clock,
+        )
+
+    # single scatter of the resolved rows; padded segments drop
+    scat = jnp.where(leader < b, seg_set, key_hi.shape[0])
+    new_hi = key_hi.at[scat].set(r_hi, mode="drop")
+    new_lo = key_lo.at[scat].set(r_lo, mode="drop")
+    new_st = stamp.at[scat].set(r_st, mode="drop")
+
+    def unsort(x):
+        return jnp.zeros(x.shape, x.dtype).at[order].set(x)
+
+    return dict(
+        key_hi=new_hi,
+        key_lo=new_lo,
+        stamp=new_st,
+        pre_hit=unsort(p_hit),
+        pre_way=unsort(p_way),
+        wrote=unsort(wr),
+        way=unsort(wy),
+    )

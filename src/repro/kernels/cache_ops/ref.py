@@ -1,0 +1,64 @@
+"""Sequential numpy oracle for the fused probe-and-commit op.
+
+Mirrors ``STDDeviceCache.commit``'s fori_loop semantics one request at a
+time, additionally recording the probe outcome against the pre-commit
+state (the broker's "atomic batch probe") and, per request, whether it
+inserted and into which way -- the information the deferred value fill
+needs.  Values are deliberately out of scope: an admitted miss's result
+does not exist at probe time (it comes back from the backend later), so
+the op only moves keys and stamps; callers scatter values afterwards.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def probe_and_commit_ref(
+    key_hi: np.ndarray,  # (S, W) uint32
+    key_lo: np.ndarray,  # (S, W) uint32
+    stamp: np.ndarray,  # (S, W) int32
+    h_hi: np.ndarray,  # (B,) uint32
+    h_lo: np.ndarray,  # (B,) uint32
+    set_idx: np.ndarray,  # (B,) int32
+    admit: np.ndarray,  # (B,) bool
+    static_hit: np.ndarray,  # (B,) bool
+    clock: int,
+) -> Dict[str, np.ndarray]:
+    key_hi = np.array(key_hi, np.uint32)
+    key_lo = np.array(key_lo, np.uint32)
+    stamp = np.array(stamp, np.int32)
+    pre_hi, pre_lo = key_hi.copy(), key_lo.copy()
+    s_max = key_hi.shape[0] - 1
+    b = len(h_hi)
+    pre_hit = np.zeros(b, bool)
+    pre_way = np.zeros(b, np.int32)
+    wrote = np.zeros(b, bool)
+    way_w = np.zeros(b, np.int32)
+    clock = int(clock)
+    for i in range(b):
+        s = min(int(set_idx[i]), s_max)  # jnp gathers clamp; scatters drop
+        oob = int(set_idx[i]) > s_max
+        pm = (pre_hi[s] == h_hi[i]) & (pre_lo[s] == h_lo[i]) & (pre_hi[s] != 0)
+        pre_hit[i] = pm.any()
+        pre_way[i] = int(pm.argmax())
+        m = (key_hi[s] == h_hi[i]) & (key_lo[s] == h_lo[i]) & (key_hi[s] != 0)
+        is_hit = bool(m.any())
+        way = int(m.argmax()) if is_hit else int(stamp[s].argmin())
+        do_write = (not static_hit[i]) and (is_hit or bool(admit[i]))
+        if do_write and not oob:
+            key_hi[s, way] = h_hi[i]
+            key_lo[s, way] = h_lo[i]
+            stamp[s, way] = clock + 1 + i
+        wrote[i] = do_write and not is_hit
+        way_w[i] = way
+    return dict(
+        key_hi=key_hi,
+        key_lo=key_lo,
+        stamp=stamp,
+        pre_hit=pre_hit,
+        pre_way=pre_way,
+        wrote=wrote,
+        way=way_w,
+    )

@@ -4,11 +4,17 @@ The broker owns the device-resident STD cache and a set of backend
 executors (model shards).  Per batch:
 
 1. hash + topic-route every query,
-2. parallel cache probe; hits are answered immediately,
-3. misses run through the admission policy and are dispatched to a
-   backend in micro-batches with **hedged requests** (a straggling
-   micro-batch is re-dispatched to a backup executor; first result wins),
-4. results are committed to the cache (exact LRU order) and returned.
+2. one fused probe-and-commit device call (repro.kernels.cache_ops):
+   hits are answered immediately and every cache write -- hit refreshes
+   and admitted-miss inserts -- lands in the same call, in arrival order,
+3. misses are dispatched to a backend in micro-batches with **hedged
+   requests** (a straggling micro-batch is re-dispatched to a backup
+   executor; first result wins),
+4. backend results are scattered into the slots the fused call reserved
+   (deferred value fill) and returned.
+
+``fused=False`` restores the PR-1 three-call path (probe, miss commit,
+hit-refresh commit), now running on the vectorized batch commit.
 
 Fault tolerance: `checkpoint` / `restore` snapshot the full cache state
 atomically (repro.train.checkpoint); a broker can restart mid-stream and
@@ -17,6 +23,7 @@ continue with its hit rate intact -- exercised by tests.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -70,6 +77,9 @@ class Broker:
         microbatch: int = 256,
         coalesce: bool = True,
         spec: Optional[CacheSpec] = None,
+        fused: bool = True,
+        use_kernel: bool = False,
+        engine: str = "auto",
     ):
         self.cache = cache
         #: declarative configuration this cache was compiled from (embedded
@@ -92,9 +102,29 @@ class Broker:
         #: are dispatched to the backend only once (the duplicates are
         #: answered from the first result)
         self.coalesce = coalesce
+        #: serve through the fused probe-and-commit path (one device call
+        #: for a fully-hit batch); ``use_kernel`` routes the conflict
+        #: resolution through the Pallas kernel (interpret on CPU hosts)
+        self.fused = fused
+        if engine == "auto":
+            # XLA CPU prices batch scatters/sorts far above numpy's native
+            # ones; on accelerators the jnp/Pallas engines win
+            engine = "device" if (use_kernel or jax.default_backend() != "cpu") else "host"
+        if engine not in ("host", "device"):
+            raise ValueError(f"engine must be auto|host|device, got {engine!r}")
+        self.engine = engine
         self.stats = BrokerStats()
         self._probe = jax.jit(cache.probe)
-        self._commit = jax.jit(cache.commit)
+        self._commit = jax.jit(cache.commit_vectorized)
+        self._fused_step = jax.jit(
+            functools.partial(
+                cache.probe_and_commit,
+                use_kernel=use_kernel,
+                # compile the kernel on real accelerators; emulate on CPU
+                interpret=jax.default_backend() == "cpu",
+            )
+        )
+        self._fill = jax.jit(cache.fill_values)
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
 
     # -- serving -------------------------------------------------------------
@@ -107,12 +137,22 @@ class Broker:
         (both go to the backend).  Sequential (batch=1) serving matches the
         trace simulator request-for-request; production deployments would
         add in-flight request coalescing on top.
+
+        The fused path makes a fully-hit batch a single device round-trip
+        (probe + refresh in one call) and a batch with misses exactly two
+        (plus the backend): the fused call additionally reserves insert
+        slots, and the backend's results are scattered into them once they
+        exist.  The admission policy therefore runs *before* the probe,
+        over the whole batch (it must be a pure function of the query
+        ids); only its decisions on missed queries have any effect.
         """
         b = len(query_ids)
         topics = self.topic_of(query_ids)
         parts = self.cache.parts_for(topics)
         h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
+        if self.fused:
+            return self._serve_fused(query_ids, parts, h_hi, h_lo)
         hit, layer, value = self._probe(
             self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts)
         )
@@ -159,6 +199,58 @@ class Broker:
         # layer is 0/1 only on hits (misses are -1), but mask with `hit`
         # anyway so both counters stay correct if the probe's layer
         # convention ever changes
+        self.stats.static_hits += int(((layer == 0) & hit).sum())
+        self.stats.topic_hits += int(((layer == 1) & hit).sum())
+        return values, hit
+
+    def _serve_fused(self, query_ids, parts, h_hi, h_lo) -> Tuple[np.ndarray, np.ndarray]:
+        b = len(query_ids)
+        admit = (
+            np.asarray(self.admission(query_ids), bool)
+            if self.admission is not None
+            else np.ones(b, bool)
+        )
+        if self.engine == "host":
+            # the broker owns its state: the previous batch's arrays are
+            # consumed in place (the host-engine analogue of jit donation)
+            hit, layer, value, self.state, (set_idx, wrote, way) = (
+                self.cache.probe_and_commit_host(
+                    self.state, h_hi, h_lo, parts, admit, inplace=True
+                )
+            )
+        else:
+            hit, layer, value, self.state, (set_idx, wrote, way) = self._fused_step(
+                self.state,
+                jnp.asarray(h_hi),
+                jnp.asarray(h_lo),
+                jnp.asarray(parts),
+                jnp.asarray(admit),
+            )
+        hit = np.asarray(hit)
+        layer = np.asarray(layer)
+        values = np.array(value)  # writable copy
+        miss_idx = np.flatnonzero(~hit)
+        if len(miss_idx):
+            if self.coalesce:
+                uniq, inverse = np.unique(query_ids[miss_idx], return_inverse=True)
+                self.stats.coalesced += len(miss_idx) - len(uniq)
+                values[miss_idx] = self._dispatch(uniq)[inverse]
+            else:
+                values[miss_idx] = self._dispatch(query_ids[miss_idx])
+            self.stats.admitted += int(admit[miss_idx].sum())
+        # deferred fill: scatter results into the slots the fused call
+        # reserved (hit refreshes kept their values; only inserts write)
+        if bool(np.asarray(wrote).any()):
+            if self.engine == "host":
+                self.state = self.cache.fill_values_host(
+                    self.state, set_idx, wrote, way, values, inplace=True
+                )
+            else:
+                self.state = self._fill(
+                    self.state, set_idx, wrote, way, jnp.asarray(values)
+                )
+        self.stats.requests += b
+        self.stats.hits += int(hit.sum())
         self.stats.static_hits += int(((layer == 0) & hit).sum())
         self.stats.topic_hits += int(((layer == 1) & hit).sum())
         return values, hit

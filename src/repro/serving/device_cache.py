@@ -12,12 +12,16 @@ sized by the paper's proportional allocation; the dynamic cache is
 partition k; the static cache is a sorted hash array probed by vectorized
 lexicographic binary search (read-only, refreshed offline).
 
-Probes are fully parallel (gather + compare); updates serialize within a
-batch via `lax.fori_loop` to preserve exact LRU semantics under set
-conflicts (the Pallas kernel in repro/kernels mirrors the probe path).
-Because partitions are independent, sharding the set axis across devices
-creates zero cross-device traffic beyond routing -- the paper's own design
-choice is what makes the cache scale out.
+Probes are fully parallel (gather + compare).  Updates come in two
+flavors: `commit` serializes within a batch via `lax.fori_loop` (the
+reference semantics, kept as the oracle), and `commit_vectorized` /
+`probe_and_commit` resolve within-batch set conflicts with a sort +
+segmented replay whose sequential depth is the deepest set conflict, not
+the batch size (see repro.kernels.cache_ops) -- bit-exact with the
+oracle, property-tested.  Because partitions are independent, sharding
+the set axis across devices creates zero cross-device traffic beyond
+routing -- the paper's own design choice is what makes the cache scale
+out.  See docs/device_cache.md.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.alloc import proportional_allocation
+from ..kernels.cache_ops.ops import probe_and_commit_op
 
 DYNAMIC = -1  # callers pass topic=-1 for no-topic queries
 
@@ -45,6 +50,34 @@ def splitmix64(x: np.ndarray) -> np.ndarray:
 
 def pack_hashes(h64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return (h64 >> np.uint64(32)).astype(np.uint32), (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def _sequential_replay(key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit, clock):
+    """The oracle commit's fori_loop, additionally emitting the per-request
+    write plan (wrote, way) the deferred value fill needs.  Fallback engine
+    for conflict depths where round-based replay degenerates."""
+    b = h_hi.shape[0]
+
+    def body(i, st):
+        key_hi, key_lo, stamp, wrote, way_out = st
+        s = set_idx[i]
+        row_hi = key_hi[s]
+        row_lo = key_lo[s]
+        match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0)
+        is_hit = match.any()
+        way = jnp.where(match.any(), jnp.argmax(match), jnp.argmin(stamp[s]))
+        do_write = (~static_hit[i]) & (is_hit | admit[i])
+        key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
+        key_lo = key_lo.at[s, way].set(jnp.where(do_write, h_lo[i], key_lo[s, way]))
+        stamp = stamp.at[s, way].set(jnp.where(do_write, clock + 1 + i, stamp[s, way]))
+        wrote = wrote.at[i].set(do_write & ~is_hit)
+        way_out = way_out.at[i].set(way.astype(jnp.int32))
+        return key_hi, key_lo, stamp, wrote, way_out
+
+    return jax.lax.fori_loop(
+        0, b, body,
+        (key_hi, key_lo, stamp, jnp.zeros(b, bool), jnp.zeros(b, jnp.int32)),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +149,22 @@ class STDDeviceCache:
         self.n_sets = int(self.part_offset[-1])
         #: topic id -> partition index (dynamic = k)
         self.part_of_topic = {t: i for i, t in enumerate(topics)}
+        # dense topic -> partition lookup for host routing (parts_for runs
+        # on every batch); topics whose partition got zero sets fall
+        # through to the dynamic cache at build time, not per batch.
+        # Sparse/huge topic-id spans keep the per-topic loop instead of a
+        # multi-GB dense table.
+        self._part_lut = None
+        self._lut_base = 0
+        if topics and int(topics[-1]) - int(topics[0]) < (1 << 20):
+            self._lut_base = int(topics[0])  # topics is sorted
+            lut = np.full(int(topics[-1]) - self._lut_base + 1, self.k, np.int32)
+            for t, i in self.part_of_topic.items():
+                lut[t - self._lut_base] = i if self.part_sets[i] > 0 else self.k
+            self._part_lut = lut
+        #: memoized packed static table for the host engine (read-only
+        #: layer: rebuild only when a restore swaps the arrays)
+        self._static_memo: Tuple[Any, Optional[np.ndarray]] = (None, None)
 
         if static_hashes is not None and len(static_hashes):
             order = np.argsort(static_hashes.astype(np.uint64))
@@ -169,13 +218,17 @@ class STDDeviceCache:
 
     def parts_for(self, topics: np.ndarray) -> np.ndarray:
         """topic ids (host) -> partition indices (dynamic cache = k)."""
-        out = np.full(len(topics), self.k, dtype=np.int32)
-        for t, i in self.part_of_topic.items():
-            out[topics == t] = i
-        # topics whose partition got zero sets fall through to dynamic
-        zero = self.part_sets[out] == 0
-        out[zero] = self.k
-        return out
+        if self._part_lut is None:  # sparse-id fallback
+            out = np.full(len(topics), self.k, dtype=np.int32)
+            for t, i in self.part_of_topic.items():
+                if self.part_sets[i] > 0:
+                    out[np.asarray(topics) == t] = i
+            return out
+        idx = np.asarray(topics, np.int64) - self._lut_base
+        ok = (idx >= 0) & (idx < len(self._part_lut))
+        return np.where(
+            ok, self._part_lut[np.clip(idx, 0, len(self._part_lut) - 1)], self.k
+        ).astype(np.int32)
 
     # -- jittable ops -------------------------------------------------------
 
@@ -276,6 +329,300 @@ class STDDeviceCache:
         )
         return out
 
+    def commit_vectorized(
+        self, state, h_hi, h_lo, part, values, admit,
+        use_kernel: bool = False, interpret: bool = True,
+    ):
+        """Conflict-aware batch commit, bit-exact with :meth:`commit`.
+
+        The batch is stable-sorted by set index, within-batch conflicts
+        are resolved by replaying each set's requests round-by-round
+        (sequential depth = deepest conflict, not batch size), and the
+        result lands in one gather/compute/scatter.  Values are applied
+        by the deferred fill (:meth:`fill_values`): last insert per slot
+        wins, which is exactly the order the fori_loop writes them.
+        """
+        b = h_hi.shape[0]
+        if b == 0:
+            return dict(state)
+        static_hit, _ = self.static_lookup(state, h_hi, h_lo)
+        set_idx = self._set_index(h_lo, part)
+        out = probe_and_commit_op(
+            state["key_hi"], state["key_lo"], state["stamp"],
+            h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        new = dict(state)
+        new.update(
+            key_hi=out["key_hi"], key_lo=out["key_lo"], stamp=out["stamp"],
+            clock=state["clock"] + b,
+        )
+        return self.fill_values(new, set_idx, out["wrote"], out["way"], values)
+
+    def probe_and_commit(
+        self, state, h_hi, h_lo, part, admit,
+        use_kernel: bool = False, interpret: bool = True,
+    ):
+        """Fused serve step: probe + key/stamp commit in one device call.
+
+        Returns ``(hit, layer, value, new_state, (set_idx, wrote, way))``.
+        ``hit``/``layer``/``value`` are identical to :meth:`probe` against
+        the pre-commit state (atomic batch probe); the commit replays the
+        batch in arrival order like :meth:`commit` with one twist forced
+        by causality: an admitted miss's value does not exist yet (the
+        backend produces it after the probe), so inserts land keys and
+        stamps now and the caller scatters values afterwards via
+        :meth:`fill_values` with the returned ``(set_idx, wrote, way)``.
+        """
+        b = h_hi.shape[0]
+        static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
+        set_idx = self._set_index(h_lo, part)
+        out = probe_and_commit_op(
+            state["key_hi"], state["key_lo"], state["stamp"],
+            h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            use_kernel=use_kernel, interpret=interpret,
+        )
+        value = state["value"][set_idx, out["pre_way"]]
+        if state["static_value"].shape[0]:
+            value = jnp.where(
+                static_hit[:, None], state["static_value"][static_idx], value
+            )
+        hit = static_hit | out["pre_hit"]
+        layer = jnp.where(static_hit, 0, jnp.where(out["pre_hit"], 1, -1))
+        new = dict(state)
+        new.update(
+            key_hi=out["key_hi"], key_lo=out["key_lo"], stamp=out["stamp"],
+            clock=state["clock"] + b,
+        )
+        return hit, layer, value, new, (set_idx, out["wrote"], out["way"])
+
+    def fill_values(self, state, set_idx, wrote, way, values):
+        """Deferred value fill for inserts reported by the fused commit.
+
+        Scatters ``values[i]`` into slot ``(set_idx[i], way[i])`` for every
+        request with ``wrote[i]``, resolving slot collisions to the last
+        writer in batch order -- the value the sequential commit would
+        have left behind.
+        """
+        w = state["value"].shape[1]
+        nslots = state["value"].shape[0] * w
+        b = set_idx.shape[0]
+        slot = jnp.where(wrote, set_idx * w + way, nslots)
+        pos = jnp.arange(b, dtype=jnp.int32)
+        last = jnp.full((nslots,), -1, jnp.int32).at[slot].max(pos, mode="drop")
+        winner = wrote & (last[jnp.minimum(slot, nslots - 1)] == pos)
+        flat = state["value"].reshape(nslots, -1)
+        flat = flat.at[jnp.where(winner, slot, nslots)].set(values, mode="drop")
+        out = dict(state)
+        out["value"] = flat.reshape(state["value"].shape)
+        return out
+
+    # -- host engine --------------------------------------------------------
+    #
+    # The same conflict-aware algorithm (stable sort by set, round-by-round
+    # segmented replay, gather/compute/scatter), executed by numpy.  On CPU
+    # backends XLA prices a B-index scatter at ~170ns/index and a stable
+    # argsort at ~1.4ms (B=4096), so the jnp vectorized path cannot beat
+    # the compiled fori_loop; numpy's native sort (~0.1ms) and fancy
+    # scatter (~10us) can, by an order of magnitude.  The broker picks
+    # this engine automatically when jax's default backend is "cpu"; on
+    # accelerators the jnp/Pallas paths run.  Bit-exact with `commit`
+    # (shared property tests).
+
+    def _set_index_host(self, h_lo: np.ndarray, part: np.ndarray) -> np.ndarray:
+        n_sets = self.part_sets[part]
+        off = self.part_offset[part]  # offsets: first k+1 entries of the cumsum
+        mod = np.maximum(n_sets.astype(np.uint32), 1)
+        return (off + (h_lo.astype(np.uint32) % mod).astype(np.int32)).astype(np.int32)
+
+    def static_lookup_host(self, state, h_hi: np.ndarray, h_lo: np.ndarray):
+        src = state["static_hi"]
+        if self._static_memo[0] is src:
+            table = self._static_memo[1]
+        else:  # read-only layer: packed once, rebuilt only after a restore
+            s_hi = np.asarray(src, np.uint64)
+            s_lo = np.asarray(state["static_lo"], np.uint64)
+            table = (s_hi << np.uint64(32)) | s_lo
+            self._static_memo = (src, table)
+        if table.shape[0] == 0:
+            z = np.zeros(h_hi.shape, np.int32)
+            return np.zeros(h_hi.shape, bool), z
+        q = (h_hi.astype(np.uint64) << np.uint64(32)) | h_lo.astype(np.uint64)
+        idx = np.searchsorted(table, q)
+        idx = np.minimum(idx, len(table) - 1).astype(np.int32)
+        return table[idx] == q, idx
+
+    def _resolve_host(
+        self, key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit,
+        clock, depth_limit: Optional[int] = None,
+    ):
+        """Segmented replay on host arrays; mutates key/stamp arrays in place.
+
+        Round j applies every set's j-th request, narrowed to the items
+        still active -- total work is O(B * W), and the sort is numpy's.
+        Returns the per-request write plan for the deferred value fill, or
+        ``None`` (before touching the arrays) when the conflict depth
+        exceeds ``depth_limit``.
+        """
+        b = len(h_hi)
+        if b == 0:
+            return np.zeros(0, bool), np.zeros(0, np.int32)
+        s_max = key_hi.shape[0] - 1
+        sc = np.minimum(set_idx, s_max)  # jnp gathers clamp ...
+        oob = set_idx > s_max  # ... and scatters drop
+        # 16-bit radix argsort when set indices fit (they do until the
+        # cache crosses 65k sets / ~0.5M entries per host)
+        sort_key = sc.astype(np.uint16) if s_max < 0xFFFF else sc
+        order = np.argsort(sort_key, kind="stable")
+        ss_c = sc[order]
+        start = np.empty(b, bool)
+        start[0] = True
+        start[1:] = ss_c[1:] != ss_c[:-1]
+        ar = np.arange(b)
+        rank = ar - np.maximum.accumulate(np.where(start, ar, 0))
+        depth = int(rank.max()) + 1 if b else 0
+        if depth_limit is not None and depth > depth_limit:
+            return None
+        wrote = np.zeros(b, bool)
+        way_out = np.zeros(b, np.int32)
+        clock = np.int32(clock)
+        for j in range(depth):
+            i = order[np.flatnonzero(rank == j)]  # round j, arrival order kept
+            s = sc[i]
+            rh, rl, rst = key_hi[s], key_lo[s], stamp[s]
+            m = (rh == h_hi[i][:, None]) & (rl == h_lo[i][:, None]) & (rh != 0)
+            # one reduction finds both outcomes: a match outranks every
+            # stamp (stamps are >= 0), else the LRU way wins; ties keep
+            # the first index exactly like the oracle's argmin/argmax
+            prio = np.where(m, np.int32(-1), rst)
+            way = prio.argmin(axis=1).astype(np.int32)
+            is_hit = prio[np.arange(len(i)), way] == -1
+            do_write = ~static_hit[i] & (is_hit | admit[i]) & ~oob[i]
+            w = np.flatnonzero(do_write)
+            key_hi[s[w], way[w]] = h_hi[i[w]]
+            key_lo[s[w], way[w]] = h_lo[i[w]]
+            stamp[s[w], way[w]] = (clock + 1 + i[w]).astype(np.int32)
+            wrote[i] = do_write & ~is_hit
+            way_out[i] = way
+        return wrote, way_out
+
+    @staticmethod
+    def _own(arr, dtype, inplace: bool) -> np.ndarray:
+        """A writable numpy array for ``arr``: in place when the caller owns
+        the state (the serving contract ``state = commit(state, ...)``
+        consumes the old state, like jit donation), a copy otherwise."""
+        a = np.asarray(arr, dtype)
+        if inplace and isinstance(arr, np.ndarray) and a.flags.writeable:
+            return a
+        return np.array(a)
+
+    #: conflict depths past this dispatch to the fori_loop oracle -- the
+    #: replay is sequential by data dependency there, and the compiled
+    #: loop beats b python-level rounds
+    HOST_DEPTH_LIMIT = 64
+
+    def commit_host(self, state, h_hi, h_lo, part, values, admit, inplace: bool = False):
+        """Numpy engine for :meth:`commit_vectorized`; bit-exact with both.
+
+        Batches whose deepest set conflict exceeds ``HOST_DEPTH_LIMIT``
+        are handed to the jitted sequential oracle: past that depth the
+        replay is inherently sequential and the compiled loop wins.
+        """
+        h_hi, h_lo = np.asarray(h_hi), np.asarray(h_lo)
+        b = len(h_hi)
+        out = dict(state)
+        out["clock"] = np.int32(state["clock"]) + np.int32(b)
+        if b == 0:
+            return out
+        static_hit, _ = self.static_lookup_host(state, h_hi, h_lo)
+        set_idx = self._set_index_host(h_lo, np.asarray(part))
+        key_hi = self._own(state["key_hi"], np.uint32, inplace)
+        key_lo = self._own(state["key_lo"], np.uint32, inplace)
+        stamp = self._own(state["stamp"], np.int32, inplace)
+        plan = self._resolve_host(
+            key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
+            static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
+        )
+        if plan is None:  # pathological depth: sequential oracle
+            if not hasattr(self, "_oracle_jit"):
+                self._oracle_jit = jax.jit(self.commit)
+            return self._oracle_jit(
+                {k: jnp.asarray(v) for k, v in state.items()},
+                jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(part),
+                jnp.asarray(values), jnp.asarray(admit),
+            )
+        wrote, way = plan
+        value = self._own(state["value"], np.int32, inplace)
+        w = np.flatnonzero(wrote & (set_idx <= key_hi.shape[0] - 1))
+        value[set_idx[w], way[w]] = np.asarray(values)[w]  # in order: last insert wins
+        out.update(key_hi=key_hi, key_lo=key_lo, stamp=stamp, value=value)
+        return out
+
+    def probe_and_commit_host(self, state, h_hi, h_lo, part, admit, inplace: bool = False):
+        """Numpy engine for :meth:`probe_and_commit`: same contract, no jit.
+
+        Everything runs on host arrays -- the CPU serving fast path.  The
+        returned state holds numpy arrays (zero-copy for the next host
+        call; ``jnp.asarray`` on demand for checkpointing).
+        """
+        h_hi, h_lo = np.asarray(h_hi), np.asarray(h_lo)
+        b = len(h_hi)
+        static_hit, static_idx = self.static_lookup_host(state, h_hi, h_lo)
+        set_idx = self._set_index_host(h_lo, np.asarray(part))
+        s_max = np.asarray(state["key_hi"]).shape[0] - 1
+        sc = np.minimum(set_idx, s_max)
+        pre_rh = np.asarray(state["key_hi"])[sc]
+        pre_rl = np.asarray(state["key_lo"])[sc]
+        pm = (pre_rh == h_hi[:, None]) & (pre_rl == h_lo[:, None]) & (pre_rh != 0)
+        pre_hit = pm.any(axis=1)
+        pre_way = pm.argmax(axis=1).astype(np.int32)
+        value = np.asarray(state["value"])[sc, pre_way]
+        if np.asarray(state["static_value"]).shape[0]:
+            value = np.where(
+                static_hit[:, None], np.asarray(state["static_value"])[static_idx], value
+            )
+        key_hi = self._own(state["key_hi"], np.uint32, inplace)
+        key_lo = self._own(state["key_lo"], np.uint32, inplace)
+        stamp = self._own(state["stamp"], np.int32, inplace)
+        plan = self._resolve_host(
+            key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
+            static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
+        )
+        if plan is None:
+            # pathological conflict depth (skewed traffic flooding one
+            # set): the replay is sequential by data dependency, so run
+            # the compiled per-request loop, which also emits the plan
+            if not hasattr(self, "_fused_seq_jit"):
+                self._fused_seq_jit = jax.jit(_sequential_replay)
+            r_hi, r_lo, r_st, wrote, way = self._fused_seq_jit(
+                jnp.asarray(state["key_hi"]), jnp.asarray(state["key_lo"]),
+                jnp.asarray(state["stamp"]), jnp.asarray(h_hi), jnp.asarray(h_lo),
+                jnp.asarray(set_idx), jnp.asarray(admit), jnp.asarray(static_hit),
+                jnp.asarray(state["clock"]),
+            )
+            key_hi = np.asarray(r_hi)
+            key_lo = np.asarray(r_lo)
+            stamp = np.asarray(r_st)
+            wrote, way = np.asarray(wrote), np.asarray(way)
+        else:
+            wrote, way = plan
+        hit = static_hit | pre_hit
+        layer = np.where(static_hit, 0, np.where(pre_hit, 1, -1)).astype(np.int32)
+        new = dict(state)
+        new.update(
+            key_hi=key_hi, key_lo=key_lo, stamp=stamp,
+            clock=np.int32(state["clock"]) + np.int32(b),
+        )
+        return hit, layer, value, new, (set_idx, wrote, way)
+
+    def fill_values_host(self, state, set_idx, wrote, way, values, inplace: bool = False):
+        value = self._own(state["value"], np.int32, inplace)
+        w = np.flatnonzero(np.asarray(wrote) & (set_idx <= value.shape[0] - 1))
+        value[set_idx[w], np.asarray(way)[w]] = np.asarray(values)[w]
+        out = dict(state)
+        out["value"] = value
+        return out
+
     # -- elastic re-partitioning -------------------------------------------
 
     def repartition(self, state, new_cfg: DeviceCacheConfig) -> Tuple["STDDeviceCache", Any]:
@@ -307,7 +654,7 @@ class STDDeviceCache:
         lo = jnp.asarray((h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
         vals = jnp.asarray(value[sets_l, ways_l])
         admit = jnp.ones(len(parts), bool)
-        new_state = new_cache.commit(
+        new_state = new_cache.commit_vectorized(
             new_state, hi, lo, jnp.asarray(new_parts), vals, admit
         )
         return new_cache, new_state

@@ -1,0 +1,265 @@
+"""Vectorized / Pallas batch commit vs the sequential fori_loop oracle.
+
+The sequential `STDDeviceCache.commit` is the reference semantics; the
+conflict-aware vectorized commit and the fused Pallas kernel (interpret
+mode on CPU) must reproduce its final state bit-for-bit -- including
+stamps and the deferred value fill -- under forced set conflicts,
+duplicate keys, mixed admission and static hits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import NO_TOPIC, LRUCache, STDCache
+from repro.kernels.cache_ops import probe_and_commit_op
+from repro.kernels.cache_ops.ref import probe_and_commit_ref
+from repro.serving import (
+    Broker,
+    DeviceCacheConfig,
+    STDDeviceCache,
+    pack_hashes,
+    splitmix64,
+)
+
+STATE_KEYS = ("key_hi", "key_lo", "stamp", "value", "clock")
+
+
+def _cache(n_sets_scale=1, ways=4, value_dim=2, static=(3, 4)):
+    cfg = DeviceCacheConfig(
+        total_entries=64 * n_sets_scale,
+        ways=ways,
+        value_dim=value_dim,
+        topic_entries={0: 16 * n_sets_scale, 1: 16 * n_sets_scale},
+        dynamic_entries=32 * n_sets_scale,
+    )
+    return STDDeviceCache(
+        cfg,
+        static_hashes=splitmix64(np.array(static)) if static else None,
+        static_values=np.ones((len(static), value_dim), np.int32) if static else None,
+    )
+
+
+def _batch(cache, rng, qids, admit_p=0.7):
+    b = len(qids)
+    topics = rng.integers(-1, 2, size=b)
+    parts = jnp.asarray(cache.parts_for(topics))
+    hi, lo = pack_hashes(splitmix64(np.asarray(qids)))
+    vals = jnp.asarray(rng.integers(0, 1000, size=(b, cache.cfg.value_dim)), jnp.int32)
+    admit = jnp.asarray(rng.random(b) < admit_p)
+    return jnp.asarray(hi), jnp.asarray(lo), parts, vals, admit
+
+
+def _assert_states_equal(ref, got, label):
+    for k in STATE_KEYS:
+        a, b = np.asarray(ref[k]), np.asarray(got[k])
+        assert (a == b).all(), f"{label}: state[{k}] diverged at {np.argwhere(a != b)[:5]}"
+
+
+def _drive_all_paths(cache, state, batches):
+    """Chain batches through oracle / vectorized / kernel / host engines."""
+    for i, (hi, lo, parts, vals, admit) in enumerate(batches):
+        s_seq = cache.commit(state, hi, lo, parts, vals, admit)
+        s_vec = cache.commit_vectorized(state, hi, lo, parts, vals, admit)
+        s_ker = cache.commit_vectorized(
+            state, hi, lo, parts, vals, admit, use_kernel=True, interpret=True
+        )
+        s_host = cache.commit_host(state, hi, lo, np.asarray(parts), vals, admit)
+        _assert_states_equal(s_seq, s_vec, f"batch{i}/vectorized")
+        _assert_states_equal(s_seq, s_ker, f"batch{i}/pallas")
+        _assert_states_equal(s_seq, s_host, f"batch{i}/host")
+        # fused probe-and-commit: probe parity + deferred fill parity
+        hit0, lay0, val0 = cache.probe(state, hi, lo, parts)
+        for label, fused, fill in (
+            ("fused", cache.probe_and_commit, cache.fill_values),
+            ("fused_host", cache.probe_and_commit_host, cache.fill_values_host),
+        ):
+            hit1, lay1, val1, s_fused, (set_idx, wrote, way) = fused(
+                state, hi, lo, np.asarray(parts) if "host" in label else parts, admit
+            )
+            assert (np.asarray(hit0) == np.asarray(hit1)).all(), label
+            assert (np.asarray(lay0) == np.asarray(lay1)).all(), label
+            assert (np.asarray(val0) == np.asarray(val1)).all(), label
+            s_fused = fill(s_fused, set_idx, wrote, way, vals)
+            _assert_states_equal(s_seq, s_fused, f"batch{i}/{label}")
+        state = s_seq
+    return state
+
+
+if HAVE_HYPOTHESIS:
+    _cases = given(st.integers(0, 10_000))
+    _settings = settings(max_examples=8, deadline=None)
+else:
+    def _cases(f):
+        return pytest.mark.parametrize("seed", [0, 1, 7, 13, 42])(f)
+
+    def _settings(f):
+        return f
+
+
+@_settings
+@_cases
+def test_random_batches_all_paths_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    cache = _cache()
+    batches = [
+        _batch(cache, rng, rng.integers(0, 60, size=int(rng.integers(1, 96))))
+        for _ in range(3)
+    ]
+    _drive_all_paths(cache, dict(cache.init_state), batches)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_adversarial_same_set_and_duplicates(seed):
+    """Worst-case conflict depth: every request lands in one set."""
+    rng = np.random.default_rng(seed)
+    ways = 4
+    cfg = DeviceCacheConfig(
+        total_entries=ways, ways=ways, value_dim=1, topic_entries={}, dynamic_entries=ways
+    )
+    cache = STDDeviceCache(cfg)
+    batches = []
+    # all-same-set with duplicate keys: one set, 48 sequential conflicts
+    batches.append(_batch(cache, rng, rng.integers(0, 6, size=48), admit_p=0.6))
+    # all duplicates of a single key, alternating admission
+    batches.append(_batch(cache, rng, np.full(32, 9), admit_p=0.5))
+    # every key distinct, all admitted: pure eviction churn
+    batches.append(_batch(cache, rng, rng.permutation(100)[:40], admit_p=1.0))
+    # depth past HOST_DEPTH_LIMIT: the host engines dispatch to the
+    # compiled sequential replay and must stay bit-exact
+    assert 150 > STDDeviceCache.HOST_DEPTH_LIMIT
+    batches.append(_batch(cache, rng, rng.integers(0, 20, size=150), admit_p=0.7))
+    _drive_all_paths(cache, dict(cache.init_state), batches)
+
+
+def test_static_hits_never_write():
+    rng = np.random.default_rng(5)
+    cache = _cache(static=(3, 4, 5, 6))
+    qids = np.array([3, 4, 5, 6, 3, 4] * 4)
+    batches = [_batch(cache, rng, qids, admit_p=1.0)]
+    state = _drive_all_paths(cache, dict(cache.init_state), batches)
+    assert (np.asarray(state["key_hi"]) == 0).all(), "static hits must not insert"
+
+
+def test_kernel_matches_numpy_ref_per_request_outputs():
+    """The Pallas kernel's per-request write plan equals the numpy oracle's."""
+    rng = np.random.default_rng(11)
+    cache = _cache()
+    state = dict(cache.init_state)
+    for i in range(3):
+        hi, lo, parts, vals, admit = _batch(cache, rng, rng.integers(0, 50, size=64))
+        static_hit, _ = cache.static_lookup(state, hi, lo)
+        set_idx = cache._set_index(lo, parts)
+        ref = probe_and_commit_ref(
+            state["key_hi"], state["key_lo"], state["stamp"],
+            np.asarray(hi), np.asarray(lo), np.asarray(set_idx),
+            np.asarray(admit), np.asarray(static_hit), int(state["clock"]),
+        )
+        for use_kernel in (False, True):
+            got = probe_and_commit_op(
+                state["key_hi"], state["key_lo"], state["stamp"],
+                hi, lo, set_idx, admit, static_hit, state["clock"],
+                use_kernel=use_kernel, interpret=True,
+            )
+            for k in ("key_hi", "key_lo", "stamp", "pre_hit", "pre_way", "wrote", "way"):
+                assert (np.asarray(got[k]) == np.asarray(ref[k])).all(), (i, use_kernel, k)
+        state = cache.commit(state, hi, lo, parts, vals, admit)
+
+
+def test_empty_batch_is_identity():
+    cache = _cache()
+    state = dict(cache.init_state)
+    z = jnp.zeros((0,), jnp.uint32)
+    out = cache.commit_vectorized(
+        state, z, z, jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0, cache.cfg.value_dim), jnp.int32), jnp.zeros((0,), bool),
+    )
+    _assert_states_equal(state, out, "empty")
+
+
+@pytest.mark.parametrize(
+    "topic_entries",
+    [
+        {3: 16, 7: 16, 11: 0, 40: 16},
+        # id span past the dense-LUT cutoff: per-topic loop fallback
+        {3: 16, 7: 16, 5_000_000: 16},
+    ],
+)
+def test_parts_for_lookup_matches_mapping(topic_entries):
+    """Dense LUT and sparse-id fallback both equal the per-topic definition."""
+    cfg = DeviceCacheConfig(
+        total_entries=80, ways=4, value_dim=1,
+        topic_entries=topic_entries, dynamic_entries=32,
+    )
+    cache = STDDeviceCache(cfg)
+    topics = np.array([-5, -1, 0, 3, 7, 11, 12, 40, 41, 1000, 5_000_000])
+    got = cache.parts_for(topics)
+    for t, p in zip(topics, got):
+        expect = cache.part_of_topic.get(int(t), cache.k)
+        if expect != cache.k and cache.part_sets[expect] == 0:
+            expect = cache.k  # zero-set partitions fall through to dynamic
+        assert p == expect, (t, p, expect)
+
+
+def test_broker_serves_empty_batch():
+    cfg = DeviceCacheConfig(
+        total_entries=16, ways=4, value_dim=1, topic_entries={}, dynamic_entries=16
+    )
+    broker = Broker(
+        STDDeviceCache(cfg),
+        [lambda q: q[:, None].astype(np.int32)],
+        topic_of=lambda q: np.full(len(q), -1),
+    )
+    values, hit = broker.serve(np.zeros(0, np.int64))
+    assert values.shape[0] == 0 and hit.shape[0] == 0
+    assert broker.stats.requests == 0
+
+
+@pytest.mark.parametrize(
+    "use_kernel,engine,n_req",
+    [(False, "auto", 400), (False, "device", 200), (True, "device", 96)],
+)
+def test_broker_batch1_matches_exact_simulator(use_kernel, engine, n_req):
+    """Fused batch-1 serving == the paper's exact STDCache, per request."""
+    rng = np.random.default_rng(2)
+    ways = 4
+    # one set per partition: each section is then exactly a W-entry LRU
+    cfg = DeviceCacheConfig(
+        total_entries=4 * ways, ways=ways, value_dim=1,
+        topic_entries={0: ways, 1: ways, 2: ways}, dynamic_entries=ways,
+    )
+    static_q = np.array([0, 1])
+    topic_of_q = rng.integers(-1, 3, size=200)
+    topic_of_q[static_q] = NO_TOPIC
+    cache = STDDeviceCache(
+        cfg,
+        static_hashes=splitmix64(static_q),
+        static_values=static_q[:, None].astype(np.int32),
+    )
+
+    def backend(qids):
+        return qids[:, None].astype(np.int32)
+
+    broker = Broker(
+        cache, [backend], lambda q: topic_of_q[q], use_kernel=use_kernel, engine=engine
+    )
+    sim = STDCache(
+        static_keys=[int(q) for q in static_q],
+        sections={t: LRUCache(ways) for t in range(3)},
+        dynamic_capacity=ways,
+        topic_of=lambda k: int(topic_of_q[k]),
+    )
+    stream = rng.integers(0, 200, size=n_req)
+    for i, q in enumerate(stream):
+        values, hit = broker.serve(np.array([q]))
+        expect = sim.request_ex(int(q))
+        assert bool(hit[0]) == expect.hit, f"request {i} (key {q}) diverged"
+        assert values[0, 0] == q
+    assert broker.stats.hits > 0 and broker.stats.hits < broker.stats.requests

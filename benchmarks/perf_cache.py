@@ -26,6 +26,7 @@ it), so the commit rows isolate the update machinery being compared.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import List
 
@@ -33,10 +34,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import CacheSpec, VecLog, VecStats
 from repro.core.fast import partitioned_prev
 from repro.core.rd_offline import reuse_distances_offline
 from repro.core.jax_sim import reuse_distances_py
-from repro.serving import Broker, DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
+from repro.serving import (
+    Broker,
+    Cluster,
+    DeviceCacheConfig,
+    STDDeviceCache,
+    ServingSpec,
+    pack_hashes,
+    splitmix64,
+)
 
 from .common import csv_row
 
@@ -188,6 +198,40 @@ def run(quick: bool = False) -> List[str]:
                 f"ns_per_query={us*1000/batch:.0f};hit_rate={broker.stats.hit_rate:.3f}",
             )
         )
+
+    # fused serving through a spec-compiled cluster: shards=1 (the bare
+    # broker path, request-for-request identical by the conformance tests)
+    # vs shards=4 hash routing at the same total entries -- measures the
+    # scatter-gather overhead and the cross-shard overlap on one host
+    nq = 50_000
+    key_topic = rng.integers(-1, 64, size=nq).astype(np.int64)
+    keys = rng.integers(0, 20_000, size=40_000).astype(np.int64)  # reuse -> hits
+    vstats = VecStats.from_log(VecLog(keys=keys, n_train=20_000, key_topic=key_topic))
+    sspec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 65536, f_s=0.2, f_t=0.6),
+        value_dim=cfg.value_dim,
+    )
+    batch = 1024 if quick else 4096
+    stream = rng.integers(0, 20_000, size=(6, batch))
+    for shards in (1, 4):
+        with Cluster.from_spec(
+            dataclasses.replace(sspec, shards=shards), vstats, [backend],
+            value_fn=backend,
+        ) as cluster:
+            cluster.serve(stream[0])  # compile + warm the caches
+            reps = 2 if quick else 5
+            t0 = time.time()
+            for i in range(reps):
+                cluster.serve(stream[1 + i % 5])
+            us = (time.time() - t0) / reps * 1e6
+            rows.append(
+                csv_row(
+                    f"perf/serve_cluster/shards={shards}/B={batch}",
+                    us,
+                    f"ns_per_query={us*1000/batch:.0f};"
+                    f"hit_rate={cluster.stats.hit_rate:.3f}",
+                )
+            )
 
     # reuse-distance engine vs sequential Fenwick
     n = 100_000 if quick else 500_000

@@ -1,11 +1,14 @@
-"""End-to-end serving: STD cache fronting a transformer backend.
+"""End-to-end serving: a sharded STD cache cluster fronting a transformer.
 
-The paper's Fig. 2 as runnable code -- broker, device-resident topic-
-partitioned cache, LDA topic routing, hedged dispatch, checkpoint/restore.
+The paper's Fig. 2 as runnable code -- a declarative ``ServingSpec``
+(cache spec + engine + hedging + shards + routing) compiled by
+``Cluster.from_spec`` into hash-routed broker shards over the
+device-resident topic-partitioned cache, with LDA topic routing, hedged
+dispatch, and manifest-verified checkpoint/restore.
 
   PYTHONPATH=src python examples/serve_with_std_cache.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main(["--requests", "30000", "--entries", "2048"])
+    main(["--requests", "30000", "--entries", "2048", "--shards", "2"])

@@ -226,6 +226,40 @@ class AdmissionSpec:
         counts = np.bincount(log.keys, minlength=log.n_queries)
         return counts != 1
 
+    def to_serving_gate(self, log=None, admitted=None):
+        """Compile the broker/cluster admission gate from the spec.
+
+        Returns ``None`` for admit-all, else a pure callable
+        ``query_ids -> bool mask`` (the form the serving tier's fused
+        path requires).  The per-key decisions come from
+        :meth:`to_mask`: pass the ``VecLog`` via ``log=`` or a
+        precompiled ``admitted=`` mask.  This replaces the opaque
+        admission callables the broker used to take -- the spec now
+        *is* the gate; the callable parameter remains only as a
+        compatibility escape hatch.
+        """
+        if self.trivial:
+            return None
+        if admitted is None:
+            if log is None:
+                raise ValueError(
+                    "non-trivial AdmissionSpec needs the VecLog (log=) or a "
+                    "precompiled admitted= mask to compile a serving gate"
+                )
+            admitted = self.to_mask(log)
+        admitted = np.asarray(admitted, bool)
+        n = len(admitted)
+
+        def gate(query_ids: np.ndarray) -> np.ndarray:
+            # ids outside the training universe are never admitted (the
+            # same judgement the polluting filter passes on unknown keys)
+            # rather than crashing or wrapping the mask index
+            q = np.asarray(query_ids, np.int64)
+            ok = (q >= 0) & (q < n)
+            return ok & admitted[np.clip(q, 0, max(n - 1, 0))]
+
+        return gate
+
 
 # ---------------------------------------------------------------------------
 # Exact-engine section helper (moved from repro.core.build)

@@ -1,11 +1,13 @@
 """Serving driver: the paper's system end-to-end.
 
-Generates a calibrated query stream, trains the topic model, builds the
-device-resident STD cache, and serves the test stream through the broker
-with a real model backend (reduced-config LM scoring the query), printing
-hit rates per layer -- paper Fig. 2 as runnable code.
+Generates a calibrated query stream, trains the topic model, compiles a
+declarative ``ServingSpec`` into a (possibly sharded) broker cluster,
+and serves the test stream with a real model backend (reduced-config LM
+scoring the query), printing hit rates per layer -- paper Fig. 2 as
+runnable code, scaled out with ``--shards``/``--routing``.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 50000 --entries 4096
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --routing topic
 """
 from __future__ import annotations
 
@@ -22,7 +24,7 @@ from ..core import CacheSpec
 from ..core.spec import STRATEGIES
 from ..models import transformer as tf
 from ..querylog import SynthConfig, generate
-from ..serving import Broker, HedgePolicy, STDDeviceCache
+from ..serving import Cluster, HedgeSpec, ServingSpec
 from ..topics import run_pipeline
 
 
@@ -40,16 +42,31 @@ def main(argv=None) -> int:
     ap.add_argument("--f-ts", type=float, default=None)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--value-dim", type=int, default=8)
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="broker shards the cache's partition/set axis is split across",
+    )
+    ap.add_argument(
+        "--routing", default="hash", choices=("hash", "topic"),
+        help="query -> shard routing (topic routing moves whole partitions)",
+    )
     args = ap.parse_args(argv)
 
     # build the declarative spec up front so configuration errors (e.g. an
-    # SDC-section strategy without --f-ts) fail before the expensive log
-    # generation; it is compiled to the device engine below, and the same
-    # spec would drive the exact and reuse-distance engines bit-identically
-    spec = CacheSpec.from_strategy(
-        args.strategy, args.entries, f_s=args.f_s, f_t=args.f_t, f_ts=args.f_ts
+    # SDC-section strategy without --f-ts, or a bad shard/routing combo)
+    # fail before the expensive log generation; the same spec drives the
+    # exact and reuse-distance engines bit-identically
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy(
+            args.strategy, args.entries, f_s=args.f_s, f_t=args.f_t, f_ts=args.f_ts
+        ),
+        shards=args.shards,
+        routing=args.routing,
+        microbatch=args.batch,
+        value_dim=args.value_dim,
+        hedge=HedgeSpec(deadline_s=2.0),
     )
-    print(f"cache spec: {spec.to_json()}")
+    print(f"serving spec: {spec.to_json()}")
 
     print("generating calibrated query log + LDA topics ...")
     cfg = SynthConfig(
@@ -79,33 +96,36 @@ def main(argv=None) -> int:
         tokens = (qids[:, None] * 31 + np.arange(8)[None, :]) % mcfg.vocab_size
         return np.asarray(model_scores(jnp.asarray(tokens, jnp.int32)), np.int32)
 
-    cache = STDDeviceCache.from_spec(
-        spec, stats, value_fn=backend, value_dim=args.value_dim
-    )
-    broker = Broker(
-        cache,
-        [backend],
-        topic_of=lambda q: key_topic[q],
-        hedge=HedgePolicy(deadline_s=2.0),
-        microbatch=args.batch,
-        spec=spec,
-    )
-
     test = log.test_keys
-    t0 = time.time()
-    for lo in range(0, len(test) - args.batch + 1, args.batch):
-        broker.serve(test[lo : lo + args.batch])
-    dt = time.time() - t0
-    s = broker.stats
-    print(
-        f"served {s.requests} requests in {dt:.1f}s "
-        f"({s.requests/dt:.0f} req/s incl. backend)"
-    )
-    print(
-        f"hit_rate={s.hit_rate:.4f} static_hits={s.static_hits} "
-        f"topic_hits={s.topic_hits} backend_calls={s.backend_calls} "
-        f"hedged={s.hedged_calls}"
-    )
+    with Cluster.from_spec(
+        spec, stats, [backend], topic_of=lambda q: key_topic[q], value_fn=backend
+    ) as cluster:
+        # time serving only: construction above preloads the static layer
+        # through the model backend and warms per-shard jits, which would
+        # otherwise skew the shards=1 vs shards=N comparison
+        t0 = time.time()
+        # serve every batch including the ragged tail, so the reported hit
+        # rate covers the whole test stream
+        for lo in range(0, len(test), args.batch):
+            cluster.serve(test[lo : lo + args.batch])
+        dt = time.time() - t0
+        s = cluster.stats
+        assert s.requests == len(test)
+        print(
+            f"served {s.requests} requests in {dt:.1f}s "
+            f"({s.requests/dt:.0f} req/s incl. backend)"
+        )
+        print(
+            f"hit_rate={s.hit_rate:.4f} static_hits={s.static_hits} "
+            f"topic_hits={s.topic_hits} backend_calls={s.backend_calls} "
+            f"hedged={s.hedged_calls}"
+        )
+        if args.shards > 1:
+            for i, ss in enumerate(cluster.shard_stats):
+                print(
+                    f"  shard {i}: requests={ss.requests} "
+                    f"hit_rate={ss.hit_rate:.4f}"
+                )
     return 0
 
 

@@ -1,5 +1,12 @@
-"""Serving runtime: device-resident STD cache + front-end broker."""
+"""Serving runtime: device-resident STD cache + spec-compiled broker tier.
+
+``ServingSpec`` declares the whole serving configuration (cache spec,
+engine, fused path, hedging, shard count, routing); it compiles to a
+single ``Broker`` (``Broker.from_spec``) or a sharded ``Cluster``
+(``Cluster.from_spec``).  See docs/serving.md.
+"""
 from .broker import Backend, Broker, BrokerStats, HedgePolicy
+from .cluster import Cluster
 from .device_cache import (
     DYNAMIC,
     DeviceCacheConfig,
@@ -7,15 +14,19 @@ from .device_cache import (
     pack_hashes,
     splitmix64,
 )
+from .spec import HedgeSpec, ServingSpec
 
 __all__ = [
     "Backend",
     "Broker",
     "BrokerStats",
+    "Cluster",
     "DYNAMIC",
     "DeviceCacheConfig",
     "HedgePolicy",
+    "HedgeSpec",
     "STDDeviceCache",
+    "ServingSpec",
     "pack_hashes",
     "splitmix64",
 ]

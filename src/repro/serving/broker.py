@@ -127,10 +127,78 @@ class Broker:
         self._fill = jax.jit(cache.fill_values)
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
 
+    @classmethod
+    def from_spec(
+        cls,
+        spec,
+        stats,
+        backends: Sequence[Backend],
+        topic_of: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        value_fn=None,
+        log=None,
+        admitted: Optional[np.ndarray] = None,
+        admission: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        cache: Optional[STDDeviceCache] = None,
+    ) -> "Broker":
+        """Compile a :class:`repro.serving.spec.ServingSpec` to one broker.
+
+        The cache is built from ``spec.cache`` (static layer preloaded via
+        ``value_fn``), the admission gate is compiled from the spec's
+        ``AdmissionSpec`` (``log``/``admitted`` feed it; the ``admission``
+        callable remains as a compatibility escape hatch), and every
+        serving knob -- engine, fused, kernel, microbatch, coalescing,
+        hedging -- comes from the spec.  ``spec.shards`` is ignored here:
+        sharded deployments go through
+        :meth:`repro.serving.cluster.Cluster.from_spec`, which hands each
+        shard its slice of the cache via ``cache=`` so the rest of the
+        spec compiles in exactly one place.
+        """
+        if cache is None:
+            cache = STDDeviceCache.from_spec(
+                spec.cache, stats, value_fn=value_fn, ways=spec.ways,
+                value_dim=spec.value_dim,
+            )
+        if admission is None:
+            admission = spec.cache.admission.to_serving_gate(log=log, admitted=admitted)
+        if topic_of is None:
+            key_topic = np.asarray(stats.key_topic)
+            topic_of = lambda q: key_topic[np.asarray(q, np.int64)]  # noqa: E731
+        return cls(
+            cache,
+            backends,
+            topic_of=topic_of,
+            admission=admission,
+            hedge=spec.hedge.to_policy() if spec.hedge is not None else None,
+            microbatch=spec.microbatch,
+            coalesce=spec.coalesce,
+            spec=spec.cache,
+            fused=spec.fused,
+            use_kernel=spec.use_kernel,
+            engine=spec.engine,
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Shut down the hedging executor (idempotent)."""
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "Broker":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     # -- serving -------------------------------------------------------------
 
-    def serve(self, query_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def serve(
+        self, query_ids: np.ndarray, topics: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """Serve one batch of query ids -> (values (B, V), hit mask).
+
+        ``topics`` short-circuits ``topic_of`` when the caller already
+        routed the batch (the cluster's topic routing computes them once).
 
         Probes are atomic per batch: a duplicate key inside one batch is
         probed before its first occurrence commits, so it counts as a miss
@@ -147,8 +215,9 @@ class Broker:
         ids); only its decisions on missed queries have any effect.
         """
         b = len(query_ids)
-        topics = self.topic_of(query_ids)
-        parts = self.cache.parts_for(topics)
+        if topics is None:
+            topics = self.topic_of(query_ids)
+        parts = self.cache.parts_for(np.asarray(topics))
         h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
         if self.fused:

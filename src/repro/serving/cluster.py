@@ -1,0 +1,284 @@
+"""Sharded multi-broker serving compiled from one ``ServingSpec``.
+
+A :class:`Cluster` is N independent :class:`~repro.serving.broker.Broker`
+shards behind a scatter-gather front end (the paper's Fig. 2 broker,
+scaled out).  Because the device cache's partitions never share sets,
+splitting the partition/set axis across brokers creates no cross-shard
+traffic beyond routing: every batch is routed shard-by-shard
+(``ServingSpec.shard_of``), each shard serves its slice independently
+(in parallel when there is more than one), and the results are
+scattered back into arrival order.
+
+Conformance contract (asserted by ``tests/test_cluster.py``):
+
+* ``shards=1`` serves a replayed stream request-for-request identical
+  to a bare broker built from the same spec -- values, hit mask, and
+  per-layer stats;
+* hash routing with N > 1 matches the bare broker hit-for-hit on
+  duplicate-free streams (the static layer is partitioned without loss,
+  and LRU behaviour only diverges once eviction patterns matter).
+
+Checkpoints: :meth:`Cluster.save` writes one per-shard broker
+checkpoint plus a single ``cluster.json`` manifest embedding the
+``ServingSpec``; :meth:`Cluster.restore` verifies shard count and spec
+*before* touching any cache arrays, so a mismatched restore fails with
+the informative ``ValueError`` instead of a shape mismatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .broker import Backend, Broker, BrokerStats
+from .device_cache import STDDeviceCache, splitmix64
+from .spec import ServingSpec
+
+MANIFEST_NAME = "cluster.json"
+
+
+def _shard_dir(ckpt_dir: str, i: int) -> str:
+    return os.path.join(ckpt_dir, f"shard_{i:03d}")
+
+
+class Cluster:
+    """N spec-compiled broker shards behind one serve() front end."""
+
+    def __init__(
+        self,
+        spec: ServingSpec,
+        brokers: Sequence[Broker],
+        topic_of: Callable[[np.ndarray], np.ndarray],
+        parallel: Optional[bool] = None,
+    ):
+        if len(brokers) != spec.shards:
+            raise ValueError(
+                f"spec declares {spec.shards} shards but {len(brokers)} "
+                "brokers were provided"
+            )
+        self.spec = spec
+        self.brokers = list(brokers)
+        self.topic_of = topic_of
+        # scatter-gather pool: shards are independent, so their serves can
+        # overlap -- but threads only pay off when shard work releases the
+        # GIL (device engines queue async work; slow backends block in
+        # jax/IO).  The pure-numpy host engine is GIL-bound small-op work,
+        # which dispatches faster serially, so that is the auto default on
+        # CPU hosts; pass ``parallel=True`` when backend latency dominates.
+        if parallel is None:
+            parallel = any(b.engine == "device" for b in brokers)
+        self._pool = (
+            ThreadPoolExecutor(max_workers=len(brokers))
+            if parallel and len(brokers) > 1
+            else None
+        )
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_spec(
+        cls,
+        spec: ServingSpec,
+        stats,
+        backends: Sequence[Backend],
+        topic_of: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        value_fn=None,
+        log=None,
+        admitted: Optional[np.ndarray] = None,
+        parallel: Optional[bool] = None,
+    ) -> "Cluster":
+        """Compile the spec into N brokers owning disjoint cache slices.
+
+        ``stats`` is the vectorized :class:`repro.core.fast.VecStats`;
+        ``value_fn(key_ids) -> (n, value_dim)`` preloads static values;
+        ``log``/``admitted`` feed the admission gate exactly as in
+        :meth:`repro.core.spec.AdmissionSpec.to_serving_gate`.  The
+        static layer is partitioned by the same routing as live queries,
+        so every static key keeps answering on the shard that serves it.
+        """
+        key_topic = np.asarray(stats.key_topic)
+        if topic_of is None:
+            topic_of = lambda q: key_topic[np.asarray(q, np.int64)]  # noqa: E731
+        # compile the gate once; Broker.from_spec then owns the rest of the
+        # spec compilation, so a broker and a shard can never drift apart
+        gate = spec.cache.admission.to_serving_gate(log=log, admitted=admitted)
+        static_keys = spec.cache.device_static_keys(stats)
+        static_shard = spec.shard_of(static_keys, topics=key_topic[static_keys])
+        configs = spec.device_configs(stats.topic_distinct)
+        brokers = []
+        for i, cfg in enumerate(configs):
+            keys_i = static_keys[static_shard == i]
+            cache = STDDeviceCache(
+                cfg,
+                static_hashes=splitmix64(keys_i) if len(keys_i) else None,
+                static_values=(
+                    value_fn(keys_i) if value_fn is not None and len(keys_i) else None
+                ),
+            )
+            broker = Broker.from_spec(
+                spec, stats, backends, topic_of=topic_of, admission=gate,
+                cache=cache,
+            )
+            if spec.shards > 1:
+                # distinct per-shard identity in the embedded spec, so
+                # restoring the wrong shard's checkpoint fails the
+                # informative spec check rather than a shape mismatch
+                broker.spec = dataclasses.replace(
+                    spec.cache,
+                    name=f"{spec.cache.name or 'cache'}:shard{i}of{spec.shards}",
+                )
+            brokers.append(broker)
+        return cls(spec, brokers, topic_of, parallel=parallel)
+
+    # -- serving -----------------------------------------------------------
+
+    def serve(self, query_ids: np.ndarray):
+        """Serve one batch -> (values (B, V), hit mask), arrival order.
+
+        Routes every request to its shard, serves the shard slices (in
+        parallel across shards), and scatters results back into the
+        caller's order.  Within a shard the slice preserves arrival
+        order, so per-shard semantics are exactly the broker's.  Topic
+        routing computes ``topic_of`` once here and hands each shard its
+        slice, so the hot path never pays the lookup twice.
+        """
+        query_ids = np.asarray(query_ids)
+        b = len(query_ids)
+        topics = (
+            np.asarray(self.topic_of(query_ids))
+            if self.spec.routing == "topic"
+            else None
+        )
+        shard = self.spec.shard_of(query_ids, topics=topics)
+        values = np.zeros((b, self.spec.value_dim), np.int32)
+        hit = np.zeros(b, bool)
+        work = [
+            (i, np.flatnonzero(shard == i))
+            for i in range(len(self.brokers))
+        ]
+        work = [(i, idx) for i, idx in work if len(idx)]
+        sub_topics = lambda idx: None if topics is None else topics[idx]  # noqa: E731
+        if self._pool is not None and len(work) > 1:
+            futs = [
+                (
+                    idx,
+                    self._pool.submit(
+                        self.brokers[i].serve, query_ids[idx], sub_topics(idx)
+                    ),
+                )
+                for i, idx in work
+            ]
+            for idx, fut in futs:
+                v, h = fut.result()
+                values[idx] = v
+                hit[idx] = h
+        else:
+            for i, idx in work:
+                v, h = self.brokers[i].serve(query_ids[idx], sub_topics(idx))
+                values[idx] = v
+                hit[idx] = h
+        return values, hit
+
+    # -- stats -------------------------------------------------------------
+
+    @property
+    def stats(self) -> BrokerStats:
+        """Aggregate ``BrokerStats`` across every shard."""
+        agg = BrokerStats()
+        for b in self.brokers:
+            for f in dataclasses.fields(BrokerStats):
+                setattr(agg, f.name, getattr(agg, f.name) + getattr(b.stats, f.name))
+        return agg
+
+    @property
+    def shard_stats(self) -> List[BrokerStats]:
+        return [b.stats for b in self.brokers]
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def save(self, ckpt_dir: str, step: int) -> str:
+        """Per-shard broker checkpoints under one spec-bearing manifest.
+
+        The manifest (which records ``step``) is written *after* every
+        shard saved: a crash mid-save leaves the previous manifest
+        pointing at the last step all shards completed, so
+        ``restore(step=None)`` still finds a consistent checkpoint.
+        """
+        os.makedirs(ckpt_dir, exist_ok=True)
+        for i, broker in enumerate(self.brokers):
+            broker.save(_shard_dir(ckpt_dir, i), step)
+        manifest = {
+            "version": 1,
+            "step": int(step),
+            "shards": len(self.brokers),
+            "serving_spec": json.loads(self.spec.to_json()),
+        }
+        fd, tmp = tempfile.mkstemp(dir=ckpt_dir, prefix=".tmp_manifest_")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(manifest, f, sort_keys=True)
+            os.replace(tmp, os.path.join(ckpt_dir, MANIFEST_NAME))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return ckpt_dir
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore every shard; verify the manifest *first* so a wrong
+        deployment reports as such, never as a cache shape mismatch."""
+        path = os.path.join(ckpt_dir, MANIFEST_NAME)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no cluster manifest ({MANIFEST_NAME}) in {ckpt_dir}")
+        with open(path) as f:
+            manifest = json.load(f)
+        saved_shards = int(manifest["shards"])
+        if saved_shards != len(self.brokers):
+            raise ValueError(
+                f"cluster checkpoint was saved with {saved_shards} shards but "
+                f"this cluster has {len(self.brokers)}; rebuild the cluster "
+                "from the checkpoint's ServingSpec to restore it"
+            )
+        saved = ServingSpec.from_json(json.dumps(manifest["serving_spec"]))
+        if saved != self.spec:
+            raise ValueError(
+                "cluster checkpoint was produced under a different "
+                f"ServingSpec: {saved.to_json()} != {self.spec.to_json()}"
+            )
+        if step is None:
+            # the manifest's step is the last one every shard completed
+            step = int(manifest["step"])
+        steps = [
+            broker.restore(_shard_dir(ckpt_dir, i), step)
+            for i, broker in enumerate(self.brokers)
+        ]
+        if len(set(steps)) != 1:
+            raise ValueError(f"shard checkpoints disagree on the step: {steps}")
+        return steps[0]
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Shut down the scatter-gather pool and every shard broker."""
+        for broker in self.brokers:
+            broker.close()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def __len__(self) -> int:
+        return len(self.brokers)
+
+
+__all__ = ["Cluster", "MANIFEST_NAME"]

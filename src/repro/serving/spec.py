@@ -1,0 +1,236 @@
+"""Declarative serving configuration: one ``ServingSpec``, N brokers.
+
+:class:`repro.core.spec.CacheSpec` made the *cache* declarative; this
+module does the same for the *serving tier* in front of it.  A
+``ServingSpec`` embeds the cache spec and adds everything the broker
+constructor used to take as loose kwargs -- engine selection, fused
+serving, kernel use, micro-batching, coalescing, hedging -- plus the two
+deployment axes the single-broker API could not express:
+
+* ``shards``  -- how many brokers the cache is split across, and
+* ``routing`` -- how queries find their shard: ``"hash"`` (uniform
+  splitmix64 of the query id) or ``"topic"`` (topic tau -> shard
+  tau mod N; no-topic queries fall back to hash routing).
+
+The spec *compiles* to deployments:
+
+* :meth:`repro.serving.broker.Broker.from_spec` -- one broker (shards
+  is ignored),
+* :meth:`repro.serving.cluster.Cluster.from_spec` -- N brokers, each
+  owning a disjoint slice of the partition/set axis, behind one
+  scatter-gather front end.
+
+Like ``CacheSpec`` it is JSON round-trippable (:meth:`to_json` /
+:meth:`from_json`), so cluster checkpoint manifests can embed the exact
+deployment they were produced under and refuse a mismatched restore
+with an informative error instead of a shape mismatch.
+
+Shard layout (see docs/serving.md):
+
+* ``routing="hash"``  -- every shard is a 1/N-scale copy of the full
+  cache structure (all topic partitions present, each partition's
+  entries divided across shards); the *key space* is what gets
+  partitioned, so each shard's slice of every set axis is disjoint by
+  construction.
+* ``routing="topic"`` -- shard i owns the *whole* partitions of the
+  topics assigned to it (tau mod N == i) at full size, plus 1/N of the
+  dynamic partition and the static entries of its keys; capacity
+  follows topic popularity onto whichever shard serves the topic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import List, Mapping, Optional
+
+import numpy as np
+
+from ..core.spec import CacheSpec
+from .device_cache import DeviceCacheConfig, splitmix64
+
+SERVING_SPEC_VERSION = 1
+
+_ROUTINGS = ("hash", "topic")
+_ENGINES = ("auto", "host", "device")
+
+
+def _split_entries(total: int, shards: int, i: int) -> int:
+    """Shard i's share of ``total`` entries (as even as possible)."""
+    return total // shards + (1 if i < total % shards else 0)
+
+
+@dataclass(frozen=True)
+class HedgeSpec:
+    """Declarative straggler mitigation (serializable analogue of
+    :class:`repro.serving.broker.HedgePolicy`)."""
+
+    deadline_s: float = 0.5
+    max_hedges: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "deadline_s", float(self.deadline_s))
+        object.__setattr__(self, "max_hedges", int(self.max_hedges))
+        if self.deadline_s <= 0:
+            raise ValueError(f"hedge deadline_s must be > 0, got {self.deadline_s}")
+        if self.max_hedges < 1:
+            raise ValueError(f"max_hedges must be >= 1, got {self.max_hedges}")
+
+    def to_policy(self):
+        """Compile to the broker's runtime ``HedgePolicy``."""
+        from .broker import HedgePolicy  # deferred: broker imports this module
+
+        return HedgePolicy(deadline_s=self.deadline_s, max_hedges=self.max_hedges)
+
+
+@dataclass(frozen=True)
+class ServingSpec:
+    """One declarative description of a (possibly sharded) serving tier."""
+
+    cache: CacheSpec
+    shards: int = 1
+    routing: str = "hash"  # "hash" | "topic"
+    engine: str = "auto"  # "auto" | "host" | "device"
+    fused: bool = True
+    use_kernel: bool = False
+    microbatch: int = 256
+    coalesce: bool = True
+    value_dim: int = 8
+    ways: int = 8
+    hedge: Optional[HedgeSpec] = None
+
+    def __post_init__(self):
+        for f in ("shards", "microbatch", "value_dim", "ways"):
+            object.__setattr__(self, f, int(getattr(self, f)))
+        for f in ("fused", "use_kernel", "coalesce"):
+            object.__setattr__(self, f, bool(getattr(self, f)))
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.routing not in _ROUTINGS:
+            raise ValueError(f"routing must be one of {_ROUTINGS}, got {self.routing!r}")
+        if self.engine not in _ENGINES:
+            raise ValueError(f"engine must be one of {_ENGINES}, got {self.engine!r}")
+        if self.microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {self.microbatch}")
+        if self.value_dim < 1 or self.ways < 1:
+            raise ValueError("value_dim and ways must be >= 1")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        # delegate the cache layer to CacheSpec's own (versioned) round-trip
+        d["cache"] = json.loads(self.cache.to_json())
+        d["version"] = SERVING_SPEC_VERSION
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServingSpec":
+        d = json.loads(s)
+        version = d.pop("version", SERVING_SPEC_VERSION)
+        if version > SERVING_SPEC_VERSION:
+            raise ValueError(
+                f"ServingSpec version {version} is newer than {SERVING_SPEC_VERSION}"
+            )
+        hedge = d.pop("hedge", None)
+        return cls(
+            cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
+            hedge=HedgeSpec(**hedge) if hedge is not None else None,
+            **d,
+        )
+
+    # -- routing -----------------------------------------------------------
+
+    def shard_of(
+        self, query_ids: np.ndarray, topics: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Shard index for every query (host-side, deterministic).
+
+        ``topics`` is required for ``routing="topic"``: queries with a
+        topic go to shard ``topic mod shards``; no-topic queries (< 0)
+        fall back to hash routing so they spread over every shard's
+        dynamic partition.
+        """
+        query_ids = np.asarray(query_ids)
+        if self.shards == 1:
+            return np.zeros(len(query_ids), np.int32)
+        # route on the *high* hash word: the cache's set index consumes
+        # the low word (h_lo % n_sets), so routing on the same bits would
+        # leave each shard only 1/gcd(shards, n_sets) of its sets
+        # reachable (e.g. half of every LRU partition dead at shards=2)
+        by_hash = (
+            (splitmix64(query_ids) >> np.uint64(32)) % np.uint64(self.shards)
+        ).astype(np.int32)
+        if self.routing == "hash":
+            return by_hash
+        if topics is None:
+            raise ValueError('routing="topic" needs the per-query topics')
+        topics = np.asarray(topics, np.int64)
+        return np.where(topics >= 0, topics % self.shards, by_hash).astype(np.int32)
+
+    # -- shard compilation -------------------------------------------------
+
+    def shard_cache_spec(self, i: int) -> CacheSpec:
+        """Shard i's cache spec under hash routing: the same layer
+        structure at 1/N of every layer's entries."""
+        if not 0 <= i < self.shards:
+            raise ValueError(f"shard index {i} out of range for {self.shards} shards")
+        return dataclasses.replace(
+            self.cache, n_entries=_split_entries(self.cache.n_entries, self.shards, i)
+        )
+
+    def device_configs(
+        self, topic_distinct: Mapping[int, int]
+    ) -> List[DeviceCacheConfig]:
+        """Every shard's device config (the full compilation runs once)."""
+        if self.routing == "topic" and self.shards > 1:
+            full = self.cache.to_device(
+                topic_distinct, ways=self.ways, value_dim=self.value_dim
+            )
+            return [self._slice_topic_config(full, i) for i in range(self.shards)]
+        return [
+            self.shard_device_config(i, topic_distinct) for i in range(self.shards)
+        ]
+
+    def shard_device_config(
+        self, i: int, topic_distinct: Mapping[int, int]
+    ) -> DeviceCacheConfig:
+        """Compile shard i's slice of the cache to a device config."""
+        if not 0 <= i < self.shards:
+            raise ValueError(f"shard index {i} out of range for {self.shards} shards")
+        if self.shards == 1:
+            return self.cache.to_device(
+                topic_distinct, ways=self.ways, value_dim=self.value_dim
+            )
+        if self.routing == "hash":
+            return self.shard_cache_spec(i).to_device(
+                topic_distinct, ways=self.ways, value_dim=self.value_dim
+            )
+        full = self.cache.to_device(
+            topic_distinct, ways=self.ways, value_dim=self.value_dim
+        )
+        return self._slice_topic_config(full, i)
+
+    def _slice_topic_config(
+        self, full: DeviceCacheConfig, i: int
+    ) -> DeviceCacheConfig:
+        # topic routing: whole partitions move, the dynamic/static layers
+        # split evenly (their traffic is hash-routed)
+        topic_entries = {
+            int(t): int(c)
+            for t, c in full.topic_entries.items()
+            if int(t) % self.shards == i
+        }
+        dyn = _split_entries(full.dynamic_entries, self.shards, i)
+        static = _split_entries(full.static_entries, self.shards, i)
+        return DeviceCacheConfig(
+            total_entries=static + sum(topic_entries.values()) + dyn,
+            ways=full.ways,
+            value_dim=full.value_dim,
+            topic_entries=topic_entries,
+            dynamic_entries=dyn,
+            static_entries=static,
+        )
+
+
+__all__ = ["SERVING_SPEC_VERSION", "HedgeSpec", "ServingSpec"]

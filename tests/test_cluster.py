@@ -1,0 +1,324 @@
+"""ServingSpec + Cluster: declarative sharded serving.
+
+Conformance bar from the redesign:
+
+* ``ServingSpec`` JSON round-trips losslessly;
+* a ``shards=1`` cluster serves a replayed stream request-for-request
+  identical to a bare ``Broker`` (values, hit mask, per-layer stats);
+* a hash-routed ``shards=4`` cluster matches the bare broker hit-for-hit
+  on duplicate-free streams;
+* restoring a cluster under a different ``ServingSpec`` or shard count
+  (or a broker under a different ``CacheSpec``) fails with the
+  informative ``ValueError``, not a shape mismatch.
+"""
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, AdmissionSpec, CacheSpec, VecLog, VecStats
+from repro.serving import Broker, Cluster, HedgeSpec, ServingSpec, splitmix64
+
+
+def _stats(seed=0, nq=300, n=3000, n_topics=6):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    return log, VecStats.from_log(log)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _spec(n=256, value_dim=2, **kw):
+    cache = CacheSpec.from_strategy("STDv_LRU", n, f_s=0.3, f_t=0.5)
+    return ServingSpec(cache=cache, value_dim=value_dim, microbatch=64, **kw)
+
+
+# -- serialization ----------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {},
+        {"shards": 4, "routing": "topic", "engine": "host", "fused": False},
+        {"hedge": HedgeSpec(deadline_s=1.25, max_hedges=2), "use_kernel": True},
+        {"coalesce": False, "microbatch": 17, "ways": 4, "value_dim": 3},
+    ],
+)
+def test_serving_spec_json_round_trip(kw):
+    cache = CacheSpec.from_strategy("STDv_SDC_C2", 512, f_s=0.25, f_t=0.6, f_ts=0.5)
+    spec = ServingSpec(cache=cache, **kw)
+    again = ServingSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_json() == spec.to_json()
+
+
+def test_serving_spec_validates():
+    cache = CacheSpec.from_strategy("LRU", 64)
+    with pytest.raises(ValueError, match="routing"):
+        ServingSpec(cache=cache, routing="random")
+    with pytest.raises(ValueError, match="shards"):
+        ServingSpec(cache=cache, shards=0)
+    with pytest.raises(ValueError, match="engine"):
+        ServingSpec(cache=cache, engine="gpu")
+    with pytest.raises(ValueError, match="deadline"):
+        HedgeSpec(deadline_s=0.0)
+
+
+def test_serving_spec_version_gate():
+    spec = _spec()
+    import json
+
+    d = json.loads(spec.to_json())
+    d["version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        ServingSpec.from_json(json.dumps(d))
+
+
+# -- shards=1 conformance ---------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["hash", "topic"])
+def test_single_shard_cluster_matches_bare_broker(routing):
+    log, stats = _stats(seed=3)
+    spec = _spec(routing=routing)
+    backend = _backend(spec.value_dim)
+    bare = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    cluster = Cluster.from_spec(spec, stats, [backend], value_fn=backend)
+    # the one shard is the bare broker's cache, config and static layer
+    assert cluster.brokers[0].cache.cfg == bare.cache.cfg
+    stream = log.test_keys
+    for lo in range(0, len(stream), 64):  # includes the ragged tail
+        batch = stream[lo : lo + 64]
+        v0, h0 = bare.serve(batch)
+        v1, h1 = cluster.serve(batch)
+        assert np.array_equal(h0, h1)
+        assert np.array_equal(v0, v1)
+    assert dataclasses.asdict(cluster.stats) == dataclasses.asdict(bare.stats)
+    assert cluster.stats.hits > 0
+    bare.close()
+    cluster.close()
+
+
+# -- shards=4 hash routing --------------------------------------------------
+
+
+def test_hash_sharded_cluster_hit_for_hit_on_duplicate_free_stream():
+    log, stats = _stats(seed=5)
+    spec = _spec()
+    backend = _backend(spec.value_dim)
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as bare, \
+            Cluster.from_spec(
+                dataclasses.replace(spec, shards=4), stats, [backend],
+                value_fn=backend, parallel=True,  # exercise threaded dispatch
+            ) as cluster:
+        # every shard owns a disjoint slice: same ways, smaller set axis
+        assert all(b.cache.n_sets < bare.cache.n_sets for b in cluster.brokers)
+        stream = np.random.default_rng(9).permutation(stats.key_topic.shape[0])
+        for lo in range(0, len(stream), 50):
+            batch = stream[lo : lo + 50]
+            v0, h0 = bare.serve(batch)
+            v1, h1 = cluster.serve(batch)
+            assert np.array_equal(h0, h1)  # hit-for-hit
+            assert np.array_equal(v0, v1)
+        assert cluster.stats.hits == bare.stats.hits > 0
+        assert cluster.stats.static_hits == bare.stats.static_hits
+        assert cluster.stats.requests == bare.stats.requests == len(stream)
+
+
+def test_topic_routed_cluster_serves_static_keys_and_aggregates():
+    log, stats = _stats(seed=7)
+    spec = _spec(shards=3, routing="topic")
+    backend = _backend(spec.value_dim)
+    with Cluster.from_spec(spec, stats, [backend], value_fn=backend) as cluster:
+        # whole partitions moved: each topic's sets live on exactly one shard
+        owned = [set(b.cache.cfg.topic_entries) for b in cluster.brokers]
+        for i, o in enumerate(owned):
+            assert all(t % 3 == i for t in o)
+        static_keys = spec.cache.device_static_keys(stats)
+        values, hit = cluster.serve(static_keys)
+        assert hit.all()  # every static key answers on its shard
+        assert (values[:, 0] == static_keys).all()
+        s = cluster.stats
+        assert s.requests == len(static_keys) == s.static_hits == s.hits
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_hash_routing_uses_bits_independent_of_set_index(shards):
+    """Shard routing must not consume the set-index hash bits: if it did,
+    every key on shard i would satisfy h_lo = i (mod shards) and reach
+    only 1/gcd(shards, n_sets) of the shard's sets."""
+    spec = _spec(shards=shards)
+    q = np.arange(20_000)
+    shard = spec.shard_of(q)
+    h_lo = (splitmix64(q) & np.uint64(0xFFFFFFFF)).astype(np.int64)
+    for s in range(shards):
+        residues = np.unique(h_lo[shard == s] % shards)
+        assert len(residues) == shards  # all set-index residues reachable
+
+
+def test_hash_sharded_lru_capacity_fully_reachable():
+    """Under churn every shard's dynamic sets must fill -- the whole
+    point of sharding is capacity, not just routing."""
+    # key universe far larger than the cache, so the static layer cannot
+    # swallow the stream and the dynamic LRU sees real churn
+    _, stats = _stats(seed=13, nq=5000)
+    spec = _spec(n=1024)
+    backend = _backend(spec.value_dim)
+    with Cluster.from_spec(
+        dataclasses.replace(spec, shards=2), stats, [backend], value_fn=backend
+    ) as cluster:
+        rng = np.random.default_rng(17)
+        for _ in range(40):  # far more distinct keys than entries
+            cluster.serve(rng.integers(0, stats.key_topic.shape[0], size=128))
+        for b in cluster.brokers:
+            k = b.cache.k  # dynamic partition index
+            lo, hi = b.cache.part_offset[k], b.cache.part_offset[k + 1]
+            occ = (np.asarray(b.state["key_hi"][lo:hi]) != 0).any(axis=1)
+            assert occ.all(), f"unreachable dynamic sets: {np.flatnonzero(~occ)}"
+
+
+# -- spec-compiled admission gate -------------------------------------------
+
+
+def test_admission_gate_compiled_from_spec():
+    log, stats = _stats(seed=11)
+    admission = AdmissionSpec(kind="singleton_oracle")
+    gate = admission.to_serving_gate(log=log)
+    mask = admission.to_mask(log)
+    qids = np.arange(stats.key_topic.shape[0])
+    assert np.array_equal(gate(qids), mask)
+    # ids outside the training universe are rejected, not a crash/wrap
+    oob = np.array([-1, len(mask), len(mask) + 100], np.int64)
+    assert not gate(oob).any()
+    # gated spec compiles straight into a broker/cluster (no opaque callable)
+    cache = dataclasses.replace(
+        CacheSpec.from_strategy("STDv_LRU", 128, f_s=0.25, f_t=0.5),
+        admission=admission,
+    )
+    spec = ServingSpec(cache=cache, value_dim=1, shards=2)
+    backend = _backend(1)
+    with Cluster.from_spec(spec, stats, [backend], log=log) as cluster:
+        cluster.serve(log.test_keys[:200])
+        cluster.serve(log.test_keys[:200])  # repeats -> hits
+        assert cluster.stats.hits > 0
+        # singletons were never admitted into any shard's LRU layers
+        assert cluster.stats.admitted <= int(mask[log.test_keys[:200]].sum()) * 2
+    with pytest.raises(ValueError, match="log=|admitted="):
+        admission.to_serving_gate()
+
+
+def test_gated_spec_without_gate_source_raises():
+    _, stats = _stats(seed=12)
+    cache = dataclasses.replace(
+        CacheSpec.from_strategy("LRU", 64), admission=AdmissionSpec(kind="polluting")
+    )
+    spec = ServingSpec(cache=cache, value_dim=1)
+    with pytest.raises(ValueError, match="log=|admitted="):
+        Cluster.from_spec(spec, stats, [_backend(1)])
+
+
+# -- checkpoint manifest ----------------------------------------------------
+
+
+def test_cluster_checkpoint_round_trip_and_mismatches():
+    log, stats = _stats(seed=8)
+    spec = _spec(shards=4)
+    backend = _backend(spec.value_dim)
+
+    def make(s):
+        return Cluster.from_spec(s, stats, [backend], value_fn=backend)
+
+    cluster = make(spec)
+    for lo in range(0, 600, 64):
+        cluster.serve(log.test_keys[lo : lo + 64])
+
+    with tempfile.TemporaryDirectory() as d:
+        cluster.save(d, 1)
+        # same spec: restores fine, aggregate stats intact
+        again = make(spec)
+        assert again.restore(d) == 1
+        assert dataclasses.asdict(again.stats) == dataclasses.asdict(cluster.stats)
+        # and it keeps serving identically to the original
+        v0, h0 = cluster.serve(log.test_keys[600:700])
+        v1, h1 = again.serve(log.test_keys[600:700])
+        assert np.array_equal(v0, v1) and np.array_equal(h0, h1)
+
+        # wrong shard count: informative error, not a shape mismatch
+        with make(dataclasses.replace(spec, shards=2)) as wrong_shards:
+            with pytest.raises(ValueError, match="shards"):
+                wrong_shards.restore(d)
+
+        # same shard count, different ServingSpec: informative error
+        with make(dataclasses.replace(spec, microbatch=128)) as wrong_spec:
+            with pytest.raises(ValueError, match="different ServingSpec"):
+                wrong_spec.restore(d)
+
+        # a shard restored from another shard's checkpoint fails the
+        # informative spec check, not a shape mismatch in the arrays
+        with pytest.raises(ValueError, match="different CacheSpec"):
+            again.brokers[0].restore(os.path.join(d, "shard_001"))
+
+        # crash-mid-save simulation: a newer step that only reached one
+        # shard is invisible -- the manifest still points at the last
+        # step every shard completed, and restore picks it
+        cluster.brokers[0].save(os.path.join(d, "shard_000"), 7)
+        fresh = make(spec)
+        assert fresh.restore(d) == 1
+        fresh.close()
+
+        # missing manifest
+        with pytest.raises(FileNotFoundError, match="manifest"):
+            again.restore(d + "/nowhere")
+        again.close()
+    cluster.close()
+
+
+def test_broker_checkpoint_under_different_cache_spec_raises():
+    log, stats = _stats(seed=9)
+    spec = _spec()
+    backend = _backend(spec.value_dim)
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as broker:
+        broker.serve(log.test_keys[:64])
+        with tempfile.TemporaryDirectory() as d:
+            broker.save(d, 2)
+            other = dataclasses.replace(
+                spec, cache=CacheSpec.from_strategy("STDv_LRU", 256, f_s=0.5, f_t=0.25)
+            )
+            with Broker.from_spec(other, stats, [backend], value_fn=backend) as b2:
+                with pytest.raises(ValueError, match="different CacheSpec"):
+                    b2.restore(d)
+
+
+# -- lifecycle --------------------------------------------------------------
+
+
+def test_close_shuts_down_every_shard():
+    _, stats = _stats(seed=10)
+    spec = _spec(shards=3)
+    backend = _backend(spec.value_dim)
+    with Cluster.from_spec(
+        spec, stats, [backend], value_fn=backend, parallel=True
+    ) as cluster:
+        cluster.serve(np.arange(32))
+    for b in cluster.brokers:
+        assert b._pool._shutdown
+    assert cluster._pool._shutdown
+    # broker close is idempotent and the context manager uses it
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as broker:
+        broker.serve(np.arange(8))
+    assert broker._pool._shutdown
+    broker.close()

@@ -55,17 +55,18 @@ def test_broker_layer_stats_consistent():
     log, stats = _stats(seed=4)
     spec = CacheSpec.from_strategy("STDv_LRU", 128, f_s=0.5, f_t=0.4)
     cache = STDDeviceCache.from_spec(spec, stats, value_fn=_backend(1), value_dim=1)
-    broker = Broker(
+    with Broker(
         cache,
         [_backend(1)],
         topic_of=lambda q: stats.key_topic[q],
         spec=spec,
-    )
-    static_set = set(spec.device_static_keys(stats).tolist())
-    stream = log.test_keys[:2000]
-    for lo in range(0, len(stream), 64):
-        broker.serve(stream[lo : lo + 64])
-    s = broker.stats
+    ) as broker:
+        static_set = set(spec.device_static_keys(stats).tolist())
+        stream = log.test_keys[:2000]
+        for lo in range(0, len(stream), 64):
+            broker.serve(stream[lo : lo + 64])
+        s = broker.stats
+    assert broker._pool._shutdown  # context exit released the hedging pool
     assert s.requests == len(stream)
     assert 0 < s.hits <= s.requests
     # every static-key request hits the static layer; nothing else does

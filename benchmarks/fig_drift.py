@@ -1,0 +1,145 @@
+"""Drift sweep (beyond-paper): frozen vs rebalanced STD under popularity drift.
+
+The paper's Sec. 3.3 allocation is computed once from the training log;
+its own motivation -- topics with different and *shifting* temporal
+locality -- predicts that under popularity drift the frozen STD cache
+degrades toward SDC.  This sweep quantifies the claim on the
+piecewise-stationary synthetic streams of ``repro.querylog.synth.
+DriftConfig`` (Gao-style drifting Zipf mixtures) by serving the same
+test stream through three spec-compiled brokers:
+
+* ``drift/sdc``            -- no topic layer (static + dynamic only);
+* ``drift/std_frozen``     -- STDv with the phase-0 training allocation;
+* ``drift/std_rebalanced`` -- the same spec plus a ``RebalanceSpec``
+  (online decayed popularity tracking + scheduled live repartition).
+
+Rows land in ``BENCH_serving.json`` (hit_rate, rebalances, migrated,
+gain_vs_frozen), so the paper-level claim -- rebalanced >= frozen under
+drift -- is part of the tracked perf trajectory.  ``--quick`` is the
+CI-scale variant run by the perf smoke step; the full sweep adds a
+stationary control (no drift: rebalancing must not hurt) and a second
+cache size.
+
+  PYTHONPATH=src python -m benchmarks.fig_drift --quick
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import CacheSpec, VecLog, VecStats
+from repro.querylog import DriftConfig, generate_drifting
+from repro.serving import Broker, RebalanceSpec, ServingSpec
+
+from .common import csv_row
+
+VALUE_DIM = 2
+BATCH = 512
+
+#: the tracked trigger policy the sweep (and the regression test) pins
+REBALANCE = RebalanceSpec(every=8, decay=0.97, threshold=0.0, min_count=100.0)
+
+
+def _backend(qids: np.ndarray) -> np.ndarray:
+    return np.tile(np.asarray(qids)[:, None], (1, VALUE_DIM)).astype(np.int32)
+
+
+def _serve(spec: ServingSpec, stats: VecStats, test: np.ndarray):
+    """Serve the whole test stream; returns (BrokerStats, us_per_batch)."""
+    with Broker.from_spec(spec, stats, [_backend], value_fn=_backend) as broker:
+        broker.serve(test[:BATCH])  # warm the jits outside the timing
+        t0 = time.time()
+        for lo in range(BATCH, len(test), BATCH):
+            broker.serve(test[lo : lo + BATCH])
+        dt = time.time() - t0
+        n_batches = max((len(test) - BATCH + BATCH - 1) // BATCH, 1)
+        return broker.stats, dt / n_batches * 1e6
+
+
+def scenario(
+    n_entries: int,
+    cfg: DriftConfig,
+    tag: str,
+    rebalance: Optional[RebalanceSpec] = None,
+) -> List[str]:
+    """One drift scenario: SDC / frozen STD / rebalanced STD rows."""
+    rebalance = rebalance if rebalance is not None else REBALANCE
+    log = generate_drifting(cfg)
+    # the training prefix sees only phase 0, so the frozen allocation is
+    # honestly stale for the rest of the stream
+    vlog = VecLog(
+        keys=log.keys,
+        n_train=cfg.n_requests // max(cfg.n_phases, 1),
+        key_topic=log.true_topic,
+    )
+    stats = VecStats.from_log(vlog)
+    test = vlog.test_keys
+
+    def spec(cache: CacheSpec, reb: Optional[RebalanceSpec]) -> ServingSpec:
+        return ServingSpec(cache=cache, value_dim=VALUE_DIM, rebalance=reb)
+
+    sdc = CacheSpec.from_strategy("SDC", n_entries, f_s=0.1)
+    std = CacheSpec.from_strategy("STDv_LRU", n_entries, f_s=0.1, f_t=0.7)
+
+    rows = []
+    s_sdc, us = _serve(spec(sdc, None), stats, test)
+    rows.append(csv_row(f"drift/{tag}/sdc", us, f"hit_rate={s_sdc.hit_rate:.4f}"))
+    s_frozen, us = _serve(spec(std, None), stats, test)
+    rows.append(
+        csv_row(f"drift/{tag}/std_frozen", us, f"hit_rate={s_frozen.hit_rate:.4f}")
+    )
+    s_reb, us = _serve(spec(std, rebalance), stats, test)
+    rows.append(
+        csv_row(
+            f"drift/{tag}/std_rebalanced",
+            us,
+            f"hit_rate={s_reb.hit_rate:.4f};"
+            f"rebalances={s_reb.rebalances};migrated={s_reb.migrated};"
+            f"gain_vs_frozen={s_reb.hit_rate - s_frozen.hit_rate:.4f}",
+        )
+    )
+    return rows
+
+
+def run(quick: bool = False) -> List[str]:
+    # singleton churn keeps the topic layer honest: a global LRU (the SDC
+    # baseline's dynamic cache) eats the one-shot pollution the topic
+    # partitions are isolated from, so frozen STD degrading *below* SDC is
+    # a real drift failure, not an artifact of the baseline being weak
+    drift = DriftConfig(
+        n_requests=80_000 if quick else 400_000,
+        n_topics=16 if quick else 24,
+        queries_per_topic=1_200 if quick else 2_000,
+        n_notopic_queries=2_000 if quick else 8_000,
+        topical_fraction=0.6,
+        singleton_fraction=0.6,
+        n_phases=4,
+        seed=0,
+    )
+    rows = scenario(2048 if quick else 4096, drift, "phases=4")
+    if not quick:
+        # stationary control: with no drift, rebalancing converges to the
+        # training allocation and must not cost hit rate
+        import dataclasses
+
+        rows += scenario(
+            4096, dataclasses.replace(drift, n_phases=1), "phases=1"
+        )
+        rows += scenario(8192, drift, "phases=4/N=8192")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-scale single scenario")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ def main() -> None:
     ap.add_argument("--lda", action="store_true", help="LDA topics (not oracle)")
     ap.add_argument(
         "--only",
-        help="comma-separated subset: table2,table3,table45,table67,fig6,fig7,perf",
+        help="comma-separated subset: table2,table3,table45,table67,fig6,fig7,drift,perf",
     )
     ap.add_argument(
         "--scale", type=float, default=0.6,
@@ -52,6 +52,7 @@ def main() -> None:
     from . import (
         fig6_miss_distance,
         fig7_fs_sweep,
+        fig_drift,
         perf_cache,
         perf_kernels,
         table2_hit_rates,
@@ -74,6 +75,9 @@ def main() -> None:
         # sections actually evict: use the second-smallest size
         ("fig6", lambda: fig6_miss_distance.run(n=sizes[1], scale=min(scale, 0.2))),
         ("fig7", lambda: fig7_fs_sweep.run(sizes[:2], scale=scale)),
+        # popularity-drift sweep: frozen vs rebalanced STD (own synthetic
+        # stream, independent of the calibrated log)
+        ("drift", lambda: fig_drift.run(quick=args.quick)),
         ("perf", lambda: perf_cache.run(quick=args.quick) + perf_kernels.run()),
     ]
     print("name,us_per_call,derived")

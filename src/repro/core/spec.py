@@ -611,6 +611,7 @@ class CacheSpec:
         topic_distinct: Mapping[int, int],
         ways: int = 8,
         value_dim: int = 8,
+        popularity: Optional[Mapping[int, float]] = None,
     ):
         """Compile to a ``DeviceCacheConfig`` (``repro.serving.device_cache``).
 
@@ -619,6 +620,16 @@ class CacheSpec:
         into ``static_entries`` (preload the keys with
         :meth:`device_static_keys`).  ``include_notopic`` sections map to the
         dynamic partition, which is where the device routes no-topic queries.
+
+        ``popularity`` overrides the *training* distinct counts with live
+        popularity estimates for the proportional sizing only -- the topic
+        universe stays ``topic_distinct``'s (topics missing from
+        ``popularity`` weigh 0).  It is the spec-level twin of
+        :meth:`DeviceCacheConfig.rebalanced` (conformance-tested equal for
+        proportional specs): use it to compile a cache directly to a
+        drift-tracked allocation; the live serving path
+        (``RebalanceSpec``) rebalances the already-compiled config
+        instead.  The declared layer structure never changes either way.
         """
         from ..serving.device_cache import DeviceCacheConfig  # deferred: jax
 
@@ -638,7 +649,20 @@ class CacheSpec:
         if t.allocation == "uniform":
             sizes = uniform_allocation(n_t, sorted(distinct))
         else:
-            sizes = proportional_allocation(n_t, distinct, exact=True)
+            if popularity is not None:
+                weights = {
+                    int(tau): float(popularity.get(int(tau), 0.0)) for tau in distinct
+                }
+                if extra is not None and extra not in popularity:
+                    # mirror the default path's mean-popularity fallback for
+                    # the synthetic no-topic section (its traffic is rarely
+                    # in a caller's per-topic estimate)
+                    weights[extra] = (
+                        float(np.mean(list(popularity.values()))) if popularity else 0.0
+                    )
+            else:
+                weights = distinct
+            sizes = proportional_allocation(n_t, weights, exact=True)
         static_extra = 0
         if t.section == "sdc":
             f_ts = t.static_fraction

@@ -8,6 +8,7 @@ runnable code, scaled out with ``--shards``/``--routing``.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 50000 --entries 4096
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --routing topic
+  PYTHONPATH=src python -m repro.launch.serve --drift-phases 4 --rebalance 8
 """
 from __future__ import annotations
 
@@ -22,9 +23,10 @@ import numpy as np
 from ..configs.registry import get_arch
 from ..core import CacheSpec
 from ..core.spec import STRATEGIES
+from ..core.fast import VecLog, VecStats
 from ..models import transformer as tf
-from ..querylog import SynthConfig, generate
-from ..serving import Cluster, HedgeSpec, ServingSpec
+from ..querylog import DriftConfig, SynthConfig, generate, generate_drifting
+from ..serving import Cluster, HedgeSpec, RebalanceSpec, ServingSpec
 from ..topics import run_pipeline
 
 
@@ -50,6 +52,25 @@ def main(argv=None) -> int:
         "--routing", default="hash", choices=("hash", "topic"),
         help="query -> shard routing (topic routing moves whole partitions)",
     )
+    ap.add_argument(
+        "--rebalance", type=int, default=0, metavar="EVERY",
+        help="drift-aware topic rebalancing: check every N served batches "
+        "(0 = frozen allocation, the paper's setup)",
+    )
+    ap.add_argument(
+        "--rebalance-decay", type=float, default=0.97,
+        help="per-batch decay of the tracked topic popularity counts",
+    )
+    ap.add_argument(
+        "--rebalance-threshold", type=float, default=0.0,
+        help="min L1 share divergence before a scheduled check migrates",
+    )
+    ap.add_argument(
+        "--drift-phases", type=int, default=0,
+        help="serve a piecewise-stationary drift stream with this many "
+        "popularity phases (oracle topics, no LDA) instead of the "
+        "calibrated stationary log",
+    )
     args = ap.parse_args(argv)
 
     # build the declarative spec up front so configuration errors (e.g. an
@@ -65,22 +86,53 @@ def main(argv=None) -> int:
         microbatch=args.batch,
         value_dim=args.value_dim,
         hedge=HedgeSpec(deadline_s=2.0),
+        rebalance=(
+            RebalanceSpec(
+                every=args.rebalance,
+                decay=args.rebalance_decay,
+                threshold=args.rebalance_threshold,
+            )
+            if args.rebalance > 0
+            else None
+        ),
     )
     print(f"serving spec: {spec.to_json()}")
 
-    print("generating calibrated query log + LDA topics ...")
-    cfg = SynthConfig(
-        n_requests=args.requests,
-        n_topics=16,
-        n_topical_queries=args.requests // 10,
-        n_notopic_queries=args.requests // 20,
-        vocab_size=512,
-        seed=11,
-    )
-    synth = generate(cfg)
-    pipe = run_pipeline(synth, train_frac=0.5, lda_iters=15, lda_subsample=5_000)
-    log, stats = pipe.log, pipe.stats
-    key_topic = pipe.assignment.key_topic
+    if args.drift_phases > 0:
+        print(f"generating drift stream ({args.drift_phases} popularity phases) ...")
+        dcfg = DriftConfig(
+            n_requests=args.requests,
+            n_topics=16,
+            queries_per_topic=max(args.requests // 64, 64),
+            n_notopic_queries=max(args.requests // 40, 64),
+            n_phases=args.drift_phases,
+            seed=11,
+        )
+        synth = generate_drifting(dcfg)
+        # oracle topics: the drift generator emits no clicked documents, so
+        # the LDA pipeline has nothing to train on -- and the scenario under
+        # test is the allocation's staleness, not topic discovery
+        log = VecLog(
+            keys=synth.keys,
+            n_train=args.requests // max(args.drift_phases, 1),
+            key_topic=synth.true_topic,
+        )
+        stats = VecStats.from_log(log)
+        key_topic = synth.true_topic
+    else:
+        print("generating calibrated query log + LDA topics ...")
+        cfg = SynthConfig(
+            n_requests=args.requests,
+            n_topics=16,
+            n_topical_queries=args.requests // 10,
+            n_notopic_queries=args.requests // 20,
+            vocab_size=512,
+            seed=11,
+        )
+        synth = generate(cfg)
+        pipe = run_pipeline(synth, train_frac=0.5, lda_iters=15, lda_subsample=5_000)
+        log, stats = pipe.log, pipe.stats
+        key_topic = pipe.assignment.key_topic
 
     arch = get_arch(args.arch)
     mcfg = arch.smoke_config
@@ -120,6 +172,12 @@ def main(argv=None) -> int:
             f"topic_hits={s.topic_hits} backend_calls={s.backend_calls} "
             f"hedged={s.hedged_calls}"
         )
+        if args.rebalance > 0:
+            print(
+                f"rebalances={s.rebalances} migrated_entries={s.migrated} "
+                f"(check every {args.rebalance} batches, "
+                f"decay={args.rebalance_decay})"
+            )
         if args.shards > 1:
             for i, ss in enumerate(cluster.shard_stats):
                 print(

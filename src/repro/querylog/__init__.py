@@ -1,12 +1,14 @@
 """Query-log substrate: synthetic generation, real-log parsing, splitting."""
 from .parse import ParsedLog, normalize_query, parse_aol, parse_msn, time_split
-from .synth import SynthConfig, SynthLog, generate
+from .synth import DriftConfig, SynthConfig, SynthLog, generate, generate_drifting
 
 __all__ = [
+    "DriftConfig",
     "ParsedLog",
     "SynthConfig",
     "SynthLog",
     "generate",
+    "generate_drifting",
     "normalize_query",
     "parse_aol",
     "parse_msn",

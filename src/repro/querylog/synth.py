@@ -285,3 +285,109 @@ def generate(cfg: SynthConfig) -> SynthLog:
         phi=phi,
         config=cfg,
     )
+
+
+# ---------------------------------------------------------------------------
+# Time-varying popularity streams (popularity drift; Gao et al.)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DriftConfig:
+    """Piecewise-stationary topic popularity with drifting query mixtures.
+
+    The stream is split into ``n_phases`` equal segments.  Within a phase
+    everything is stationary; at each phase boundary the *topic*
+    popularity ranking is re-drawn (a seeded permutation of the same Zipf
+    shares -- yesterday's cold topic becomes today's hot one) and, with
+    ``rotate_queries``, the *within-topic* Zipf head rotates through the
+    topic's query pool (a drifting mixture of Zipf sources in the style
+    of Gao et al.'s time-varying popularity model).  A cache allocation
+    frozen on the first phase's statistics is therefore honestly stale
+    for every later phase -- the scenario the drift rebalancer exists
+    for, and the one ``benchmarks/fig_drift.py`` measures.
+
+    Queries are dense ids: topic ``t`` owns ``[t*m, (t+1)*m)`` with
+    ``m = queries_per_topic``; the stationary no-topic pool follows.
+    """
+
+    n_requests: int = 400_000
+    n_topics: int = 24
+    queries_per_topic: int = 1_500
+    n_notopic_queries: int = 5_000
+    topical_fraction: float = 0.85
+    #: Zipf exponent over topic popularity ranks (per phase)
+    zipf_topic: float = 1.1
+    #: Zipf exponent over query ranks inside a topic (flat-ish: capacity,
+    #: not a tiny hot head, is what buys hits)
+    zipf_query: float = 0.7
+    #: popularity phases; 1 = stationary (no drift)
+    n_phases: int = 4
+    #: rotate each topic's Zipf head at every phase boundary
+    rotate_queries: bool = True
+    #: of the no-topic requests, fraction that are fresh singletons --
+    #: churn that pollutes a global LRU but never reaches the topic
+    #: partitions (the isolation the paper's topic layer buys)
+    singleton_fraction: float = 0.0
+    seed: int = 0
+
+
+def generate_drifting(cfg: DriftConfig) -> SynthLog:
+    """Generate a piecewise-stationary drift stream (see ``DriftConfig``)."""
+    rng = np.random.default_rng(cfg.seed)
+    k, n, m = cfg.n_topics, cfg.n_requests, cfg.queries_per_topic
+    phases = max(1, int(cfg.n_phases))
+    base = _zipf_pmf(k, cfg.zipf_topic)
+    # phase 0 keeps the identity ranking; later phases permute it
+    perms = [np.arange(k)] + [rng.permutation(k) for _ in range(phases - 1)]
+    phase_of = np.minimum((np.arange(n) * phases) // n, phases - 1)
+
+    is_topical = rng.random(n) < cfg.topical_fraction
+    keys = np.empty(n, dtype=np.int64)
+    top_pos = np.flatnonzero(is_topical)
+    q_cdf = np.cumsum(_zipf_pmf(m, cfg.zipf_query))
+    for p in range(phases):
+        sel = top_pos[phase_of[top_pos] == p]
+        if not len(sel):
+            continue
+        share = np.empty(k)
+        share[perms[p]] = base  # perms[p][j] is phase p's rank-j topic
+        topic = rng.choice(k, size=len(sel), p=share)
+        rank = np.searchsorted(q_cdf, rng.random(len(sel)), side="right")
+        rank = np.minimum(rank, m - 1)
+        if cfg.rotate_queries:
+            # shift which queries form the Zipf head: same pool, new hot set
+            rank = (rank + (p * m) // phases) % m
+        keys[sel] = topic * m + rank
+
+    nt_pos = np.flatnonzero(~is_topical)
+    n_topical = k * m
+    is_single = rng.random(len(nt_pos)) < cfg.singleton_fraction
+    pool_pos = nt_pos[~is_single]
+    if len(pool_pos):
+        keys[pool_pos] = n_topical + _sample_zipf(
+            rng, len(pool_pos), cfg.n_notopic_queries, 1.0
+        )
+    sing_pos = nt_pos[is_single]
+    keys[sing_pos] = n_topical + cfg.n_notopic_queries + np.arange(len(sing_pos))
+    n_queries = n_topical + cfg.n_notopic_queries + len(sing_pos)
+
+    true_topic = np.full(n_queries, NO_TOPIC, dtype=np.int64)
+    true_topic[:n_topical] = np.repeat(np.arange(k, dtype=np.int64), m)
+
+    # surface features: enough for the admission policies to be applicable
+    freq = np.bincount(keys, minlength=n_queries)
+    n_terms = 1 + rng.poisson(0.5 + 0.6 * np.log1p(1.0 / np.maximum(freq, 1)))
+    n_chars = (n_terms * 5 + 2).astype(np.int64)
+
+    return SynthLog(
+        keys=keys,
+        timestamps=np.linspace(0, float(phases), n),  # one "day" per phase
+        true_topic=true_topic,
+        n_terms=n_terms.astype(np.int64),
+        n_chars=n_chars,
+        docs={},
+        clicks=None,
+        phi=None,
+        config=None,
+    )

@@ -14,6 +14,7 @@ from .device_cache import (
     pack_hashes,
     splitmix64,
 )
+from .rebalance import PopularityTracker, RebalanceSpec
 from .spec import HedgeSpec, ServingSpec
 
 __all__ = [
@@ -25,6 +26,8 @@ __all__ = [
     "DeviceCacheConfig",
     "HedgePolicy",
     "HedgeSpec",
+    "PopularityTracker",
+    "RebalanceSpec",
     "STDDeviceCache",
     "ServingSpec",
     "pack_hashes",

@@ -32,9 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.alloc import allocation_divergence
 from ..core.spec import CacheSpec
 from ..train import checkpoint as ckpt_lib
 from .device_cache import DYNAMIC, DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
+from .rebalance import PopularityTracker, RebalanceSpec
 
 
 @dataclasses.dataclass
@@ -48,6 +50,17 @@ class BrokerStats:
     admitted: int = 0
     #: duplicate in-batch misses answered from a single backend call
     coalesced: int = 0
+    #: non-empty batches served (the rebalance trigger's cadence clock)
+    batches: int = 0
+    #: live repartitions applied by the drift rebalancer
+    rebalances: int = 0
+    #: resident entries carried into new layouts, summed over rebalances
+    migrated: int = 0
+    #: the online popularity tracker's state: exponentially-decayed served
+    #: request counts per tracked topic (sorted id order) + a trailing
+    #: no-topic bucket; shares memory with ``Broker.tracker`` and is None
+    #: without a ``RebalanceSpec``
+    topic_counts: Optional[np.ndarray] = None
 
     @property
     def hit_rate(self) -> float:
@@ -80,6 +93,7 @@ class Broker:
         fused: bool = True,
         use_kernel: bool = False,
         engine: str = "auto",
+        rebalance: Optional[RebalanceSpec] = None,
     ):
         self.cache = cache
         #: declarative configuration this cache was compiled from (embedded
@@ -113,19 +127,35 @@ class Broker:
         if engine not in ("host", "device"):
             raise ValueError(f"engine must be auto|host|device, got {engine!r}")
         self.engine = engine
+        self.use_kernel = use_kernel
         self.stats = BrokerStats()
+        #: drift-aware rebalancing: tracker observes every served batch's
+        #: topics; every ``rebalance.every`` batches the tracked popularity
+        #: is recompiled into a fresh proportional allocation and resident
+        #: entries migrate through ``STDDeviceCache.repartition``
+        self.rebalance_spec = rebalance
+        self.tracker: Optional[PopularityTracker] = None
+        if rebalance is not None:
+            self.tracker = rebalance.to_tracker(cache.topic_ids)
+            self.stats.topic_counts = self.tracker.counts
+        self._bind_cache(cache)
+        self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
+
+    def _bind_cache(self, cache: STDDeviceCache) -> None:
+        """(Re)compile the jitted serving ops against ``cache`` -- run at
+        construction and after every rebalance swaps the cache layout."""
+        self.cache = cache
         self._probe = jax.jit(cache.probe)
         self._commit = jax.jit(cache.commit_vectorized)
         self._fused_step = jax.jit(
             functools.partial(
                 cache.probe_and_commit,
-                use_kernel=use_kernel,
+                use_kernel=self.use_kernel,
                 # compile the kernel on real accelerators; emulate on CPU
                 interpret=jax.default_backend() == "cpu",
             )
         )
         self._fill = jax.jit(cache.fill_values)
-        self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
 
     @classmethod
     def from_spec(
@@ -175,6 +205,7 @@ class Broker:
             fused=spec.fused,
             use_kernel=spec.use_kernel,
             engine=spec.engine,
+            rebalance=spec.rebalance,
         )
 
     # -- lifecycle -----------------------------------------------------------
@@ -221,7 +252,9 @@ class Broker:
         h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
         if self.fused:
-            return self._serve_fused(query_ids, parts, h_hi, h_lo)
+            out = self._serve_fused(query_ids, parts, h_hi, h_lo)
+            self._after_batch(topics)
+            return out
         hit, layer, value = self._probe(
             self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts)
         )
@@ -270,7 +303,22 @@ class Broker:
         # convention ever changes
         self.stats.static_hits += int(((layer == 0) & hit).sum())
         self.stats.topic_hits += int(((layer == 1) & hit).sum())
+        self._after_batch(topics)
         return values, hit
+
+    def _after_batch(self, topics: np.ndarray) -> None:
+        """Post-serve bookkeeping: advance the batch clock, feed the drift
+        tracker, and run a scheduled rebalance check at the spec cadence.
+        Rebalancing happens strictly *between* batches."""
+        if len(topics) == 0:
+            return
+        self.stats.batches += 1
+        if self.tracker is None:
+            return
+        self.tracker.observe(np.asarray(topics))
+        every = self.rebalance_spec.every
+        if every and self.stats.batches % every == 0:
+            self.rebalance()
 
     def _serve_fused(self, query_ids, parts, h_hi, h_lo) -> Tuple[np.ndarray, np.ndarray]:
         b = len(query_ids)
@@ -354,22 +402,71 @@ class Broker:
             if not futs:
                 raise RuntimeError("all backends failed")
 
+    # -- drift-aware rebalancing ----------------------------------------------
+
+    def rebalance(self, force: bool = False) -> bool:
+        """Recompute the topic allocation from tracked popularity and
+        migrate resident entries into the new layout (live, between
+        batches).
+
+        Returns True when a migration ran.  Skips (returning False) when
+        the tracker has no signal yet (``min_count``), when the target
+        integer allocation equals the current one -- the no-op invariant:
+        the cache state stays bit-identical on every engine -- or, unless
+        ``force``, when the L1 divergence between the current allocation's
+        shares and the tracked popularity shares is below the spec's
+        ``threshold``.
+        """
+        if self.tracker is None:
+            raise ValueError(
+                "broker was built without a RebalanceSpec; there is no "
+                "popularity tracker to rebalance from"
+            )
+        sp = self.rebalance_spec
+        if self.tracker.topic_mass < max(sp.min_count, 1e-9):
+            return False  # no signal yet: keep the current allocation
+        pop = self.tracker.popularity()
+        new_cfg = self.cache.cfg.rebalanced(pop)
+        if new_cfg == self.cache.cfg:
+            return False
+        if not force and sp.threshold > 0.0:
+            current = {int(t): int(c) for t, c in self.cache.cfg.topic_entries.items()}
+            if allocation_divergence(current, pop) < sp.threshold:
+                return False
+        new_cache, new_state = self.cache.repartition(
+            self.state, new_cfg, engine="host" if self.engine == "host" else "vec"
+        )
+        self.state = new_state
+        self._bind_cache(new_cache)
+        self.stats.rebalances += 1
+        self.stats.migrated += int((np.asarray(new_state["key_hi"]) != 0).sum())
+        return True
+
     # -- fault tolerance -------------------------------------------------------
 
+    def _stats_tree(self) -> Dict[str, np.ndarray]:
+        """Checkpointable stats leaves (None fields -- an absent tracker --
+        are dropped; npz cannot hold them and there is nothing to save)."""
+        return {
+            k: np.asarray(v)
+            for k, v in dataclasses.asdict(self.stats).items()
+            if v is not None
+        }
+
     def save(self, ckpt_dir: str, step: int) -> str:
-        tree = {"cache": self.state, "stats": dataclasses.asdict(self.stats)}
-        tree["stats"] = {k: np.asarray(v) for k, v in tree["stats"].items()}
+        tree = {"cache": self.state, "stats": self._stats_tree()}
         if self.spec is not None:
             tree["spec_json"] = np.frombuffer(
                 self.spec.to_json().encode("utf-8"), dtype=np.uint8
             )
+        # the *live* allocation: a rebalanced broker's layout differs from
+        # the spec's initial compile, and a restore must not revert it
+        tree["alloc_json"] = np.frombuffer(
+            self.cache.cfg.to_json().encode("utf-8"), dtype=np.uint8
+        )
         return ckpt_lib.save(ckpt_dir, step, tree)
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
-        tree_like = {
-            "cache": self.state,
-            "stats": {k: np.asarray(v) for k, v in dataclasses.asdict(self.stats).items()},
-        }
         if step is None:
             step = ckpt_lib.latest_step(ckpt_dir)
             if step is None:
@@ -386,8 +483,63 @@ class Broker:
                         "checkpoint was produced under a different CacheSpec: "
                         f"{saved.to_json()} != {self.spec.to_json()}"
                     )
+        # the checkpoint's live allocation (still before touching arrays):
+        # a broker restored mid-drift must keep serving with the rebalanced
+        # layout, not silently revert to the spec's initial one.  The swap
+        # is staged and only committed after the arrays load, so a failed
+        # restore leaves the broker exactly as it was.
+        pending_cache = None
+        state_template = self.state
+        raw = ckpt_lib.load_leaf(ckpt_dir, step, "alloc_json")
+        if raw is not None:
+            saved_cfg = DeviceCacheConfig.from_json(bytes(np.asarray(raw)).decode("utf-8"))
+            if saved_cfg != self.cache.cfg:
+                self._check_allocation_compatible(saved_cfg)
+                pending_cache = STDDeviceCache(saved_cfg)
+                state_template = dict(pending_cache.init_state)
+                # the static layer is read-only and untouched by rebalance:
+                # keep the preloaded arrays (their shapes validate the
+                # checkpoint's)
+                for k in ("static_hi", "static_lo", "static_value"):
+                    state_template[k] = self.state[k]
+        stats_tree = self._stats_tree()
+        if (
+            "topic_counts" in stats_tree
+            and ckpt_lib.load_leaf(ckpt_dir, step, "stats/topic_counts") is None
+        ):
+            # checkpoint predates the tracker: restore everything else and
+            # let the tracker cold-start from its zero counts
+            del stats_tree["topic_counts"]
+        tree_like = {"cache": state_template, "stats": stats_tree}
         tree, got = ckpt_lib.restore(ckpt_dir, tree_like, step)
+        if pending_cache is not None:
+            self._bind_cache(pending_cache)
         self.state = jax.tree.map(jnp.asarray, tree["cache"])
         for k, v in tree["stats"].items():
-            setattr(self.stats, k, int(v))
+            if k == "topic_counts":
+                # present only when a tracker exists (tree_like mirrors the
+                # live stats); in place, so stats keeps sharing the array
+                self.tracker.load(np.asarray(v, np.float64))
+            else:
+                setattr(self.stats, k, int(v))
         return got
+
+    def _check_allocation_compatible(self, saved_cfg: DeviceCacheConfig) -> None:
+        """Only the per-topic split may differ from the running config --
+        anything else means the checkpoint belongs to a different
+        deployment and fails informatively, like the spec checks."""
+        cur = self.cache.cfg
+        same_universe = (
+            saved_cfg.total_entries == cur.total_entries
+            and saved_cfg.ways == cur.ways
+            and saved_cfg.value_dim == cur.value_dim
+            and saved_cfg.static_entries == cur.static_entries
+            and saved_cfg.dynamic_entries == cur.dynamic_entries
+            and set(saved_cfg.topic_entries) == set(cur.topic_entries)
+        )
+        if not same_universe:
+            raise ValueError(
+                "checkpoint allocation is incompatible with this broker's "
+                f"cache layout (not just a topic re-split): {saved_cfg.to_json()} "
+                f"!= {cur.to_json()}"
+            )

@@ -184,14 +184,36 @@ class Cluster:
                 hit[idx] = h
         return values, hit
 
+    # -- drift-aware rebalancing -------------------------------------------
+
+    def rebalance(self, force: bool = False) -> List[bool]:
+        """Run a rebalance check on every shard; returns per-shard outcomes.
+
+        Rebalancing is shard-local by design: topic -> shard ownership is
+        pure routing (``tau mod N``) and never moves, so each shard
+        re-splits only its *own* topic partitions from its own tracked
+        traffic and the disjoint-slice invariant holds after every
+        rebalance with no cross-shard coordination.  Scheduled triggers
+        (``RebalanceSpec.every``) fire inside each shard's serve path the
+        same way.
+        """
+        return [b.rebalance(force=force) for b in self.brokers]
+
     # -- stats -------------------------------------------------------------
 
     @property
     def stats(self) -> BrokerStats:
-        """Aggregate ``BrokerStats`` across every shard."""
+        """Aggregate ``BrokerStats`` across every shard.
+
+        Scalar counters sum; ``topic_counts`` stays None in the aggregate
+        (each shard tracks its own disjoint topic universe -- read the
+        per-shard trackers via ``shard_stats``).
+        """
         agg = BrokerStats()
         for b in self.brokers:
             for f in dataclasses.fields(BrokerStats):
+                if f.name == "topic_counts":
+                    continue
                 setattr(agg, f.name, getattr(agg, f.name) + getattr(b.stats, f.name))
         return agg
 

@@ -26,6 +26,7 @@ out.  See docs/device_cache.md.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
@@ -124,6 +125,49 @@ class DeviceCacheConfig:
     ) -> "DeviceCacheConfig":
         """Compile a :class:`repro.core.spec.CacheSpec` to a device config."""
         return spec.to_device(topic_distinct, ways=ways, value_dim=value_dim)
+
+    @property
+    def topic_budget(self) -> int:
+        """Total entries owned by the topic layer (invariant under rebalance)."""
+        return int(sum(self.topic_entries.values()))
+
+    def rebalanced(self, popularity: Mapping[int, float]) -> "DeviceCacheConfig":
+        """Same layer budgets, topic entries re-split by live popularity.
+
+        The static/dynamic layers and the topic layer's *total* budget are
+        untouched; only the per-topic split moves (paper Sec. 3.3
+        proportional allocation, fed tracked counts instead of training
+        distinct counts).  The topic universe is this config's -- topics
+        missing from ``popularity`` weigh 0.
+        """
+        weights = {
+            int(t): float(popularity.get(int(t), 0.0)) for t in self.topic_entries
+        }
+        sizes = proportional_allocation(self.topic_budget, weights, exact=True)
+        return dataclasses.replace(self, topic_entries=sizes)
+
+    # -- serialization (checkpoints embed the live allocation) --------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "total_entries": int(self.total_entries),
+                "ways": int(self.ways),
+                "value_dim": int(self.value_dim),
+                "topic_entries": {
+                    str(int(t)): int(c) for t, c in self.topic_entries.items()
+                },
+                "dynamic_entries": int(self.dynamic_entries),
+                "static_entries": int(self.static_entries),
+            },
+            sort_keys=True,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "DeviceCacheConfig":
+        d = json.loads(s)
+        d["topic_entries"] = {int(t): int(c) for t, c in d["topic_entries"].items()}
+        return cls(**d)
 
 
 class STDDeviceCache:
@@ -625,13 +669,33 @@ class STDDeviceCache:
 
     # -- elastic re-partitioning -------------------------------------------
 
-    def repartition(self, state, new_cfg: DeviceCacheConfig) -> Tuple["STDDeviceCache", Any]:
+    def repartition(
+        self, state, new_cfg: DeviceCacheConfig, engine: str = "vec"
+    ) -> Tuple["STDDeviceCache", Any]:
         """Rebuild the partition table (e.g., fresh topic popularity) and
-        migrate resident entries host-side, preserving recency order."""
+        migrate resident entries, preserving recency order.
+
+        Live entries are bulk-inserted into the new layout oldest-first so
+        the newest survive a shrinking partition -- exactly the eviction
+        order a sequential replay would produce.  The static layer is
+        read-only and carried over untouched (hashes *and* values), as is
+        the recency clock's monotonicity (the new clock restarts at the
+        number of migrated entries; stamps stay strictly increasing in
+        migration order).
+
+        ``engine`` picks the bulk-insert path: ``"vec"`` (the jnp
+        vectorized commit), ``"host"`` (the numpy engine the broker uses
+        on CPU backends), ``"oracle"`` (the fori_loop reference) -- all
+        bit-exact with each other (property-tested), so a live rebalance
+        lands the same state whichever engine the broker serves with.
+        """
+        if engine not in ("vec", "host", "oracle"):
+            raise ValueError(f"engine must be vec|host|oracle, got {engine!r}")
         new_cache = STDDeviceCache(new_cfg, static_hashes=None)
         new_state = dict(new_cache.init_state)
         new_state["static_hi"] = state["static_hi"]
         new_state["static_lo"] = state["static_lo"]
+        new_state["static_value"] = state["static_value"]
         key_hi = np.asarray(state["key_hi"])
         key_lo = np.asarray(state["key_lo"])
         stamp = np.asarray(state["stamp"])
@@ -650,11 +714,22 @@ class STDDeviceCache:
         for t, i in self.part_of_topic.items():
             topics[parts == i] = t
         new_parts = new_cache.parts_for(topics)
-        hi = jnp.asarray((h64 >> np.uint64(32)).astype(np.uint32))
-        lo = jnp.asarray((h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32))
-        vals = jnp.asarray(value[sets_l, ways_l])
-        admit = jnp.ones(len(parts), bool)
-        new_state = new_cache.commit_vectorized(
-            new_state, hi, lo, jnp.asarray(new_parts), vals, admit
-        )
+        hi = (h64 >> np.uint64(32)).astype(np.uint32)
+        lo = (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        vals = value[sets_l, ways_l]
+        admit = np.ones(len(parts), bool)
+        if engine == "host":
+            new_state = new_cache.commit_host(
+                new_state, hi, lo, new_parts, vals, admit, inplace=True
+            )
+        elif engine == "oracle":
+            new_state = new_cache.commit(
+                new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
+                jnp.asarray(vals), jnp.asarray(admit),
+            )
+        else:
+            new_state = new_cache.commit_vectorized(
+                new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
+                jnp.asarray(vals), jnp.asarray(admit),
+            )
         return new_cache, new_state

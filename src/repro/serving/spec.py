@@ -48,6 +48,7 @@ import numpy as np
 
 from ..core.spec import CacheSpec
 from .device_cache import DeviceCacheConfig, splitmix64
+from .rebalance import RebalanceSpec
 
 SERVING_SPEC_VERSION = 1
 
@@ -98,6 +99,8 @@ class ServingSpec:
     value_dim: int = 8
     ways: int = 8
     hedge: Optional[HedgeSpec] = None
+    #: drift-aware topic rebalancing (None = the paper's frozen allocation)
+    rebalance: Optional[RebalanceSpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -133,9 +136,11 @@ class ServingSpec:
                 f"ServingSpec version {version} is newer than {SERVING_SPEC_VERSION}"
             )
         hedge = d.pop("hedge", None)
+        rebalance = d.pop("rebalance", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
+            rebalance=RebalanceSpec(**rebalance) if rebalance is not None else None,
             **d,
         )
 
@@ -233,4 +238,4 @@ class ServingSpec:
         )
 
 
-__all__ = ["SERVING_SPEC_VERSION", "HedgeSpec", "ServingSpec"]
+__all__ = ["SERVING_SPEC_VERSION", "HedgeSpec", "RebalanceSpec", "ServingSpec"]

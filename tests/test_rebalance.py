@@ -1,0 +1,485 @@
+"""Drift-aware topic rebalancing: property + conformance + regression layer.
+
+Pins the rebalance subsystem's contracts:
+
+* repartition migration is bit-exact across all three engines (jnp
+  vectorized, numpy host, fori_loop oracle) and conserves entries: no
+  key invention, no duplicates, and no key lost whose slot in the new
+  layout was not genuinely contested (> W migrants into one set);
+* rebalancing to an identical allocation is a no-op -- cache state stays
+  bit-identical -- on both broker engines;
+* the static layer (hashes *and* values) survives repartition untouched;
+* checkpoint/restore round-trips the tracker state and the live
+  allocation (a restored broker must not silently revert to the spec's
+  initial allocation), and an incompatible saved allocation fails
+  informatively;
+* the paper-level drift claim: on a seeded piecewise-stationary stream,
+  rebalanced STD beats frozen STD (the full sweep is marked
+  ``drift_sweep`` and excluded from tier-1).
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import CacheSpec, VecLog, VecStats
+from repro.core.alloc import allocation_divergence, proportional_allocation
+from repro.querylog import DriftConfig, generate_drifting
+from repro.serving import (
+    Broker,
+    DeviceCacheConfig,
+    PopularityTracker,
+    RebalanceSpec,
+    STDDeviceCache,
+    ServingSpec,
+    pack_hashes,
+    splitmix64,
+)
+
+STATE_KEYS = ("key_hi", "key_lo", "stamp", "value", "clock")
+ENGINES = ("vec", "host", "oracle")
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _filled_cache(seed, ways=4, t0=32, t1=16, dyn=32, static=None):
+    """A two-topic cache driven through a few random batches."""
+    rng = np.random.default_rng(seed)
+    cfg = DeviceCacheConfig(
+        total_entries=t0 + t1 + dyn, ways=ways, value_dim=2,
+        topic_entries={0: t0, 1: t1}, dynamic_entries=dyn,
+    )
+    cache = STDDeviceCache(
+        cfg,
+        static_hashes=splitmix64(np.asarray(static)) if static else None,
+        static_values=(
+            np.asarray(static)[:, None].repeat(2, 1).astype(np.int32) if static else None
+        ),
+    )
+    # stable topic per key, so a key lives in exactly one partition and the
+    # migration stream is duplicate-free
+    topic_of_q = rng.integers(-1, 2, size=600)
+    state = dict(cache.init_state)
+    for _ in range(4):
+        qids = rng.integers(0, 600, size=96)
+        hi, lo = pack_hashes(splitmix64(qids))
+        parts = cache.parts_for(topic_of_q[qids])
+        vals = rng.integers(0, 1000, size=(96, 2)).astype(np.int32)
+        admit = rng.random(96) < 0.8
+        state = cache.commit_host(state, hi, lo, parts, vals, admit)
+    return cache, state
+
+
+def _resident(state) -> np.ndarray:
+    """Sorted packed 64-bit hashes of every resident (non-static) entry."""
+    kh = np.asarray(state["key_hi"]).astype(np.uint64)
+    kl = np.asarray(state["key_lo"]).astype(np.uint64)
+    live = kh != 0
+    return np.sort((kh[live] << np.uint64(32)) | kl[live])
+
+
+def _assert_states_equal(ref, got, label):
+    for k in STATE_KEYS + ("static_hi", "static_lo", "static_value"):
+        a, b = np.asarray(ref[k]), np.asarray(got[k])
+        assert (a == b).all(), f"{label}: state[{k}] diverged"
+
+
+def _migration_plan(cache, state, new_cache):
+    """(h64, target set) of every live entry, replicating repartition's
+    routing -- the test's independent model of where migrants land."""
+    key_hi = np.asarray(state["key_hi"])
+    key_lo = np.asarray(state["key_lo"])
+    live = key_hi != 0
+    sets_l, ways_l = np.nonzero(live)
+    h64 = (key_hi[sets_l, ways_l].astype(np.uint64) << np.uint64(32)) | key_lo[
+        sets_l, ways_l
+    ].astype(np.uint64)
+    old_part = np.searchsorted(
+        cache.part_offset[1:], np.arange(cache.n_sets), side="right"
+    )
+    parts = old_part[sets_l]
+    topics = np.full(len(parts), -1, dtype=np.int64)
+    for t, i in cache.part_of_topic.items():
+        topics[parts == i] = t
+    new_parts = new_cache.parts_for(topics)
+    h_lo = (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    set_idx = new_cache._set_index_host(h_lo, new_parts)
+    return h64, set_idx
+
+
+if HAVE_HYPOTHESIS:
+    _cases = given(st.integers(0, 10_000))
+    _settings = settings(max_examples=8, deadline=None)
+else:
+    def _cases(f):
+        return pytest.mark.parametrize("seed", [0, 1, 7, 13, 42])(f)
+
+    def _settings(f):
+        return f
+
+
+# -- repartition migration properties ---------------------------------------
+
+
+@_settings
+@_cases
+def test_repartition_engines_bit_exact_and_entry_conserving(seed):
+    rng = np.random.default_rng(seed + 100_000)
+    cache, state = _filled_cache(seed)
+    # random re-split of the same topic budget (either topic may shrink to 0)
+    budget = cache.cfg.topic_budget
+    t0 = int(rng.integers(0, budget + 1))
+    new_cfg = dataclasses.replace(
+        cache.cfg, topic_entries={0: t0, 1: budget - t0}
+    )
+    results = {e: cache.repartition(state, new_cfg, engine=e) for e in ENGINES}
+    ref_cache, ref_state = results["vec"]
+    for e in ("host", "oracle"):
+        _assert_states_equal(ref_state, results[e][1], f"engine={e}")
+
+    h64, set_idx = _migration_plan(cache, state, ref_cache)
+    got = _resident(ref_state)
+    # conservation: every resident key migrated from the old state, exactly
+    # min(#migrants into the set, W) entries survive per set, ...
+    per_set = np.bincount(set_idx, minlength=ref_cache.n_sets)
+    assert len(got) == np.minimum(per_set, ref_cache.cfg.ways).sum()
+    assert len(np.unique(got)) == len(got), "duplicate keys after migration"
+    assert np.isin(got, h64).all(), "migration invented a key"
+    # ... and no key is lost whose target set was not genuinely contested
+    safe = h64[per_set[set_idx] <= ref_cache.cfg.ways]
+    assert np.isin(safe, got).all(), "lost a key from an uncontested set"
+
+
+@_settings
+@_cases
+def test_repartition_same_allocation_keeps_every_entry(seed):
+    """Identical allocation: migration must carry every resident entry
+    (set geometry unchanged => nothing is ever contested)."""
+    cache, state = _filled_cache(seed + 7)
+    before = _resident(state)
+    for e in ENGINES:
+        _, new_state = cache.repartition(state, cache.cfg, engine=e)
+        assert np.array_equal(_resident(new_state), before), e
+
+
+def test_repartition_carries_static_layer_values():
+    static = [10_000, 10_001, 10_002]
+    cache, state = _filled_cache(3, static=static)
+    new_cfg = dataclasses.replace(cache.cfg, topic_entries={0: 8, 1: 40})
+    new_cache, new_state = cache.repartition(state, new_cfg)
+    for k in ("static_hi", "static_lo", "static_value"):
+        assert np.array_equal(np.asarray(new_state[k]), np.asarray(state[k])), k
+    # a static key still answers with its preloaded value through the new cache
+    hi, lo = pack_hashes(splitmix64(np.asarray(static)))
+    hit, layer, value = new_cache.probe(
+        new_state, hi, lo, np.zeros(len(static), np.int32)
+    )
+    assert np.asarray(hit).all() and (np.asarray(layer) == 0).all()
+    assert np.array_equal(np.asarray(value)[:, 0], static)
+
+
+# -- broker-level no-op + trigger -------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["host", "device"])
+def test_rebalance_with_identical_allocation_is_noop(engine):
+    cache, _ = _filled_cache(11)
+    broker = Broker(
+        cache,
+        [_backend(2)],
+        topic_of=lambda q: np.asarray(q) % 3 - 1,
+        rebalance=RebalanceSpec(every=10_000, decay=1.0, min_count=0.0),
+        engine=engine,
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        broker.serve(rng.integers(0, 600, size=64))
+    before = {k: np.array(np.asarray(broker.state[k])) for k in STATE_KEYS}
+    # tracked popularity exactly proportional to the current allocation:
+    # the recompiled target equals the current split
+    entries = broker.cache.cfg.topic_entries
+    broker.tracker.counts[:-1] = [entries[t] for t in broker.tracker.topic_ids]
+    broker.tracker.counts[-1] = 0.0
+    assert broker.rebalance() is False
+    assert broker.rebalance(force=True) is False
+    assert broker.stats.rebalances == 0
+    for k in STATE_KEYS:
+        assert np.array_equal(np.asarray(broker.state[k]), before[k]), k
+    broker.close()
+
+
+def test_scheduled_trigger_fires_at_cadence_and_threshold_gates():
+    cache, _ = _filled_cache(12)
+    broker = Broker(
+        cache,
+        [_backend(2)],
+        topic_of=lambda q: np.where(np.asarray(q) < 300, 0, 1),
+        rebalance=RebalanceSpec(every=2, decay=0.9, threshold=1.9, min_count=0.0),
+        engine="host",
+    )
+    rng = np.random.default_rng(1)
+    # traffic wildly different from the 32/16 split, but threshold 1.9 is
+    # nearly the L1 maximum: scheduled checks run and decline to migrate
+    for _ in range(6):
+        broker.serve(rng.integers(300, 600, size=64))
+    assert broker.stats.batches == 6 and broker.stats.rebalances == 0
+    div = allocation_divergence(
+        {int(t): int(c) for t, c in broker.cache.cfg.topic_entries.items()},
+        broker.tracker.popularity(),
+    )
+    assert div < 1.9
+    # force bypasses the threshold; the skewed traffic moves the split
+    assert broker.rebalance(force=True) is True
+    assert broker.stats.rebalances == 1
+    assert broker.cache.cfg.topic_entries[1] > broker.cache.cfg.topic_entries[0]
+    assert broker.cache.cfg.topic_budget == 48  # budget invariant
+    broker.close()
+
+
+# -- tracker unit ------------------------------------------------------------
+
+
+def test_tracker_decay_tail_bucket_and_allocation():
+    tr = PopularityTracker([5, 2, 9], decay=0.5)
+    assert list(tr.topic_ids) == [2, 5, 9]
+    tr.observe(np.array([2, 2, 5, -1, 7]))  # -1 and unknown 7 -> tail bucket
+    assert np.allclose(tr.counts, [2, 1, 0, 2])
+    tr.observe(np.array([9, 9, 9, 9]))
+    assert np.allclose(tr.counts, [1, 0.5, 4, 1])
+    assert tr.allocation(8) == proportional_allocation(
+        8, {2: 1.0, 5: 0.5, 9: 4.0}, exact=True
+    )
+    assert tr.allocation(8, min_count=100.0) is None  # below the signal floor
+    assert PopularityTracker([], decay=0.9).allocation(8) is None
+    tr.observe(np.zeros(0, np.int64))  # empty batch: no decay, no counts
+    assert np.allclose(tr.counts, [1, 0.5, 4, 1])
+
+
+def test_rebalance_spec_validates_and_round_trips():
+    with pytest.raises(ValueError, match="every"):
+        RebalanceSpec(every=0)
+    with pytest.raises(ValueError, match="decay"):
+        RebalanceSpec(decay=0.0)
+    with pytest.raises(ValueError, match="divergence"):
+        RebalanceSpec(threshold=3.0)
+    with pytest.raises(ValueError, match="min_count"):
+        RebalanceSpec(min_count=-1)
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 256, f_s=0.25, f_t=0.5),
+        rebalance=RebalanceSpec(every=16, decay=0.9, threshold=0.2, min_count=5),
+    )
+    again = ServingSpec.from_json(spec.to_json())
+    assert again == spec and again.rebalance == spec.rebalance
+
+
+def test_to_device_popularity_override_matches_rebalanced_config():
+    """The spec-level sizing override and the device-level re-split are
+    the same operation: compiling with live popularity == compiling with
+    training counts then rebalancing."""
+    spec = CacheSpec.from_strategy("STDv_LRU", 512, f_s=0.2, f_t=0.6)
+    distinct = {0: 50, 1: 100, 2: 25}
+    pop = {0: 10.0, 1: 1.0, 2: 30.0}
+    base = spec.to_device(distinct, ways=4, value_dim=2)
+    live = spec.to_device(distinct, ways=4, value_dim=2, popularity=pop)
+    assert live == base.rebalanced(pop)
+    assert live.topic_budget == base.topic_budget
+    # a topic absent from the estimate weighs 0 in both paths
+    partial = {1: 5.0, 2: 5.0}
+    assert spec.to_device(distinct, popularity=partial).topic_entries[0] == 0
+    assert base.rebalanced(partial).topic_entries[0] == 0
+
+
+def test_allocation_divergence_bounds():
+    assert allocation_divergence({0: 1, 1: 1}, {0: 2, 1: 2}) == 0.0
+    assert allocation_divergence({0: 1}, {1: 1}) == 2.0
+    assert allocation_divergence({}, {}) == 0.0
+    assert allocation_divergence({}, {0: 3}) == 2.0
+    assert allocation_divergence({0: 3, 1: 1}, {0: 1, 1: 3}) == pytest.approx(1.0)
+
+
+# -- checkpoint round-trip ---------------------------------------------------
+
+
+def _drift_fixture(seed=0, n=30_000):
+    cfg = DriftConfig(
+        n_requests=n, n_topics=12, queries_per_topic=600,
+        n_notopic_queries=1_500, n_phases=3, seed=seed,
+    )
+    log = generate_drifting(cfg)
+    vlog = VecLog(keys=log.keys, n_train=n // 3, key_topic=log.true_topic)
+    return vlog, VecStats.from_log(vlog)
+
+
+def test_checkpoint_round_trips_tracker_and_live_allocation():
+    vlog, stats = _drift_fixture()
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 1024, f_s=0.2, f_t=0.6),
+        value_dim=2,
+        rebalance=RebalanceSpec(every=4, decay=0.95, min_count=50.0),
+    )
+    backend = _backend(2)
+    test = vlog.test_keys
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as broker:
+        for lo in range(0, 8_000, 256):
+            broker.serve(test[lo : lo + 256])
+        assert broker.stats.rebalances > 0
+        with tempfile.TemporaryDirectory() as d:
+            broker.save(d, 3)
+            with Broker.from_spec(spec, stats, [backend], value_fn=backend) as again:
+                # the fresh broker starts on the spec's initial allocation...
+                assert again.cache.cfg != broker.cache.cfg
+                assert again.restore(d) == 3
+                # ...and restore adopts the live rebalanced one + tracker
+                assert again.cache.cfg == broker.cache.cfg
+                assert np.allclose(again.tracker.counts, broker.tracker.counts)
+                assert again.stats.topic_counts is again.tracker.counts
+                assert again.stats.rebalances == broker.stats.rebalances
+                assert again.stats.batches == broker.stats.batches
+                # and it keeps serving identically, triggers included
+                for lo in range(8_000, 12_000, 256):
+                    v0, h0 = broker.serve(test[lo : lo + 256])
+                    v1, h1 = again.serve(test[lo : lo + 256])
+                    assert np.array_equal(v0, v1) and np.array_equal(h0, h1)
+                assert again.stats.rebalances == broker.stats.rebalances
+
+
+def test_restore_without_tracker_still_adopts_live_allocation():
+    """A frozen-config broker restoring a rebalanced checkpoint must not
+    silently revert to the spec's initial allocation."""
+    vlog, stats = _drift_fixture(seed=1)
+    cache = CacheSpec.from_strategy("STDv_LRU", 1024, f_s=0.2, f_t=0.6)
+    reb_spec = ServingSpec(
+        cache=cache, value_dim=2,
+        rebalance=RebalanceSpec(every=4, decay=0.95, min_count=50.0),
+    )
+    frozen_spec = ServingSpec(cache=cache, value_dim=2)
+    backend = _backend(2)
+    with Broker.from_spec(reb_spec, stats, [backend], value_fn=backend) as broker:
+        for lo in range(0, 8_000, 256):
+            broker.serve(vlog.test_keys[lo : lo + 256])
+        assert broker.stats.rebalances > 0
+        with tempfile.TemporaryDirectory() as d:
+            broker.save(d, 1)
+            with Broker.from_spec(frozen_spec, stats, [backend], value_fn=backend) as b2:
+                b2.restore(d)
+                assert b2.cache.cfg == broker.cache.cfg
+                assert b2.cache.cfg.topic_entries != frozen_spec.cache.to_device(
+                    stats.topic_distinct, ways=frozen_spec.ways,
+                    value_dim=frozen_spec.value_dim,
+                ).topic_entries
+
+
+def test_failed_restore_leaves_broker_untouched():
+    """A restore that fails *after* the allocation check must not leave
+    the broker on a wiped cache or a half-adopted layout."""
+    import os
+
+    vlog, stats = _drift_fixture(seed=4)
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 1024, f_s=0.2, f_t=0.6),
+        value_dim=2,
+        rebalance=RebalanceSpec(every=4, decay=0.95, min_count=50.0),
+    )
+    backend = _backend(2)
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as broker:
+        for lo in range(0, 6_000, 256):
+            broker.serve(vlog.test_keys[lo : lo + 256])
+        assert broker.stats.rebalances > 0
+        with tempfile.TemporaryDirectory() as d:
+            broker.save(d, 1)
+            # corrupt the checkpoint past the (passing) allocation check
+            npz = os.path.join(d, "step_0000000001", "arrays.npz")
+            arrays = dict(np.load(npz))
+            del arrays["stats/hits"]
+            np.savez(npz, **arrays)
+            with Broker.from_spec(spec, stats, [backend], value_fn=backend) as fresh:
+                cfg_before = fresh.cache.cfg
+                res_before = _resident(fresh.state)
+                with pytest.raises(KeyError, match="hits"):
+                    fresh.restore(d)
+                assert fresh.cache.cfg == cfg_before  # no half-adopted layout
+                assert np.array_equal(_resident(fresh.state), res_before)
+                fresh.serve(vlog.test_keys[:256])  # still serves
+
+
+def test_restore_with_incompatible_allocation_raises_informatively():
+    """Alongside the CacheSpec/ServingSpec mismatch checks: a checkpoint
+    whose allocation differs beyond a topic re-split is refused."""
+    vlog, stats = _drift_fixture(seed=2)
+    cache = CacheSpec.from_strategy("STDv_LRU", 1024, f_s=0.2, f_t=0.6)
+    spec4 = ServingSpec(cache=cache, value_dim=2, ways=4)
+    spec8 = ServingSpec(cache=cache, value_dim=2, ways=8)
+    backend = _backend(2)
+    with Broker.from_spec(spec4, stats, [backend], value_fn=backend) as broker:
+        broker.serve(vlog.test_keys[:256])
+        with tempfile.TemporaryDirectory() as d:
+            broker.save(d, 1)
+            with Broker.from_spec(spec8, stats, [backend], value_fn=backend) as b8:
+                with pytest.raises(ValueError, match="incompatible"):
+                    b8.restore(d)
+
+
+# -- the paper-level drift claim ---------------------------------------------
+
+
+def _drift_hit_rates(rebalance, n=80_000, seed=0, n_entries=2048):
+    cfg = DriftConfig(
+        n_requests=n, n_topics=16, queries_per_topic=1_200,
+        n_notopic_queries=2_000, n_phases=4, seed=seed,
+    )
+    log = generate_drifting(cfg)
+    vlog = VecLog(keys=log.keys, n_train=n // 4, key_topic=log.true_topic)
+    stats = VecStats.from_log(vlog)
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", n_entries, f_s=0.1, f_t=0.7),
+        value_dim=2,
+        rebalance=rebalance,
+    )
+    backend = _backend(2)
+    with Broker.from_spec(spec, stats, [backend], value_fn=backend) as broker:
+        test = vlog.test_keys
+        for lo in range(0, len(test), 512):
+            broker.serve(test[lo : lo + 512])
+        return broker.stats
+
+
+def test_rebalanced_std_beats_frozen_std_under_drift():
+    """Seeded, tolerance-bounded pin of the claim the subsystem exists
+    for: under piecewise-stationary popularity drift, online rebalancing
+    recovers hit rate the frozen allocation leaves on the table."""
+    frozen = _drift_hit_rates(None)
+    reb = _drift_hit_rates(RebalanceSpec(every=8, decay=0.97, min_count=100.0))
+    assert frozen.rebalances == 0
+    assert reb.rebalances > 0
+    # observed gap ~0.08; 0.02 leaves generous tolerance for platform noise
+    assert reb.hit_rate >= frozen.hit_rate + 0.02, (reb.hit_rate, frozen.hit_rate)
+
+
+@pytest.mark.drift_sweep
+def test_full_drift_sweep():
+    """The full fig_drift sweep (slow; excluded from tier-1 by addopts --
+    run with ``pytest -m drift_sweep``)."""
+    fig_drift = pytest.importorskip("benchmarks.fig_drift")
+    rows = {r.split(",")[0]: r for r in fig_drift.run(quick=False)}
+
+    def hit(name):
+        row = rows[name]
+        return float(dict(kv.split("=") for kv in row.split(",", 2)[2].split(";"))["hit_rate"])
+
+    for tag in ("phases=4", "phases=4/N=8192"):
+        assert hit(f"drift/{tag}/std_rebalanced") >= hit(f"drift/{tag}/std_frozen") + 0.01
+    # stationary control: rebalancing converges and must not cost hit rate
+    assert hit("drift/phases=1/std_rebalanced") >= hit("drift/phases=1/std_frozen") - 0.005

@@ -40,6 +40,7 @@ from repro.core.rd_offline import reuse_distances_offline
 from repro.core.jax_sim import reuse_distances_py
 from repro.serving import (
     Broker,
+    BucketSpec,
     Cluster,
     DeviceCacheConfig,
     STDDeviceCache,
@@ -198,6 +199,60 @@ def run(quick: bool = False) -> List[str]:
                 f"ns_per_query={us*1000/batch:.0f};hit_rate={broker.stats.hit_rate:.3f}",
             )
         )
+
+    # shape-bucketed serving of a ragged stream on the jit-compiled
+    # device engine: batch lengths vary per batch, so the unpadded path
+    # re-traces the fused step once per distinct shape while the bucketed
+    # path (reserved pad key) compiles O(#buckets).  Wall time includes
+    # the compiles -- recompile jitter is exactly what bucketing removes.
+    # The CI smoke asserts the compile-count bound.
+    ragged_rng = np.random.default_rng(7)
+    n_batches = 12 if quick else 24
+    ragged = [int(s) for s in ragged_rng.integers(1, 257, size=n_batches)]
+    # pre-generate the stream so both runs serve *identical* requests --
+    # the row compares padding vs no padding, not workload variation
+    ragged_stream = [ragged_rng.integers(0, 20_000, size=bsz) for bsz in ragged]
+    bucket = BucketSpec(min_size=8)
+
+    def _ragged_serve(bspec, defer):
+        broker = Broker(
+            STDDeviceCache(cfg, static_hashes=splitmix64(np.arange(1, 2000))),
+            [backend],
+            topic_of=lambda q: topic_arr[q],
+            engine="device",
+            bucket=bspec,
+            defer_fill=defer,
+        )
+        t0 = time.time()
+        for q in ragged_stream:
+            broker.serve(q)
+        broker.flush()
+        dt = time.time() - t0
+        fused = broker.trace_counts.get("fused", 0) + broker.trace_counts.get(
+            "fused_fill", 0
+        )
+        broker.close()
+        return dt, fused, broker.stats
+
+    plain_s, plain_traces, _ = _ragged_serve(BucketSpec(mode="none"), False)
+    buck_s, buck_traces, bstats = _ragged_serve(bucket, True)
+    n_buckets = len({bucket.padded_len(b) for b in ragged})
+    assert buck_traces <= 2 * n_buckets, (
+        f"compile-count bound violated: {buck_traces} fused traces for "
+        f"{n_buckets} buckets"
+    )
+    pad_frac = bstats.padded / max(bstats.requests + bstats.padded, 1)
+    rows.append(
+        csv_row(
+            f"perf/serve_bucketed/batches={n_batches}",
+            buck_s / n_batches * 1e6,
+            f"unpadded_us={plain_s / n_batches * 1e6:.0f};"
+            f"speedup_vs_unpadded={plain_s / buck_s:.2f};"
+            f"compiles_bucketed={buck_traces};"
+            f"compiles_unpadded={plain_traces};"
+            f"buckets={n_buckets};pad_frac={pad_frac:.3f}",
+        )
+    )
 
     # fused serving through a spec-compiled cluster: shards=1 (the bare
     # broker path, request-for-request identical by the conformance tests)

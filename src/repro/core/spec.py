@@ -69,6 +69,16 @@ from .stats import TrainStats
 
 SPEC_VERSION = 1
 
+#: The reserved *pad key*: a sentinel query id that is never admitted,
+#: never hits, and never displaces a resident entry in any cache engine.
+#: The serving tier pads ragged batches up to shape buckets with it
+#: (``BucketSpec`` on ``ServingSpec``), so the jitted device path
+#: compiles O(#buckets) shapes instead of one per distinct batch length.
+#: Its 64-bit hash is pinned to all-ones (``repro.serving.device_cache.
+#: PAD_H64``); ``splitmix64`` never hashes a real key there (or to 0,
+#: the empty-slot sentinel).  Real query ids are always >= 0.
+PAD_KEY = -1
+
 #: the paper's experimental grid (Sec. 5), importable for iteration
 STRATEGIES = (
     "SDC",
@@ -310,6 +320,13 @@ class CacheSpec:
         object.__setattr__(self, "n_entries", int(self.n_entries))
         if self.n_entries < 0:
             raise ValueError(f"n_entries must be >= 0, got {self.n_entries}")
+
+    @property
+    def pad_key(self) -> int:
+        """The reserved never-resident pad key (see :data:`PAD_KEY`): part
+        of every compiled engine's contract, so shape-bucketed serving can
+        pad batches without perturbing cache behaviour."""
+        return PAD_KEY
 
     def without_admission(self) -> "CacheSpec":
         """Copy of this spec with the admission gate dropped (admit-all)."""
@@ -696,6 +713,7 @@ class CacheSpec:
 
 
 __all__ = [
+    "PAD_KEY",
     "SPEC_VERSION",
     "STRATEGIES",
     "AdmissionSpec",

@@ -1,3 +1,20 @@
-from .ops import plan_segments, probe_and_commit_op, resolve_conflicts
+from .kernel import PAD_HI, PAD_LO
+from .ops import (
+    PACKED_WORDS,
+    pack_words,
+    plan_segments,
+    probe_and_commit_op,
+    resolve_conflicts,
+    unpack_words,
+)
 
-__all__ = ["plan_segments", "probe_and_commit_op", "resolve_conflicts"]
+__all__ = [
+    "PACKED_WORDS",
+    "PAD_HI",
+    "PAD_LO",
+    "pack_words",
+    "plan_segments",
+    "probe_and_commit_op",
+    "resolve_conflicts",
+    "unpack_words",
+]

@@ -10,23 +10,34 @@ hashed sets is O(B/S) in expectation.
 
 Tiling: grid = (B_pad / bm,) over segment tiles.  Each step owns
 
-* the tile's row state       (bm, W)   x3   gathered rows, identity map
+* the tile's row state       (bm, 3W)  x1   packed key/stamp words,
+                                            identity map
 * the tile's segment table   (bm, 1)   x2   leader / length
 * the whole sorted batch     (B, 1)    x5   request fields, constant map
 * per-request outputs        (B, 1)    x4   constant map, revisited
 
-Constant-index blocks stay resident in VMEM across steps (same pattern as
-embedding_bag's bag accumulation), so each step's dynamic gathers of its
-requests and scatters of its per-request outputs never touch HBM.  The
-conflict loop is a `lax.fori_loop` with a *data-dependent* trip count
-(the tile's deepest segment), lowered to a scalar while-loop.
+The per-slot key_hi / key_lo / stamp words are packed into a single
+(bm, 3W) uint32 block (columns [0:W] hi, [W:2W] lo, [2W:3W] stamp) --
+one gather feeds the whole replay and one scatter drains it, and the
+row blocks fill 3x more of the 128-wide lanes than the old (bm, W)
+triple.  Constant-index blocks stay resident in VMEM across steps (same
+pattern as embedding_bag's bag accumulation), so each step's dynamic
+gathers of its requests and scatters of its per-request outputs never
+touch HBM.  The conflict loop is a `lax.fori_loop` with a
+*data-dependent* trip count (the tile's deepest segment), lowered to a
+scalar while-loop.
 
 VMEM budget at defaults (bm=256, W=8, B=4096):
-  rows 6*256*8*4 = 48 KiB, request fields 5*4096*4 = 80 KiB,
+  rows 2*256*24*4 = 48 KiB, request fields 5*4096*4 = 80 KiB,
   outputs 4*4096*4 = 64 KiB  -- ~0.2 MiB of ~16 MiB/core; B up to ~256K
-  requests fits.  The (bm, 8) row blocks under-fill the 128-wide lanes;
-  key/stamp words could be packed into one (bm, 128) block if lane
-  occupancy ever dominates (documented trade-off, not done).
+  requests fits.
+
+The static-shape serving contract reserves one key: requests whose
+packed hash equals (PAD_HI, PAD_LO) are *padding* -- they never hit,
+are never admitted, and never displace a resident entry, in every
+engine.  Shape-bucketed callers pad ragged batches with it so the
+compiled entry points see O(#buckets) shapes instead of one per
+distinct batch length (see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -37,6 +48,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+#: the reserved pad key's packed hash words (see repro.serving.device_cache:
+#: splitmix64 maps query id PAD_KEY == -1 here and never hashes a real key
+#: to it).  All engines treat a (PAD_HI, PAD_LO) request as inert.
+PAD_HI = 0xFFFFFFFF
+PAD_LO = 0xFFFFFFFF
+
+
+def is_pad(h_hi: jnp.ndarray, h_lo: jnp.ndarray) -> jnp.ndarray:
+    """Mask of requests carrying the reserved pad key (jnp arrays)."""
+    return (h_hi == jnp.uint32(PAD_HI)) & (h_lo == jnp.uint32(PAD_LO))
+
 
 def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act):
     """One replay round on evolving rows: the exact sequential LRU step.
@@ -45,15 +67,18 @@ def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act
     (cache_ops.ops.resolve_conflicts) so engine parity is by construction:
     a hit refreshes the matching way, an admitted miss evicts the
     min-stamp way, first-index tie-breaking matches the fori_loop oracle.
+    Requests carrying the reserved pad key neither match nor write.
     """
     w = r_hi.shape[1]
     ways = jnp.arange(w, dtype=jnp.int32)
+    pad_i = is_pad(hi_i, lo_i)
     m = (r_hi == hi_i[:, None]) & (r_lo == lo_i[:, None]) & (r_hi != 0)
+    m = m & ~pad_i[:, None]
     is_hit = m.any(axis=1)
     way = jnp.where(
         is_hit, jnp.argmax(m, axis=1), jnp.argmin(r_st, axis=1)
     ).astype(jnp.int32)
-    do_write = act & ~static_i & (is_hit | admit_i)
+    do_write = act & ~static_i & ~pad_i & (is_hit | admit_i)
     upd = do_write[:, None] & (ways[None, :] == way[:, None])
     r_hi = jnp.where(upd, hi_i[:, None], r_hi)
     r_lo = jnp.where(upd, lo_i[:, None], r_lo)
@@ -62,9 +87,7 @@ def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act
 
 
 def _kernel(
-    rows_hi_ref,
-    rows_lo_ref,
-    rows_st_ref,
+    rows_ref,
     leader_ref,
     seg_len_ref,
     s_hi_ref,
@@ -73,9 +96,7 @@ def _kernel(
     s_admit_ref,
     s_static_ref,
     clock_ref,
-    out_hi_ref,
-    out_lo_ref,
-    out_st_ref,
+    out_rows_ref,
     pre_hit_ref,
     pre_way_ref,
     wrote_ref,
@@ -90,9 +111,11 @@ def _kernel(
         wrote_ref[...] = jnp.zeros_like(wrote_ref)
         way_ref[...] = jnp.zeros_like(way_ref)
 
-    init_hi = rows_hi_ref[...]  # (bm, W) pristine rows: the atomic probe
-    init_lo = rows_lo_ref[...]  # targets pre-commit state for every item
-    init_st = rows_st_ref[...]
+    rows = rows_ref[...]  # (bm, 3W) packed pristine rows: the atomic probe
+    w = rows.shape[1] // 3  # targets pre-commit state for every item
+    init_hi = rows[:, :w]
+    init_lo = rows[:, w : 2 * w]
+    init_st = rows[:, 2 * w :].astype(jnp.int32)
     leader = leader_ref[...][:, 0]
     seg_len = seg_len_ref[...][:, 0]
     s_hi = s_hi_ref[...][:, 0]
@@ -112,8 +135,10 @@ def _kernel(
         admit_i = s_admit[idx] != 0
         static_i = s_static[idx] != 0
         pos_i = s_pos[idx]
-        # probe against the pristine rows (duplicates count as misses)
+        # probe against the pristine rows (duplicates count as misses;
+        # the reserved pad key never hits)
         pm = (init_hi == hi_i[:, None]) & (init_lo == lo_i[:, None]) & (init_hi != 0)
+        pm = pm & ~is_pad(hi_i, lo_i)[:, None]
         # evolving rows: exact sequential LRU semantics within the segment
         r_hi, r_lo, r_st, is_hit, way, do_write = conflict_round(
             r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, clock + 1 + pos_i, act
@@ -138,9 +163,9 @@ def _kernel(
     r_hi, r_lo, r_st, p_hit, p_way, wr, wy = jax.lax.fori_loop(
         0, n_rounds, body, carry
     )
-    out_hi_ref[...] = r_hi
-    out_lo_ref[...] = r_lo
-    out_st_ref[...] = r_st
+    out_rows_ref[...] = jnp.concatenate(
+        [r_hi, r_lo, r_st.astype(jnp.uint32)], axis=1
+    )
     pre_hit_ref[...] = p_hit[:, None]
     pre_way_ref[...] = p_way[:, None]
     wrote_ref[...] = wr[:, None]
@@ -149,9 +174,7 @@ def _kernel(
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def probe_and_commit(
-    rows_hi: jnp.ndarray,  # (B_pad, W) uint32 gathered segment rows
-    rows_lo: jnp.ndarray,  # (B_pad, W) uint32
-    rows_st: jnp.ndarray,  # (B_pad, W) int32
+    rows: jnp.ndarray,  # (B_pad, 3W) uint32 packed gathered segment rows
     leader: jnp.ndarray,  # (B_pad, 1) int32 first sorted item per segment
     seg_len: jnp.ndarray,  # (B_pad, 1) int32 items per segment (0 = pad)
     s_hi: jnp.ndarray,  # (B_pad, 1) uint32 sorted request hashes
@@ -163,18 +186,16 @@ def probe_and_commit(
     bm: int = 256,
     interpret: bool = False,
 ):
-    b, w = rows_hi.shape
+    b, w3 = rows.shape
     bm = min(bm, b)
     grid = (pl.cdiv(b, bm),)
-    rows_spec = pl.BlockSpec((bm, w), lambda g: (g, 0))
+    rows_spec = pl.BlockSpec((bm, w3), lambda g: (g, 0))
     seg_spec = pl.BlockSpec((bm, 1), lambda g: (g, 0))
     full_spec = pl.BlockSpec((b, 1), lambda g: (0, 0))
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            rows_spec,
-            rows_spec,
             rows_spec,
             seg_spec,
             seg_spec,
@@ -187,17 +208,13 @@ def probe_and_commit(
         ],
         out_specs=[
             rows_spec,
-            rows_spec,
-            rows_spec,
             full_spec,
             full_spec,
             full_spec,
             full_spec,
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, w), jnp.uint32),
-            jax.ShapeDtypeStruct((b, w), jnp.uint32),
-            jax.ShapeDtypeStruct((b, w), jnp.int32),
+            jax.ShapeDtypeStruct((b, w3), jnp.uint32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
@@ -205,9 +222,7 @@ def probe_and_commit(
         ],
         interpret=interpret,
     )(
-        rows_hi,
-        rows_lo,
-        rows_st,
+        rows,
         leader,
         seg_len,
         s_hi,

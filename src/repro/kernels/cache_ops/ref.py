@@ -7,12 +7,19 @@ inserted and into which way -- the information the deferred value fill
 needs.  Values are deliberately out of scope: an admitted miss's result
 does not exist at probe time (it comes back from the backend later), so
 the op only moves keys and stamps; callers scatter values afterwards.
+
+Requests carrying the reserved pad key (packed hash (PAD_HI, PAD_LO),
+see ``repro.serving.device_cache.PAD_KEY``) are inert: they never hit,
+are never admitted, and never displace a resident entry -- the
+invariant shape-bucketed serving relies on.
 """
 from __future__ import annotations
 
 from typing import Dict
 
 import numpy as np
+
+from .kernel import PAD_HI, PAD_LO
 
 
 def probe_and_commit_ref(
@@ -40,13 +47,16 @@ def probe_and_commit_ref(
     for i in range(b):
         s = min(int(set_idx[i]), s_max)  # jnp gathers clamp; scatters drop
         oob = int(set_idx[i]) > s_max
+        pad = bool(h_hi[i] == np.uint32(PAD_HI)) and bool(h_lo[i] == np.uint32(PAD_LO))
         pm = (pre_hi[s] == h_hi[i]) & (pre_lo[s] == h_lo[i]) & (pre_hi[s] != 0)
+        pm &= not pad
         pre_hit[i] = pm.any()
         pre_way[i] = int(pm.argmax())
         m = (key_hi[s] == h_hi[i]) & (key_lo[s] == h_lo[i]) & (key_hi[s] != 0)
+        m &= not pad
         is_hit = bool(m.any())
         way = int(m.argmax()) if is_hit else int(stamp[s].argmin())
-        do_write = (not static_hit[i]) and (is_hit or bool(admit[i]))
+        do_write = (not static_hit[i]) and (not pad) and (is_hit or bool(admit[i]))
         if do_write and not oob:
             key_hi[s, way] = h_hi[i]
             key_lo[s, way] = h_lo[i]

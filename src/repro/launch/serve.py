@@ -26,7 +26,7 @@ from ..core.spec import STRATEGIES
 from ..core.fast import VecLog, VecStats
 from ..models import transformer as tf
 from ..querylog import DriftConfig, SynthConfig, generate, generate_drifting
-from ..serving import Cluster, HedgeSpec, RebalanceSpec, ServingSpec
+from ..serving import BucketSpec, Cluster, HedgeSpec, RebalanceSpec, ServingSpec
 from ..topics import run_pipeline
 
 
@@ -51,6 +51,14 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--routing", default="hash", choices=("hash", "topic"),
         help="query -> shard routing (topic routing moves whole partitions)",
+    )
+    ap.add_argument(
+        "--bucket", default="auto", choices=("auto", "pow2", "off"),
+        help="shape-bucketed batch padding (static-shape serving): the "
+        "ragged tail batch and data-dependent shard slices pad up to a "
+        "bucket with the reserved pad key instead of tracing a fresh "
+        "shape. auto = pow2 on device engines, unpadded on the host "
+        "engine; pow2 forces bucketing everywhere",
     )
     ap.add_argument(
         "--rebalance", type=int, default=0, metavar="EVERY",
@@ -85,6 +93,14 @@ def main(argv=None) -> int:
         routing=args.routing,
         microbatch=args.batch,
         value_dim=args.value_dim,
+        # auto (None): device engines bucket pow2, the host engine serves
+        # unpadded; the ragged tail batch below is served through bucket
+        # padding instead of a separately-traced shape either way
+        bucket={
+            "auto": None,
+            "pow2": BucketSpec(),
+            "off": BucketSpec(mode="none"),
+        }[args.bucket],
         hedge=HedgeSpec(deadline_s=2.0),
         rebalance=(
             RebalanceSpec(
@@ -171,6 +187,15 @@ def main(argv=None) -> int:
             f"hit_rate={s.hit_rate:.4f} static_hits={s.static_hits} "
             f"topic_hits={s.topic_hits} backend_calls={s.backend_calls} "
             f"hedged={s.hedged_calls}"
+        )
+        # pad overhead of the static-shape contract: device-batch slots
+        # spent on the reserved pad key (ragged tail + shard slices)
+        slot_total = s.requests + s.padded
+        print(
+            f"bucketing: padded={s.padded} real={s.requests} "
+            f"pad_overhead={s.padded / max(slot_total, 1):.2%} of "
+            f"{slot_total} device-batch slots; "
+            f"jit traces per entry point: {cluster.trace_counts or '(host engine: none)'}"
         )
         if args.rebalance > 0:
             print(

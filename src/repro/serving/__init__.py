@@ -9,27 +9,38 @@ from .broker import Backend, Broker, BrokerStats, HedgePolicy
 from .cluster import Cluster
 from .device_cache import (
     DYNAMIC,
+    PAD_H64,
+    PAD_HI,
+    PAD_KEY,
+    PAD_LO,
     DeviceCacheConfig,
     STDDeviceCache,
     pack_hashes,
     splitmix64,
+    unpack_state,
 )
 from .rebalance import PopularityTracker, RebalanceSpec
-from .spec import HedgeSpec, ServingSpec
+from .spec import BucketSpec, HedgeSpec, ServingSpec
 
 __all__ = [
     "Backend",
     "Broker",
     "BrokerStats",
+    "BucketSpec",
     "Cluster",
     "DYNAMIC",
     "DeviceCacheConfig",
     "HedgePolicy",
     "HedgeSpec",
+    "PAD_H64",
+    "PAD_HI",
+    "PAD_KEY",
+    "PAD_LO",
     "PopularityTracker",
     "RebalanceSpec",
     "STDDeviceCache",
     "ServingSpec",
     "pack_hashes",
     "splitmix64",
+    "unpack_state",
 ]

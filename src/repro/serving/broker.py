@@ -3,7 +3,10 @@
 The broker owns the device-resident STD cache and a set of backend
 executors (model shards).  Per batch:
 
-1. hash + topic-route every query,
+1. hash + topic-route every query, and -- on shape-bucketed deployments
+   -- pad the batch up to its bucket with the reserved never-resident
+   pad key so the jitted device path sees O(#buckets) shapes instead of
+   one trace per distinct batch length,
 2. one fused probe-and-commit device call (repro.kernels.cache_ops):
    hits are answered immediately and every cache write -- hit refreshes
    and admitted-miss inserts -- lands in the same call, in arrival order,
@@ -11,10 +14,20 @@ executors (model shards).  Per batch:
    requests** (a straggling micro-batch is re-dispatched to a backup
    executor; first result wins),
 4. backend results are scattered into the slots the fused call reserved
-   (deferred value fill) and returned.
+   (deferred value fill).  On the device engine the fill is
+   *double-buffered*: it rides inside the next batch's fused call
+   (applied before that probe reads values), saving a dispatch per
+   batch and letting XLA overlap the value scatter with the next
+   bucket's key/stamp gather.  ``flush()`` applies a pending fill on
+   demand; checkpoints and rebalances flush automatically.
 
 ``fused=False`` restores the PR-1 three-call path (probe, miss commit,
-hit-refresh commit), now running on the vectorized batch commit.
+hit-refresh commit), now running on the vectorized batch commit with
+the same bucket padding on its data-dependent miss/refresh sub-batches.
+
+Every jitted entry point counts its traces in ``Broker.trace_counts``
+(the python wrapper body only runs when jax traces), which is what the
+compile-count regression tests pin.
 
 Fault tolerance: `checkpoint` / `restore` snapshot the full cache state
 atomically (repro.train.checkpoint); a broker can restart mid-stream and
@@ -35,8 +48,17 @@ import numpy as np
 from ..core.alloc import allocation_divergence
 from ..core.spec import CacheSpec
 from ..train import checkpoint as ckpt_lib
-from .device_cache import DYNAMIC, DeviceCacheConfig, STDDeviceCache, pack_hashes, splitmix64
+from .device_cache import (
+    DYNAMIC,
+    DeviceCacheConfig,
+    STDDeviceCache,
+    pack_hashes,
+    pad_batch,
+    splitmix64,
+    unpack_state,
+)
 from .rebalance import PopularityTracker, RebalanceSpec
+from .spec import BucketSpec
 
 
 @dataclasses.dataclass
@@ -50,6 +72,9 @@ class BrokerStats:
     admitted: int = 0
     #: duplicate in-batch misses answered from a single backend call
     coalesced: int = 0
+    #: pad requests appended by shape bucketing (never counted in
+    #: ``requests``; pad overhead = padded / (requests + padded))
+    padded: int = 0
     #: non-empty batches served (the rebalance trigger's cadence clock)
     batches: int = 0
     #: live repartitions applied by the drift rebalancer
@@ -94,6 +119,8 @@ class Broker:
         use_kernel: bool = False,
         engine: str = "auto",
         rebalance: Optional[RebalanceSpec] = None,
+        bucket: Optional[BucketSpec] = None,
+        defer_fill: Optional[bool] = None,
     ):
         self.cache = cache
         #: declarative configuration this cache was compiled from (embedded
@@ -128,6 +155,31 @@ class Broker:
             raise ValueError(f"engine must be auto|host|device, got {engine!r}")
         self.engine = engine
         self.use_kernel = use_kernel
+        #: static-shape contract: pad batches up to shape buckets with the
+        #: reserved pad key.  Auto (bucket=None): the jit-compiled device
+        #: engine buckets (pow2), the host engine serves unpadded (numpy
+        #: compiles nothing, padding would be pure overhead).
+        if bucket is None:
+            bucket = BucketSpec() if engine == "device" else BucketSpec(mode="none")
+        self.bucket: Optional[BucketSpec] = bucket if bucket.enabled else None
+        #: double-buffer the deferred value fill into the next fused call
+        #: (device engine only; the host engine's in-place numpy fill is
+        #: already a single cheap scatter)
+        if defer_fill is None:
+            defer_fill = engine == "device" and fused
+        self.defer_fill = bool(defer_fill) and engine == "device" and fused
+        #: compressed pending fill plan: (set_idx, way, values) of the
+        #: last batch's inserts, applied inside the next fused call or by
+        #: :meth:`flush`
+        self._pending_fill: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        #: traces per jitted entry point (the wrapped python body only
+        #: runs when jax traces a new shape) -- the compile-count
+        #: regression tests pin this at O(#buckets)
+        self.trace_counts: Dict[str, int] = {}
+        #: rebalance cooldown/hysteresis runtime state (not checkpointed:
+        #: a restored broker re-arms conservatively from scratch)
+        self._last_rebalance_batch: Optional[int] = None
+        self._rebalance_cooling = False
         self.stats = BrokerStats()
         #: drift-aware rebalancing: tracker observes every served batch's
         #: topics; every ``rebalance.every`` batches the tracked popularity
@@ -141,21 +193,48 @@ class Broker:
         self._bind_cache(cache)
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
 
+    def _traced(self, name: str, fn):
+        """Wrap ``fn`` so each jax trace bumps ``trace_counts[name]`` --
+        the wrapper body only executes while tracing, so the counter is
+        exactly the number of compiled shapes (cumulative across
+        rebalances, which re-bind fresh jits)."""
+        counts = self.trace_counts
+
+        def wrapper(*args, **kwargs):
+            counts[name] = counts.get(name, 0) + 1
+            return fn(*args, **kwargs)
+
+        return wrapper
+
     def _bind_cache(self, cache: STDDeviceCache) -> None:
         """(Re)compile the jitted serving ops against ``cache`` -- run at
         construction and after every rebalance swaps the cache layout."""
         self.cache = cache
-        self._probe = jax.jit(cache.probe)
-        self._commit = jax.jit(cache.commit_vectorized)
+        # compile the kernel on real accelerators; emulate on CPU
+        interpret = jax.default_backend() == "cpu"
+        self._probe = jax.jit(self._traced("probe", cache.probe))
+        self._commit = jax.jit(self._traced("commit", cache.commit_vectorized))
         self._fused_step = jax.jit(
-            functools.partial(
-                cache.probe_and_commit,
-                use_kernel=self.use_kernel,
-                # compile the kernel on real accelerators; emulate on CPU
-                interpret=jax.default_backend() == "cpu",
+            self._traced(
+                "fused",
+                functools.partial(
+                    cache.probe_and_commit,
+                    use_kernel=self.use_kernel,
+                    interpret=interpret,
+                ),
             )
         )
-        self._fill = jax.jit(cache.fill_values)
+        self._fused_fill_step = jax.jit(
+            self._traced(
+                "fused_fill",
+                functools.partial(
+                    cache.fill_probe_and_commit,
+                    use_kernel=self.use_kernel,
+                    interpret=interpret,
+                ),
+            )
+        )
+        self._fill = jax.jit(self._traced("fill", cache.fill_values))
 
     @classmethod
     def from_spec(
@@ -206,12 +285,15 @@ class Broker:
             use_kernel=spec.use_kernel,
             engine=spec.engine,
             rebalance=spec.rebalance,
+            bucket=spec.bucket,
         )
 
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
-        """Shut down the hedging executor (idempotent)."""
+        """Apply any pending value fill and shut down the hedging
+        executor (idempotent)."""
+        self.flush()
         self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "Broker":
@@ -244,13 +326,20 @@ class Broker:
         exist.  The admission policy therefore runs *before* the probe,
         over the whole batch (it must be a pure function of the query
         ids); only its decisions on missed queries have any effect.
+
+        With a :class:`BucketSpec` (default on the device engine) the
+        batch is padded up to its shape bucket with the reserved pad key
+        before the device call -- pads never hit, never write, never
+        reach the backend, and are sliced off the outputs, so bucketed
+        serving is request-for-request identical to unpadded serving.
         """
         b = len(query_ids)
         if topics is None:
             topics = self.topic_of(query_ids)
-        parts = self.cache.parts_for(np.asarray(topics))
+        parts = np.asarray(self.cache.parts_for(np.asarray(topics)), np.int32)
         h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
+        h_hi, h_lo, parts = self._pad_to_bucket(h_hi, h_lo, parts)
         if self.fused:
             out = self._serve_fused(query_ids, parts, h_hi, h_lo)
             self._after_batch(topics)
@@ -258,9 +347,9 @@ class Broker:
         hit, layer, value = self._probe(
             self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts)
         )
-        hit = np.asarray(hit)
-        layer = np.asarray(layer)
-        values = np.array(value)  # writable copy
+        hit = np.asarray(hit)[:b]
+        layer = np.asarray(layer)[:b]
+        values = np.array(value)[:b]  # writable copy, pads sliced off
 
         miss_idx = np.flatnonzero(~hit)
         if len(miss_idx):
@@ -277,24 +366,15 @@ class Broker:
                 else np.ones(len(miss_idx), bool)
             )
             self.stats.admitted += int(admit.sum())
-            self.state = self._commit(
-                self.state,
-                jnp.asarray(h_hi[miss_idx]),
-                jnp.asarray(h_lo[miss_idx]),
-                jnp.asarray(parts[miss_idx]),
-                jnp.asarray(miss_values),
-                jnp.asarray(admit),
+            self._commit_bucketed(
+                h_hi[miss_idx], h_lo[miss_idx], parts[miss_idx], miss_values, admit
             )
         # hits refresh recency too (exact LRU semantics)
         hit_idx = np.flatnonzero(hit & (layer == 1))
         if len(hit_idx):
-            self.state = self._commit(
-                self.state,
-                jnp.asarray(h_hi[hit_idx]),
-                jnp.asarray(h_lo[hit_idx]),
-                jnp.asarray(parts[hit_idx]),
-                jnp.asarray(values[hit_idx]),
-                jnp.zeros(len(hit_idx), bool),  # refresh only, never insert
+            self._commit_bucketed(
+                h_hi[hit_idx], h_lo[hit_idx], parts[hit_idx], values[hit_idx],
+                np.zeros(len(hit_idx), bool),  # refresh only, never insert
             )
         self.stats.requests += b
         self.stats.hits += int(hit.sum())
@@ -305,6 +385,35 @@ class Broker:
         self.stats.topic_hits += int(((layer == 1) & hit).sum())
         self._after_batch(topics)
         return values, hit
+
+    def _pad_to_bucket(self, h_hi, h_lo, parts):
+        """Pad the request arrays up to the batch's shape bucket with the
+        reserved pad key (routed at the dynamic partition; the pad never
+        writes, so the partition choice only picks which set it probes)."""
+        b = len(h_hi)
+        bp = self.bucket.padded_len(b) if self.bucket is not None else b
+        self.stats.padded += max(bp - b, 0)
+        h_hi, h_lo, parts, _, _ = pad_batch(h_hi, h_lo, parts, self.cache.k, bp)
+        return h_hi, h_lo, parts
+
+    def _commit_bucketed(self, h_hi, h_lo, parts, values, admit) -> None:
+        """Unfused-path commit over a data-dependent subset (misses or hit
+        refreshes), padded up to its bucket so the jitted commit compiles
+        O(#buckets) shapes instead of one per subset length."""
+        n = len(h_hi)
+        bp = self.bucket.padded_len(n) if self.bucket is not None else n
+        self.stats.padded += max(bp - n, 0)
+        h_hi, h_lo, parts, values, admit = pad_batch(
+            h_hi, h_lo, parts, self.cache.k, bp, values=values, admit=admit
+        )
+        self.state = self._commit(
+            self.state,
+            jnp.asarray(h_hi),
+            jnp.asarray(h_lo),
+            jnp.asarray(parts),
+            jnp.asarray(values),
+            jnp.asarray(admit),
+        )
 
     def _after_batch(self, topics: np.ndarray) -> None:
         """Post-serve bookkeeping: advance the batch clock, feed the drift
@@ -321,12 +430,18 @@ class Broker:
             self.rebalance()
 
     def _serve_fused(self, query_ids, parts, h_hi, h_lo) -> Tuple[np.ndarray, np.ndarray]:
+        """One fused device call per batch; the request arrays may carry a
+        bucket-padded tail (``len(h_hi) >= len(query_ids)``) of reserved
+        pad keys -- inert in the engines, sliced off the outputs here."""
         b = len(query_ids)
+        bp = len(h_hi)
         admit = (
             np.asarray(self.admission(query_ids), bool)
             if self.admission is not None
             else np.ones(b, bool)
         )
+        if bp > b:  # pads are never admitted (belt: the engines also mask)
+            admit = np.concatenate([admit, np.zeros(bp - b, bool)])
         if self.engine == "host":
             # the broker owns its state: the previous batch's arrays are
             # consumed in place (the host-engine analogue of jit donation)
@@ -336,16 +451,34 @@ class Broker:
                 )
             )
         else:
-            hit, layer, value, self.state, (set_idx, wrote, way) = self._fused_step(
-                self.state,
-                jnp.asarray(h_hi),
-                jnp.asarray(h_lo),
-                jnp.asarray(parts),
-                jnp.asarray(admit),
-            )
-        hit = np.asarray(hit)
-        layer = np.asarray(layer)
-        values = np.array(value)  # writable copy
+            pending = self._pending_fill
+            if pending is not None and 0 < len(pending[0]) <= bp:
+                # double-buffered fill: the previous batch's value scatter
+                # rides inside this fused call (applied before its probe),
+                # with the plan padded to this batch's bucket
+                self._pending_fill = None
+                hit, layer, value, self.state, (set_idx, wrote, way) = (
+                    self._fused_fill_step(
+                        self.state,
+                        *self._pad_plan(pending, bp),
+                        jnp.asarray(h_hi),
+                        jnp.asarray(h_lo),
+                        jnp.asarray(parts),
+                        jnp.asarray(admit),
+                    )
+                )
+            else:
+                self.flush()  # plan larger than this bucket: standalone fill
+                hit, layer, value, self.state, (set_idx, wrote, way) = self._fused_step(
+                    self.state,
+                    jnp.asarray(h_hi),
+                    jnp.asarray(h_lo),
+                    jnp.asarray(parts),
+                    jnp.asarray(admit),
+                )
+        hit = np.asarray(hit)[:b]
+        layer = np.asarray(layer)[:b]
+        values = np.array(value)  # (bp, V) writable; sliced on return
         miss_idx = np.flatnonzero(~hit)
         if len(miss_idx):
             if self.coalesce:
@@ -357,10 +490,22 @@ class Broker:
             self.stats.admitted += int(admit[miss_idx].sum())
         # deferred fill: scatter results into the slots the fused call
         # reserved (hit refreshes kept their values; only inserts write)
-        if bool(np.asarray(wrote).any()):
+        wrote_np = np.asarray(wrote)
+        if wrote_np.any():
             if self.engine == "host":
                 self.state = self.cache.fill_values_host(
-                    self.state, set_idx, wrote, way, values, inplace=True
+                    self.state, set_idx, wrote_np, way, values, inplace=True
+                )
+            elif self.defer_fill:
+                # double-buffer: hold the compressed plan; it lands inside
+                # the next fused call (or flush()) -- key/stamp words are
+                # already committed, only values lag, and the next probe
+                # reads them post-fill by construction
+                sel = np.flatnonzero(wrote_np)
+                self._pending_fill = (
+                    np.asarray(set_idx)[sel],
+                    np.asarray(way)[sel],
+                    values[sel],
                 )
             else:
                 self.state = self._fill(
@@ -370,7 +515,43 @@ class Broker:
         self.stats.hits += int(hit.sum())
         self.stats.static_hits += int(((layer == 0) & hit).sum())
         self.stats.topic_hits += int(((layer == 1) & hit).sum())
-        return values, hit
+        return values[:b], hit
+
+    def _pad_plan(self, pending, bp: int):
+        """Pad a compressed pending-fill plan up to ``bp`` entries (pads
+        carry ``wrote=False``) in :meth:`STDDeviceCache.fill_values`
+        argument order."""
+        f_set, f_way, f_vals = pending
+        n = len(f_set)
+        set_p = np.zeros(bp, np.int32)
+        set_p[:n] = f_set
+        way_p = np.zeros(bp, np.int32)
+        way_p[:n] = f_way
+        wrote_p = np.zeros(bp, bool)
+        wrote_p[:n] = True
+        vals_p = np.zeros((bp, f_vals.shape[1]), np.int32)
+        vals_p[:n] = f_vals
+        return (
+            jnp.asarray(set_p),
+            jnp.asarray(wrote_p),
+            jnp.asarray(way_p),
+            jnp.asarray(vals_p),
+        )
+
+    def flush(self) -> None:
+        """Apply a double-buffered pending value fill to the state now.
+
+        Serving calls this automatically when a plan cannot ride the next
+        fused call; checkpoints, rebalances and ``close()`` flush so the
+        externally visible state is always complete.  Idempotent.
+        """
+        pending = self._pending_fill
+        if pending is None:
+            return
+        self._pending_fill = None
+        n = len(pending[0])
+        bp = self.bucket.padded_len(n) if self.bucket is not None else n
+        self.state = self._fill(self.state, *self._pad_plan(pending, bp))
 
     def _dispatch(self, miss_ids: np.ndarray) -> np.ndarray:
         """Micro-batched backend dispatch with hedging."""
@@ -413,9 +594,13 @@ class Broker:
         the tracker has no signal yet (``min_count``), when the target
         integer allocation equals the current one -- the no-op invariant:
         the cache state stays bit-identical on every engine -- or, unless
-        ``force``, when the L1 divergence between the current allocation's
-        shares and the tracked popularity shares is below the spec's
-        ``threshold``.
+        ``force``, when the spec's cooldown (``min_interval`` batches
+        since the last migration) or its (hysteresis-widened) divergence
+        ``threshold`` gates the check.  After a migration the effective
+        threshold is ``threshold + hysteresis`` until a scheduled check
+        observes the divergence settled back at or below ``threshold`` --
+        oscillating popularity then triggers one migration per swing
+        *direction*, not one per check.
         """
         if self.tracker is None:
             raise ValueError(
@@ -425,21 +610,41 @@ class Broker:
         sp = self.rebalance_spec
         if self.tracker.topic_mass < max(sp.min_count, 1e-9):
             return False  # no signal yet: keep the current allocation
+        if (
+            not force
+            and sp.min_interval > 0
+            and self._last_rebalance_batch is not None
+            and self.stats.batches - self._last_rebalance_batch < sp.min_interval
+        ):
+            return False  # cooldown: too soon after the last migration
         pop = self.tracker.popularity()
         new_cfg = self.cache.cfg.rebalanced(pop)
+        current = {int(t): int(c) for t, c in self.cache.cfg.topic_entries.items()}
+        div = allocation_divergence(current, pop)
+        # the settle check runs before the no-op early return: popularity
+        # settling back to *exactly* the live allocation is the most
+        # settled signal of all and must still re-arm the band
+        if div <= sp.threshold:
+            self._rebalance_cooling = False  # signal settled: re-arm
         if new_cfg == self.cache.cfg:
             return False
-        if not force and sp.threshold > 0.0:
-            current = {int(t): int(c) for t, c in self.cache.cfg.topic_entries.items()}
-            if allocation_divergence(current, pop) < sp.threshold:
+        if not force:
+            eff = sp.threshold + (sp.hysteresis if self._rebalance_cooling else 0.0)
+            if eff > 0.0 and div < eff:
                 return False
+        self.flush()  # a pending value fill must land before migration
         new_cache, new_state = self.cache.repartition(
-            self.state, new_cfg, engine="host" if self.engine == "host" else "vec"
+            self.state, new_cfg,
+            engine="host" if self.engine == "host" else "vec",
+            bucket=self.bucket,
         )
         self.state = new_state
         self._bind_cache(new_cache)
         self.stats.rebalances += 1
-        self.stats.migrated += int((np.asarray(new_state["key_hi"]) != 0).sum())
+        key_hi, _, _ = unpack_state({"ks": np.asarray(new_state["ks"])})
+        self.stats.migrated += int((key_hi != 0).sum())
+        self._last_rebalance_batch = self.stats.batches
+        self._rebalance_cooling = sp.hysteresis > 0.0
         return True
 
     # -- fault tolerance -------------------------------------------------------
@@ -454,6 +659,7 @@ class Broker:
         }
 
     def save(self, ckpt_dir: str, step: int) -> str:
+        self.flush()  # a pending value fill is part of the state
         tree = {"cache": self.state, "stats": self._stats_tree()}
         if self.spec is not None:
             tree["spec_json"] = np.frombuffer(
@@ -467,6 +673,12 @@ class Broker:
         return ckpt_lib.save(ckpt_dir, step, tree)
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        # a pending fill targets the pre-restore state's slots: drop it
+        # (the checkpoint being adopted is complete by construction) and
+        # re-arm the rebalance cooldown from scratch
+        self._pending_fill = None
+        self._last_rebalance_batch = None
+        self._rebalance_cooling = False
         if step is None:
             step = ckpt_lib.latest_step(ckpt_dir)
             if step is None:

@@ -221,6 +221,22 @@ class Cluster:
     def shard_stats(self) -> List[BrokerStats]:
         return [b.stats for b in self.brokers]
 
+    @property
+    def trace_counts(self) -> dict:
+        """Jit traces summed across every shard's entry points -- the
+        compile-count regression tests pin this at O(#buckets) per shard
+        under shape-bucketed serving."""
+        agg: dict = {}
+        for b in self.brokers:
+            for k, v in b.trace_counts.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def flush(self) -> None:
+        """Apply every shard's pending double-buffered value fill."""
+        for b in self.brokers:
+            b.flush()
+
     # -- fault tolerance ---------------------------------------------------
 
     def save(self, ckpt_dir: str, step: int) -> str:

@@ -1,16 +1,32 @@
 """Device-resident STD cache: the paper's data structure, TPU-native.
 
-The CPU hash-table LRU of the paper becomes four dense arrays -- a W-way
+The CPU hash-table LRU of the paper becomes three dense arrays -- a W-way
 set-associative cache whose *address space is partitioned by topic*:
 
-    key_hi/key_lo : (S, W) uint32   packed 64-bit query hashes (0 = empty)
-    stamp         : (S, W) int32    recency stamps (W-way LRU)
-    value         : (S, W, V) int32 cached result payload (doc ids)
+    ks    : (S, 3W) uint32  packed per-slot words: columns [0:W] key_hi,
+                            [W:2W] key_lo, [2W:3W] recency stamp
+                            (int32 bit-cast); key 0 = empty slot
+    value : (S, W, V) int32 cached result payload (doc ids)
+
+The packed key/stamp layout makes the hot path one gather (probe) and
+one scatter (commit) over a lane-friendly (S, 3W) array instead of three
+of each over (S, W) strips; ``pack_words`` / ``unpack_words`` are exact
+bit-reinterpretations, so the fori_loop oracle keeps operating on the
+unpacked (key_hi, key_lo, stamp) view.
 
 Topic tau owns the contiguous set range [offset[tau], offset[tau]+sets[tau])
 sized by the paper's proportional allocation; the dynamic cache is
 partition k; the static cache is a sorted hash array probed by vectorized
 lexicographic binary search (read-only, refreshed offline).
+
+One key is *reserved*: ``PAD_KEY`` (query id -1, packed hash
+``(PAD_HI, PAD_LO)``).  It is never admitted, never hits, and never
+displaces a resident entry, in every engine -- the invariant that lets
+shape-bucketed callers pad ragged batches up to a fixed set of lengths
+so the jitted serving path compiles O(#buckets) shapes instead of one
+per distinct batch length (see docs/serving.md).  ``splitmix64`` maps
+``PAD_KEY`` to the pad hash and never hashes a real key to it (or to 0,
+the empty-slot sentinel).
 
 Probes are fully parallel (gather + compare).  Updates come in two
 flavors: `commit` serializes within a batch via `lax.fori_loop` (the
@@ -34,18 +50,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.alloc import proportional_allocation
-from ..kernels.cache_ops.ops import probe_and_commit_op
+from ..core.spec import PAD_KEY
+from ..kernels.cache_ops.kernel import PAD_HI as _PAD_HI_INT
+from ..kernels.cache_ops.kernel import PAD_LO as _PAD_LO_INT
+from ..kernels.cache_ops.ops import pack_words, probe_and_commit_op, unpack_words
 
 DYNAMIC = -1  # callers pass topic=-1 for no-topic queries
 
+#: the reserved pad key's packed hash words (host-side numpy mirrors of
+#: the kernel-layer constants; they must agree, asserted below)
+PAD_HI = np.uint32(_PAD_HI_INT)
+PAD_LO = np.uint32(_PAD_LO_INT)
+#: the reserved pad key's 64-bit hash -- splitmix64(PAD_KEY) lands here
+#: and no real key ever does
+PAD_H64 = (np.uint64(PAD_HI) << np.uint64(32)) | np.uint64(PAD_LO)
+assert int(np.uint64(np.int64(PAD_KEY))) == int(PAD_H64), "PAD_KEY/PAD_H64 drift"
+
 
 def splitmix64(x: np.ndarray) -> np.ndarray:
-    """Deterministic 64-bit mix of query ids (host side, numpy uint64)."""
-    z = (np.asarray(x, dtype=np.uint64) + np.uint64(0x9E3779B97F4A7C15))
+    """Deterministic 64-bit mix of query ids (host side, numpy uint64).
+
+    Two hash values are reserved and never produced for a real key: 0 is
+    the empty-slot sentinel and ``PAD_H64`` is the shape-padding
+    sentinel; the astronomically unlikely real key that mixes onto one of
+    them is deterministically remapped.  The reserved query id
+    ``PAD_KEY`` (= -1) maps *exactly* to ``PAD_H64``.
+    """
+    x64 = np.asarray(x)
+    if x64.dtype != np.uint64:
+        # int -> uint64 via astype (C wrap): PAD_KEY == -1 becomes all-ones
+        x64 = x64.astype(np.int64, copy=False).astype(np.uint64)
+    is_pad = x64 == PAD_H64
+    z = x64 + np.uint64(0x9E3779B97F4A7C15)
     z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     z = z ^ (z >> np.uint64(31))
     z[z == 0] = 1  # 0 is the empty-slot sentinel
+    z[z == PAD_H64] = PAD_H64 ^ np.uint64(1)  # the pad hash is reserved
+    z[is_pad] = PAD_H64
     return z
 
 
@@ -53,21 +95,56 @@ def pack_hashes(h64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return (h64 >> np.uint64(32)).astype(np.uint32), (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
 
 
+def unpack_state(state) -> Tuple[Any, Any, Any]:
+    """The unpacked (key_hi, key_lo, stamp) view of a cache state's packed
+    ``ks`` array -- numpy views (writable) for host states, jnp slices for
+    device states."""
+    return unpack_words(state["ks"])
+
+
+def pad_batch(h_hi, h_lo, parts, pad_part: int, bp: int, values=None, admit=None):
+    """Extend a request batch to ``bp`` entries with the reserved pad key.
+
+    The single place the pad convention lives: pads carry the packed pad
+    hash, route to ``pad_part`` (the partition only picks which set an
+    inert probe touches), zero values and ``admit=False``.  ``values`` /
+    ``admit`` pass through untouched when None.  Returns
+    ``(h_hi, h_lo, parts, values, admit)``; a no-op when ``bp <= len``.
+    """
+    n = len(h_hi)
+    if bp > n:
+        p = bp - n
+        h_hi = np.concatenate([h_hi, np.full(p, PAD_HI, np.uint32)])
+        h_lo = np.concatenate([h_lo, np.full(p, PAD_LO, np.uint32)])
+        parts = np.concatenate(
+            [np.asarray(parts, np.int32), np.full(p, pad_part, np.int32)]
+        )
+        if values is not None:
+            values = np.asarray(values, np.int32)
+            values = np.concatenate(
+                [values, np.zeros((p, values.shape[1]), np.int32)]
+            )
+        if admit is not None:
+            admit = np.concatenate([np.asarray(admit, bool), np.zeros(p, bool)])
+    return h_hi, h_lo, parts, values, admit
+
+
 def _sequential_replay(key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit, clock):
     """The oracle commit's fori_loop, additionally emitting the per-request
     write plan (wrote, way) the deferred value fill needs.  Fallback engine
     for conflict depths where round-based replay degenerates."""
     b = h_hi.shape[0]
+    pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
 
     def body(i, st):
         key_hi, key_lo, stamp, wrote, way_out = st
         s = set_idx[i]
         row_hi = key_hi[s]
         row_lo = key_lo[s]
-        match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0)
+        match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0) & ~pad[i]
         is_hit = match.any()
         way = jnp.where(match.any(), jnp.argmax(match), jnp.argmin(stamp[s]))
-        do_write = (~static_hit[i]) & (is_hit | admit[i])
+        do_write = (~static_hit[i]) & ~pad[i] & (is_hit | admit[i])
         key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
         key_lo = key_lo.at[s, way].set(jnp.where(do_write, h_lo[i], key_lo[s, way]))
         stamp = stamp.at[s, way].set(jnp.where(do_write, clock + 1 + i, stamp[s, way]))
@@ -91,6 +168,13 @@ class DeviceCacheConfig:
     topic_entries: Mapping[int, int] = dataclasses.field(default_factory=dict)
     dynamic_entries: int = 0
     static_entries: int = 0
+
+    #: the reserved never-resident pad key (query-id level; its packed
+    #: hash is ``(PAD_HI, PAD_LO)``) -- part of the static-shape serving
+    #: contract every engine honours
+    @property
+    def pad_key(self) -> int:
+        return PAD_KEY
 
     @classmethod
     def build(
@@ -211,8 +295,15 @@ class STDDeviceCache:
         self._static_memo: Tuple[Any, Optional[np.ndarray]] = (None, None)
 
         if static_hashes is not None and len(static_hashes):
-            order = np.argsort(static_hashes.astype(np.uint64))
-            static = static_hashes.astype(np.uint64)[order]
+            sh = np.asarray(static_hashes, np.uint64)
+            # the empty-slot and pad sentinels can never be static keys
+            # (splitmix64 never emits them; guard hand-built hash arrays)
+            ok = (sh != 0) & (sh != PAD_H64)
+            if static_values is not None:
+                static_values = np.asarray(static_values, np.int32)[ok]
+            sh = sh[ok]
+            order = np.argsort(sh)
+            static = sh[order]
             if static_values is None:
                 static_values = np.zeros((len(static), cfg.value_dim), np.int32)
             s_vals = np.asarray(static_values, np.int32)[order]
@@ -221,9 +312,7 @@ class STDDeviceCache:
             s_vals = np.zeros((0, cfg.value_dim), np.int32)
         s_hi, s_lo = pack_hashes(static)
         self.init_state = {
-            "key_hi": jnp.zeros((max(self.n_sets, 1), w), jnp.uint32),
-            "key_lo": jnp.zeros((max(self.n_sets, 1), w), jnp.uint32),
-            "stamp": jnp.zeros((max(self.n_sets, 1), w), jnp.int32),
+            "ks": jnp.zeros((max(self.n_sets, 1), 3 * w), jnp.uint32),
             "value": jnp.zeros((max(self.n_sets, 1), w, cfg.value_dim), jnp.int32),
             "clock": jnp.zeros((), jnp.int32),
             "static_hi": jnp.asarray(s_hi),
@@ -312,12 +401,19 @@ class STDDeviceCache:
         """Parallel probe: returns (hit, layer, value).
 
         layer: 0 = static, 1 = set-associative partition, -1 = miss.
+        One gather fetches every probed slot's key *and* stamp words (the
+        packed layout); pad requests never hit.
         """
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
+        static_hit = static_hit & ~pad
         set_idx = self._set_index(h_lo, part)
-        keys_hi = state["key_hi"][set_idx]  # (B, W)
-        keys_lo = state["key_lo"][set_idx]
+        w = self.cfg.ways
+        rows = state["ks"][set_idx]  # (B, 3W): one gather
+        keys_hi = rows[:, :w]
+        keys_lo = rows[:, w : 2 * w]
         match = (keys_hi == h_hi[:, None]) & (keys_lo == h_lo[:, None]) & (keys_hi != 0)
+        match = match & ~pad[:, None]
         way_hit = match.any(axis=1)
         way = jnp.argmax(match, axis=1)
         value = state["value"][set_idx, way]
@@ -335,22 +431,27 @@ class STDDeviceCache:
         Hits refresh stamps; admitted misses evict the LRU way of their
         set.  Items are processed in request order (fori_loop), so two
         same-set requests in one batch behave exactly like back-to-back
-        requests in the sequential simulator.
+        requests in the sequential simulator.  This is the *oracle*: it
+        runs on the unpacked (key_hi, key_lo, stamp) view via the exact
+        pack/unpack adapters, so the packed engines are property-tested
+        against unchanged reference semantics.  Pad requests are inert.
         """
         b = h_hi.shape[0]
         static_hit, _ = self.static_lookup(state, h_hi, h_lo)
         set_idx = self._set_index(h_lo, part)
+        key_hi0, key_lo0, stamp0 = unpack_words(state["ks"])
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
 
         def body(i, st):
             key_hi, key_lo, stamp, value, clock = st
             s = set_idx[i]
             row_hi = key_hi[s]
             row_lo = key_lo[s]
-            match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0)
+            match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0) & ~pad[i]
             is_hit = match.any()
             way_h = jnp.argmax(match, axis=0)
             way_e = jnp.argmin(stamp[s], axis=0)
-            do_write = (~static_hit[i]) & (is_hit | admit[i])
+            do_write = (~static_hit[i]) & ~pad[i] & (is_hit | admit[i])
             way = jnp.where(is_hit, way_h, way_e)
             new_stamp = clock + 1 + i
             key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
@@ -365,11 +466,11 @@ class STDDeviceCache:
             0,
             b,
             body,
-            (state["key_hi"], state["key_lo"], state["stamp"], state["value"], state["clock"]),
+            (key_hi0, key_lo0, stamp0, state["value"], state["clock"]),
         )
         out = dict(state)
         out.update(
-            key_hi=key_hi, key_lo=key_lo, stamp=stamp, value=value, clock=clock + b
+            ks=pack_words(key_hi, key_lo, stamp), value=value, clock=clock + b
         )
         return out
 
@@ -382,9 +483,10 @@ class STDDeviceCache:
         The batch is stable-sorted by set index, within-batch conflicts
         are resolved by replaying each set's requests round-by-round
         (sequential depth = deepest conflict, not batch size), and the
-        result lands in one gather/compute/scatter.  Values are applied
-        by the deferred fill (:meth:`fill_values`): last insert per slot
-        wins, which is exactly the order the fori_loop writes them.
+        result lands in one gather/compute/scatter over the packed state.
+        Values are applied by the deferred fill (:meth:`fill_values`):
+        last insert per slot wins, which is exactly the order the
+        fori_loop writes them.
         """
         b = h_hi.shape[0]
         if b == 0:
@@ -392,15 +494,11 @@ class STDDeviceCache:
         static_hit, _ = self.static_lookup(state, h_hi, h_lo)
         set_idx = self._set_index(h_lo, part)
         out = probe_and_commit_op(
-            state["key_hi"], state["key_lo"], state["stamp"],
-            h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
             use_kernel=use_kernel, interpret=interpret,
         )
         new = dict(state)
-        new.update(
-            key_hi=out["key_hi"], key_lo=out["key_lo"], stamp=out["stamp"],
-            clock=state["clock"] + b,
-        )
+        new.update(ks=out["ks"], clock=state["clock"] + b)
         return self.fill_values(new, set_idx, out["wrote"], out["way"], values)
 
     def probe_and_commit(
@@ -419,11 +517,12 @@ class STDDeviceCache:
         :meth:`fill_values` with the returned ``(set_idx, wrote, way)``.
         """
         b = h_hi.shape[0]
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
+        static_hit = static_hit & ~pad
         set_idx = self._set_index(h_lo, part)
         out = probe_and_commit_op(
-            state["key_hi"], state["key_lo"], state["stamp"],
-            h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
             use_kernel=use_kernel, interpret=interpret,
         )
         value = state["value"][set_idx, out["pre_way"]]
@@ -434,11 +533,30 @@ class STDDeviceCache:
         hit = static_hit | out["pre_hit"]
         layer = jnp.where(static_hit, 0, jnp.where(out["pre_hit"], 1, -1))
         new = dict(state)
-        new.update(
-            key_hi=out["key_hi"], key_lo=out["key_lo"], stamp=out["stamp"],
-            clock=state["clock"] + b,
-        )
+        new.update(ks=out["ks"], clock=state["clock"] + b)
         return hit, layer, value, new, (set_idx, out["wrote"], out["way"])
+
+    def fill_probe_and_commit(
+        self, state, f_set_idx, f_wrote, f_way, f_values, h_hi, h_lo, part, admit,
+        use_kernel: bool = False, interpret: bool = True,
+    ):
+        """Double-buffered serve step: apply the *previous* batch's
+        deferred value fill, then probe-and-commit the current batch, in
+        one device call.
+
+        The fill lands before the probe reads ``value``, so a query
+        hitting a key the previous batch inserted sees its backend result
+        -- semantics identical to :meth:`fill_values` followed by
+        :meth:`probe_and_commit`, minus one dispatch, and XLA overlaps
+        the value scatter with the next bucket's key/stamp gather.  The
+        fill plan must be padded to the current bucket's length (pad
+        entries carry ``f_wrote == False``).
+        """
+        state = self.fill_values(state, f_set_idx, f_wrote, f_way, f_values)
+        return self.probe_and_commit(
+            state, h_hi, h_lo, part, admit,
+            use_kernel=use_kernel, interpret=interpret,
+        )
 
     def fill_values(self, state, set_idx, wrote, way, values):
         """Deferred value fill for inserts reported by the fused commit.
@@ -471,7 +589,8 @@ class STDDeviceCache:
     # scatter (~10us) can, by an order of magnitude.  The broker picks
     # this engine automatically when jax's default backend is "cpu"; on
     # accelerators the jnp/Pallas paths run.  Bit-exact with `commit`
-    # (shared property tests).
+    # (shared property tests).  The unpacked (key_hi, key_lo, stamp)
+    # arrays the replay mutates are numpy *views* into the packed ``ks``.
 
     def _set_index_host(self, h_lo: np.ndarray, part: np.ndarray) -> np.ndarray:
         n_sets = self.part_sets[part]
@@ -511,6 +630,7 @@ class STDDeviceCache:
         b = len(h_hi)
         if b == 0:
             return np.zeros(0, bool), np.zeros(0, np.int32)
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         s_max = key_hi.shape[0] - 1
         sc = np.minimum(set_idx, s_max)  # jnp gathers clamp ...
         oob = set_idx > s_max  # ... and scatters drop
@@ -535,13 +655,14 @@ class STDDeviceCache:
             s = sc[i]
             rh, rl, rst = key_hi[s], key_lo[s], stamp[s]
             m = (rh == h_hi[i][:, None]) & (rl == h_lo[i][:, None]) & (rh != 0)
+            m &= ~pad[i][:, None]
             # one reduction finds both outcomes: a match outranks every
             # stamp (stamps are >= 0), else the LRU way wins; ties keep
             # the first index exactly like the oracle's argmin/argmax
             prio = np.where(m, np.int32(-1), rst)
             way = prio.argmin(axis=1).astype(np.int32)
             is_hit = prio[np.arange(len(i)), way] == -1
-            do_write = ~static_hit[i] & (is_hit | admit[i]) & ~oob[i]
+            do_write = ~static_hit[i] & ~pad[i] & (is_hit | admit[i]) & ~oob[i]
             w = np.flatnonzero(do_write)
             key_hi[s[w], way[w]] = h_hi[i[w]]
             key_lo[s[w], way[w]] = h_lo[i[w]]
@@ -580,9 +701,8 @@ class STDDeviceCache:
             return out
         static_hit, _ = self.static_lookup_host(state, h_hi, h_lo)
         set_idx = self._set_index_host(h_lo, np.asarray(part))
-        key_hi = self._own(state["key_hi"], np.uint32, inplace)
-        key_lo = self._own(state["key_lo"], np.uint32, inplace)
-        stamp = self._own(state["stamp"], np.int32, inplace)
+        ks = self._own(state["ks"], np.uint32, inplace)
+        key_hi, key_lo, stamp = unpack_words(ks)  # in-place views
         plan = self._resolve_host(
             key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
             static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
@@ -597,9 +717,9 @@ class STDDeviceCache:
             )
         wrote, way = plan
         value = self._own(state["value"], np.int32, inplace)
-        w = np.flatnonzero(wrote & (set_idx <= key_hi.shape[0] - 1))
+        w = np.flatnonzero(wrote & (set_idx <= ks.shape[0] - 1))
         value[set_idx[w], way[w]] = np.asarray(values)[w]  # in order: last insert wins
-        out.update(key_hi=key_hi, key_lo=key_lo, stamp=stamp, value=value)
+        out.update(ks=ks, value=value)
         return out
 
     def probe_and_commit_host(self, state, h_hi, h_lo, part, admit, inplace: bool = False):
@@ -611,13 +731,19 @@ class STDDeviceCache:
         """
         h_hi, h_lo = np.asarray(h_hi), np.asarray(h_lo)
         b = len(h_hi)
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         static_hit, static_idx = self.static_lookup_host(state, h_hi, h_lo)
+        static_hit = static_hit & ~pad
         set_idx = self._set_index_host(h_lo, np.asarray(part))
-        s_max = np.asarray(state["key_hi"]).shape[0] - 1
+        ks_pre = np.asarray(state["ks"])
+        w = self.cfg.ways
+        s_max = ks_pre.shape[0] - 1
         sc = np.minimum(set_idx, s_max)
-        pre_rh = np.asarray(state["key_hi"])[sc]
-        pre_rl = np.asarray(state["key_lo"])[sc]
+        rows = ks_pre[sc]  # (B, 3W): one gather for keys and stamps
+        pre_rh = rows[:, :w]
+        pre_rl = rows[:, w : 2 * w]
         pm = (pre_rh == h_hi[:, None]) & (pre_rl == h_lo[:, None]) & (pre_rh != 0)
+        pm &= ~pad[:, None]
         pre_hit = pm.any(axis=1)
         pre_way = pm.argmax(axis=1).astype(np.int32)
         value = np.asarray(state["value"])[sc, pre_way]
@@ -625,9 +751,8 @@ class STDDeviceCache:
             value = np.where(
                 static_hit[:, None], np.asarray(state["static_value"])[static_idx], value
             )
-        key_hi = self._own(state["key_hi"], np.uint32, inplace)
-        key_lo = self._own(state["key_lo"], np.uint32, inplace)
-        stamp = self._own(state["stamp"], np.int32, inplace)
+        ks = self._own(state["ks"], np.uint32, inplace)
+        key_hi, key_lo, stamp = unpack_words(ks)  # in-place views
         plan = self._resolve_host(
             key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
             static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
@@ -639,24 +764,21 @@ class STDDeviceCache:
             if not hasattr(self, "_fused_seq_jit"):
                 self._fused_seq_jit = jax.jit(_sequential_replay)
             r_hi, r_lo, r_st, wrote, way = self._fused_seq_jit(
-                jnp.asarray(state["key_hi"]), jnp.asarray(state["key_lo"]),
-                jnp.asarray(state["stamp"]), jnp.asarray(h_hi), jnp.asarray(h_lo),
+                jnp.asarray(key_hi), jnp.asarray(key_lo),
+                jnp.asarray(stamp), jnp.asarray(h_hi), jnp.asarray(h_lo),
                 jnp.asarray(set_idx), jnp.asarray(admit), jnp.asarray(static_hit),
                 jnp.asarray(state["clock"]),
             )
-            key_hi = np.asarray(r_hi)
-            key_lo = np.asarray(r_lo)
-            stamp = np.asarray(r_st)
+            key_hi[...] = np.asarray(r_hi)  # write back through the ks views
+            key_lo[...] = np.asarray(r_lo)
+            stamp[...] = np.asarray(r_st)
             wrote, way = np.asarray(wrote), np.asarray(way)
         else:
             wrote, way = plan
         hit = static_hit | pre_hit
         layer = np.where(static_hit, 0, np.where(pre_hit, 1, -1)).astype(np.int32)
         new = dict(state)
-        new.update(
-            key_hi=key_hi, key_lo=key_lo, stamp=stamp,
-            clock=np.int32(state["clock"]) + np.int32(b),
-        )
+        new.update(ks=ks, clock=np.int32(state["clock"]) + np.int32(b))
         return hit, layer, value, new, (set_idx, wrote, way)
 
     def fill_values_host(self, state, set_idx, wrote, way, values, inplace: bool = False):
@@ -670,7 +792,8 @@ class STDDeviceCache:
     # -- elastic re-partitioning -------------------------------------------
 
     def repartition(
-        self, state, new_cfg: DeviceCacheConfig, engine: str = "vec"
+        self, state, new_cfg: DeviceCacheConfig, engine: str = "vec",
+        bucket=None,
     ) -> Tuple["STDDeviceCache", Any]:
         """Rebuild the partition table (e.g., fresh topic popularity) and
         migrate resident entries, preserving recency order.
@@ -688,6 +811,14 @@ class STDDeviceCache:
         on CPU backends), ``"oracle"`` (the fori_loop reference) -- all
         bit-exact with each other (property-tested), so a live rebalance
         lands the same state whichever engine the broker serves with.
+
+        ``bucket`` (a :class:`repro.serving.spec.BucketSpec`) pads the
+        migration batch up to a shape bucket with the reserved pad key,
+        so the resident-count-dependent bulk insert reuses a bucketed
+        trace instead of compiling a fresh shape per migration.  Pad
+        migrants are inert by the engine contract; the migrated state is
+        identical either way (stamps included: pads sit at the batch
+        tail, after every real migrant's arrival position).
         """
         if engine not in ("vec", "host", "oracle"):
             raise ValueError(f"engine must be vec|host|oracle, got {engine!r}")
@@ -696,9 +827,8 @@ class STDDeviceCache:
         new_state["static_hi"] = state["static_hi"]
         new_state["static_lo"] = state["static_lo"]
         new_state["static_value"] = state["static_value"]
-        key_hi = np.asarray(state["key_hi"])
-        key_lo = np.asarray(state["key_lo"])
-        stamp = np.asarray(state["stamp"])
+        ks_np = np.asarray(state["ks"])
+        key_hi, key_lo, stamp = unpack_words(ks_np)
         value = np.asarray(state["value"])
         # partition of each old set
         old_part = np.searchsorted(self.part_offset[1:], np.arange(self.n_sets), side="right")
@@ -718,6 +848,11 @@ class STDDeviceCache:
         lo = (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
         vals = value[sets_l, ways_l]
         admit = np.ones(len(parts), bool)
+        # static-shape contract: pad the migration batch to its bucket
+        bp = bucket.padded_len(len(hi)) if bucket is not None else len(hi)
+        hi, lo, new_parts, vals, admit = pad_batch(
+            hi, lo, new_parts, new_cache.k, bp, values=vals, admit=admit
+        )
         if engine == "host":
             new_state = new_cache.commit_host(
                 new_state, hi, lo, new_parts, vals, admit, inplace=True

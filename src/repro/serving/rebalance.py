@@ -55,16 +55,35 @@ class RebalanceSpec:
                      rebalance: a cold-started tracker must not shred
                      the training-log allocation on a handful of
                      requests.
+    ``min_interval`` -- cooldown: after a migration, scheduled checks
+                     skip at least this many served batches before the
+                     next migration may run (0 = no cooldown; a manual
+                     ``rebalance(force=True)`` bypasses it).  Caps the
+                     migration rate outright under oscillating
+                     popularity.
+    ``hysteresis`` -- threshold band: after a migration the effective
+                     threshold is raised to ``threshold + hysteresis``
+                     until a scheduled check observes the divergence
+                     settled back at or below ``threshold`` (re-arming
+                     the plain threshold).  Popularity oscillating just
+                     around ``threshold`` then triggers one migration,
+                     not one per swing (0 = PR-4 behaviour).  With
+                     ``threshold == 0`` the band never re-arms, so
+                     ``hysteresis`` acts as the post-first-migration
+                     threshold.
     """
 
     every: int = 64
     decay: float = 0.995
     threshold: float = 0.0
     min_count: float = 1.0
+    min_interval: int = 0
+    hysteresis: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "every", int(self.every))
-        for f in ("decay", "threshold", "min_count"):
+        object.__setattr__(self, "min_interval", int(self.min_interval))
+        for f in ("decay", "threshold", "min_count", "hysteresis"):
             object.__setattr__(self, f, float(getattr(self, f)))
         if self.every < 1:
             raise ValueError(f"rebalance every must be >= 1 batches, got {self.every}")
@@ -76,6 +95,15 @@ class RebalanceSpec:
             )
         if self.min_count < 0:
             raise ValueError(f"min_count must be >= 0, got {self.min_count}")
+        if self.min_interval < 0:
+            raise ValueError(
+                f"min_interval must be >= 0 batches, got {self.min_interval}"
+            )
+        if not 0.0 <= self.hysteresis <= 2.0:
+            raise ValueError(
+                f"hysteresis is an L1 share divergence band in [0, 2], "
+                f"got {self.hysteresis}"
+            )
 
     def to_tracker(self, topic_ids: Sequence[int]) -> "PopularityTracker":
         """Compile to the runtime tracker over a cache's topic universe."""

@@ -42,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass
-from typing import List, Mapping, Optional
+from typing import List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -54,11 +54,78 @@ SERVING_SPEC_VERSION = 1
 
 _ROUTINGS = ("hash", "topic")
 _ENGINES = ("auto", "host", "device")
+_BUCKET_MODES = ("none", "pow2", "explicit")
 
 
 def _split_entries(total: int, shards: int, i: int) -> int:
     """Shard i's share of ``total`` entries (as even as possible)."""
     return total // shards + (1 if i < total % shards else 0)
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Shape buckets for data-dependent batch lengths -- the static-shape
+    serving contract.
+
+    The ``engine="device"`` path is ``jax.jit``-compiled per input shape:
+    ragged tail batches, per-shard slice lengths after routing, and
+    post-rebalance migration sizes each used to trace a fresh program.
+    A ``BucketSpec`` instead rounds every batch length up to a *bucket*
+    and pads the tail with the reserved never-resident pad key
+    (:data:`repro.core.spec.PAD_KEY`), so the compile count is
+    O(#buckets), not O(#distinct batch shapes), and padded serving stays
+    request-for-request identical to unpadded serving on the real
+    requests (the pad key never hits, is never admitted, and never
+    displaces a resident entry -- property-tested in every engine).
+
+    ``mode``     -- ``"pow2"`` (next power of two >= the batch length),
+                    ``"explicit"`` (smallest declared size that fits;
+                    larger batches fall back to powers of two so the
+                    compile count stays bounded), or ``"none"``
+                    (explicitly disable padding -- distinct from an
+                    unset ``ServingSpec.bucket``, which lets the broker
+                    auto-enable pow2 bucketing on device engines).
+    ``sizes``    -- the explicit bucket sizes (ascending), required for
+                    ``mode="explicit"``.
+    ``min_size`` -- the smallest bucket (pow2 mode); tiny trailing
+                    batches all land in one bucket instead of one trace
+                    per length.
+    """
+
+    mode: str = "pow2"  # "none" | "pow2" | "explicit"
+    sizes: Tuple[int, ...] = ()
+    min_size: int = 8
+
+    def __post_init__(self):
+        object.__setattr__(self, "min_size", int(self.min_size))
+        object.__setattr__(
+            self, "sizes", tuple(sorted(int(s) for s in self.sizes))
+        )
+        if self.mode not in _BUCKET_MODES:
+            raise ValueError(f"bucket mode must be one of {_BUCKET_MODES}, got {self.mode!r}")
+        if self.min_size < 1:
+            raise ValueError(f"bucket min_size must be >= 1, got {self.min_size}")
+        if self.mode == "explicit" and not self.sizes:
+            raise ValueError('bucket mode "explicit" requires sizes')
+        if any(s < 1 for s in self.sizes):
+            raise ValueError(f"bucket sizes must be >= 1, got {self.sizes}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    def padded_len(self, b: int) -> int:
+        """The bucket a batch of ``b`` requests pads up to (``b`` itself
+        when disabled or empty)."""
+        if b <= 0 or not self.enabled:
+            return max(int(b), 0)
+        if self.mode == "explicit":
+            for s in self.sizes:
+                if s >= b:
+                    return s
+            # beyond the largest declared bucket: powers of two keep the
+            # compile count logarithmic instead of one trace per length
+        return 1 << (max(int(b), self.min_size) - 1).bit_length()
 
 
 @dataclass(frozen=True)
@@ -101,6 +168,12 @@ class ServingSpec:
     hedge: Optional[HedgeSpec] = None
     #: drift-aware topic rebalancing (None = the paper's frozen allocation)
     rebalance: Optional[RebalanceSpec] = None
+    #: shape-bucketed batch padding (static-shape serving contract).
+    #: None = auto: brokers on the jit-compiled device engine bucket with
+    #: pow2 defaults, the host engine serves unpadded (numpy compiles
+    #: nothing).  Set explicitly -- including ``BucketSpec(mode="none")``
+    #: -- to override the auto choice on every shard.
+    bucket: Optional[BucketSpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -137,10 +210,12 @@ class ServingSpec:
             )
         hedge = d.pop("hedge", None)
         rebalance = d.pop("rebalance", None)
+        bucket = d.pop("bucket", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
             rebalance=RebalanceSpec(**rebalance) if rebalance is not None else None,
+            bucket=BucketSpec(**bucket) if bucket is not None else None,
             **d,
         )
 
@@ -238,4 +313,10 @@ class ServingSpec:
         )
 
 
-__all__ = ["SERVING_SPEC_VERSION", "HedgeSpec", "RebalanceSpec", "ServingSpec"]
+__all__ = [
+    "SERVING_SPEC_VERSION",
+    "BucketSpec",
+    "HedgeSpec",
+    "RebalanceSpec",
+    "ServingSpec",
+]

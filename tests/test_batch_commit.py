@@ -19,7 +19,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import NO_TOPIC, LRUCache, STDCache
-from repro.kernels.cache_ops import probe_and_commit_op
+from repro.kernels.cache_ops import pack_words, probe_and_commit_op, unpack_words
 from repro.kernels.cache_ops.ref import probe_and_commit_ref
 from repro.serving import (
     Broker,
@@ -27,9 +27,10 @@ from repro.serving import (
     STDDeviceCache,
     pack_hashes,
     splitmix64,
+    unpack_state,
 )
 
-STATE_KEYS = ("key_hi", "key_lo", "stamp", "value", "clock")
+STATE_KEYS = ("ks", "value", "clock")
 
 
 def _cache(n_sets_scale=1, ways=4, value_dim=2, static=(3, 4)):
@@ -145,7 +146,8 @@ def test_static_hits_never_write():
     qids = np.array([3, 4, 5, 6, 3, 4] * 4)
     batches = [_batch(cache, rng, qids, admit_p=1.0)]
     state = _drive_all_paths(cache, dict(cache.init_state), batches)
-    assert (np.asarray(state["key_hi"]) == 0).all(), "static hits must not insert"
+    key_hi, _, _ = unpack_state({"ks": np.asarray(state["ks"])})
+    assert (key_hi == 0).all(), "static hits must not insert"
 
 
 def test_kernel_matches_numpy_ref_per_request_outputs():
@@ -157,18 +159,20 @@ def test_kernel_matches_numpy_ref_per_request_outputs():
         hi, lo, parts, vals, admit = _batch(cache, rng, rng.integers(0, 50, size=64))
         static_hit, _ = cache.static_lookup(state, hi, lo)
         set_idx = cache._set_index(lo, parts)
+        key_hi, key_lo, stamp = unpack_words(np.asarray(state["ks"]))
         ref = probe_and_commit_ref(
-            state["key_hi"], state["key_lo"], state["stamp"],
+            key_hi, key_lo, stamp,
             np.asarray(hi), np.asarray(lo), np.asarray(set_idx),
             np.asarray(admit), np.asarray(static_hit), int(state["clock"]),
         )
+        ref_ks = pack_words(ref["key_hi"], ref["key_lo"], ref["stamp"])
         for use_kernel in (False, True):
             got = probe_and_commit_op(
-                state["key_hi"], state["key_lo"], state["stamp"],
-                hi, lo, set_idx, admit, static_hit, state["clock"],
+                state["ks"], hi, lo, set_idx, admit, static_hit, state["clock"],
                 use_kernel=use_kernel, interpret=True,
             )
-            for k in ("key_hi", "key_lo", "stamp", "pre_hit", "pre_way", "wrote", "way"):
+            assert (np.asarray(got["ks"]) == ref_ks).all(), (i, use_kernel, "ks")
+            for k in ("pre_hit", "pre_way", "wrote", "way"):
                 assert (np.asarray(got[k]) == np.asarray(ref[k])).all(), (i, use_kernel, k)
         state = cache.commit(state, hi, lo, parts, vals, admit)
 

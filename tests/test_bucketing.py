@@ -1,0 +1,505 @@
+"""Static-shape serving contract: reserved pad key + shape-bucketed batching.
+
+Pins the three legs of the contract:
+
+* **PAD_KEY invariants** -- the reserved pad key never hits, is never
+  admitted, and never displaces a resident entry, in every engine
+  (fori_loop oracle, jnp ops, Pallas kernel, numpy host, numpy ref);
+  ``splitmix64`` maps ``PAD_KEY`` exactly to the reserved hash and never
+  hashes a real key onto it (or onto 0, the empty-slot sentinel).
+* **Conformance** -- bucketed/padded serving is request-for-request
+  identical (values, hit mask, per-layer stats) to the unpadded path:
+  bare broker on both engines, fused and unfused, hash- and topic-routed
+  clusters, and across a live rebalance.
+* **Compile counts** -- the jitted serving entry points trace O(#buckets)
+  shapes over a ragged multi-shape stream (trace-counting wrappers in
+  ``Broker.trace_counts``), for broker and cluster, including after a
+  live rebalance re-binds the jits.
+
+Plus the `RebalanceSpec` cooldown/hysteresis satellite.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import CacheSpec, VecLog, VecStats
+from repro.core.spec import PAD_KEY
+from repro.kernels.cache_ops import pack_words, probe_and_commit_op, unpack_words
+from repro.kernels.cache_ops.ref import probe_and_commit_ref
+from repro.serving import (
+    Broker,
+    BucketSpec,
+    Cluster,
+    DeviceCacheConfig,
+    PAD_H64,
+    PAD_HI,
+    PAD_LO,
+    RebalanceSpec,
+    STDDeviceCache,
+    ServingSpec,
+    pack_hashes,
+    splitmix64,
+    unpack_state,
+)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _filled_cache(seed=0, static=(3, 4)):
+    cfg = DeviceCacheConfig(
+        total_entries=64, ways=4, value_dim=2,
+        topic_entries={0: 16, 1: 16}, dynamic_entries=32,
+    )
+    cache = STDDeviceCache(
+        cfg,
+        static_hashes=splitmix64(np.asarray(static)),
+        static_values=np.asarray(static)[:, None].repeat(2, 1).astype(np.int32),
+    )
+    rng = np.random.default_rng(seed)
+    state = dict(cache.init_state)
+    topic_of_q = rng.integers(-1, 2, size=400)
+    for _ in range(3):
+        qids = rng.integers(0, 400, size=64)
+        hi, lo = pack_hashes(splitmix64(qids))
+        parts = cache.parts_for(topic_of_q[qids])
+        vals = rng.integers(0, 1000, size=(64, 2)).astype(np.int32)
+        state = cache.commit_host(state, hi, lo, parts, vals, np.ones(64, bool))
+    return cache, state
+
+
+# -- BucketSpec unit ---------------------------------------------------------
+
+
+def test_bucket_spec_padded_len_and_validation():
+    pow2 = BucketSpec(min_size=8)
+    assert [pow2.padded_len(b) for b in (0, 1, 7, 8, 9, 64, 65, 250)] == [
+        0, 8, 8, 8, 16, 64, 128, 256,
+    ]
+    exp = BucketSpec(mode="explicit", sizes=(200, 64))  # sorted on init
+    assert exp.sizes == (64, 200)
+    assert exp.padded_len(50) == 64
+    assert exp.padded_len(64) == 64
+    assert exp.padded_len(100) == 200
+    assert exp.padded_len(300) == 512  # pow2 fallback past the largest
+    off = BucketSpec(mode="none")
+    assert not off.enabled and off.padded_len(33) == 33
+    with pytest.raises(ValueError, match="mode"):
+        BucketSpec(mode="fib")
+    with pytest.raises(ValueError, match="explicit"):
+        BucketSpec(mode="explicit")
+    with pytest.raises(ValueError, match="min_size"):
+        BucketSpec(min_size=0)
+
+
+def test_serving_spec_round_trips_bucket_and_rebalance_fields():
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 256, f_s=0.25, f_t=0.5),
+        bucket=BucketSpec(mode="explicit", sizes=(64, 256), min_size=4),
+        rebalance=RebalanceSpec(every=8, min_interval=3, hysteresis=0.25),
+    )
+    again = ServingSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.bucket == spec.bucket
+    assert again.rebalance.min_interval == 3
+    assert again.rebalance.hysteresis == 0.25
+    with pytest.raises(ValueError, match="min_interval"):
+        RebalanceSpec(min_interval=-1)
+    with pytest.raises(ValueError, match="hysteresis"):
+        RebalanceSpec(hysteresis=3.0)
+
+
+# -- PAD_KEY invariants ------------------------------------------------------
+
+
+def test_splitmix64_reserves_pad_and_empty_hashes():
+    assert splitmix64(np.array([PAD_KEY]))[0] == PAD_H64
+    assert pack_hashes(np.array([PAD_H64], np.uint64)) == (PAD_HI, PAD_LO)
+    h = splitmix64(np.arange(200_000))
+    assert not (h == np.uint64(0)).any()
+    assert not (h == PAD_H64).any()
+
+
+def test_pad_key_inert_in_every_engine():
+    """A pad request -- even with admit=True -- never hits, never writes,
+    never evicts, in all five engines."""
+    import jax.numpy as jnp
+
+    cache, state = _filled_cache()
+    rng = np.random.default_rng(1)
+    b = 32
+    # interleave pads with real requests at random positions
+    qids = rng.integers(0, 400, size=b)
+    hi, lo = pack_hashes(splitmix64(qids))
+    pad_at = rng.random(b) < 0.4
+    hi = np.where(pad_at, PAD_HI, hi).astype(np.uint32)
+    lo = np.where(pad_at, PAD_LO, lo).astype(np.uint32)
+    parts = cache.parts_for(rng.integers(-1, 2, size=b))
+    vals = rng.integers(0, 100, size=(b, 2)).astype(np.int32)
+    admit = np.ones(b, bool)  # pads must be inert even when "admitted"
+    set_idx = cache._set_index_host(lo, parts)
+    static_hit, _ = cache.static_lookup_host(state, hi, lo)
+
+    key_hi, key_lo, stamp = unpack_words(np.asarray(state["ks"]))
+    ref = probe_and_commit_ref(
+        key_hi, key_lo, stamp, hi, lo, set_idx, admit, static_hit,
+        int(state["clock"]),
+    )
+    assert not ref["pre_hit"][pad_at].any()
+    assert not ref["wrote"][pad_at].any()
+    ref_ks = pack_words(ref["key_hi"], ref["key_lo"], ref["stamp"])
+
+    for use_kernel in (False, True):
+        got = probe_and_commit_op(
+            jnp.asarray(state["ks"]), jnp.asarray(hi), jnp.asarray(lo),
+            jnp.asarray(set_idx), jnp.asarray(admit),
+            jnp.asarray(static_hit), jnp.asarray(state["clock"]),
+            use_kernel=use_kernel, interpret=True,
+        )
+        assert (np.asarray(got["ks"]) == ref_ks).all(), use_kernel
+        assert not np.asarray(got["pre_hit"])[pad_at].any()
+        assert not np.asarray(got["wrote"])[pad_at].any()
+
+    args = (jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
+            jnp.asarray(vals), jnp.asarray(admit))
+    s_seq = cache.commit(state, *args)
+    assert (np.asarray(s_seq["ks"]) == ref_ks).all()
+    s_host = cache.commit_host(
+        {k: np.array(np.asarray(v)) for k, v in state.items()},
+        hi, lo, parts, vals, admit,
+    )
+    assert (np.asarray(s_host["ks"]) == ref_ks).all()
+    hit, _, _ = cache.probe(s_seq, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts))
+    assert not np.asarray(hit)[pad_at].any()
+    # an all-pad batch leaves keys, stamps and values bit-identical
+    ph = np.full(16, PAD_HI, np.uint32)
+    pl_ = np.full(16, PAD_LO, np.uint32)
+    pp = np.full(16, cache.k, np.int32)
+    s2 = cache.commit_vectorized(
+        s_seq, jnp.asarray(ph), jnp.asarray(pl_), jnp.asarray(pp),
+        jnp.zeros((16, 2), jnp.int32), jnp.ones(16, bool),
+    )
+    assert (np.asarray(s2["ks"]) == np.asarray(s_seq["ks"])).all()
+    assert (np.asarray(s2["value"]) == np.asarray(s_seq["value"])).all()
+
+
+def test_constructor_drops_reserved_static_hashes():
+    cfg = DeviceCacheConfig(
+        total_entries=16, ways=4, value_dim=1, topic_entries={}, dynamic_entries=16
+    )
+    hashes = np.array([5, 0, PAD_H64, 9], np.uint64)
+    vals = np.arange(4, dtype=np.int32)[:, None]
+    cache = STDDeviceCache(cfg, static_hashes=hashes, static_values=vals)
+    table = np.asarray(cache.init_state["static_hi"]).astype(np.uint64) << np.uint64(32)
+    table |= np.asarray(cache.init_state["static_lo"]).astype(np.uint64)
+    assert sorted(table.tolist()) == [5, 9]
+    # values stayed aligned with their surviving hashes
+    assert np.asarray(cache.init_state["static_value"]).ravel().tolist() == [0, 3]
+
+
+# -- conformance: bucketed == unpadded ---------------------------------------
+
+
+RAGGED = [64, 33, 64, 57, 7, 64, 128, 1, 64, 99, 17, 64]
+
+
+def _sim_setup(seed=0, nq=500, n_topics=4):
+    rng = np.random.default_rng(seed)
+    topic_of_q = rng.integers(-1, n_topics, size=nq)
+    cfg = DeviceCacheConfig.build(
+        128, f_s=0.1, f_t=0.6,
+        topic_distinct={t: 10 + t for t in range(n_topics)}, ways=4, value_dim=2,
+    )
+    backend = _backend(2)
+
+    def make(engine, bucket, **kw):
+        static_q = np.array([0, 1])
+        cache = STDDeviceCache(
+            cfg, static_hashes=splitmix64(static_q), static_values=backend(static_q)
+        )
+        return Broker(
+            cache, [backend], lambda q: topic_of_q[q], engine=engine,
+            bucket=bucket, **kw,
+        )
+
+    return rng, make
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_bucketed_broker_matches_unpadded_request_for_request(fused):
+    rng, make = _sim_setup()
+    ref = make("host", BucketSpec(mode="none"), fused=fused)
+    dev = make("device", BucketSpec(min_size=8), fused=fused)  # defer_fill auto-on
+    hostb = make("host", BucketSpec(min_size=8), fused=fused)
+    brokers = [ref, dev, hostb]
+    for n in RAGGED:
+        q = rng.integers(0, 500, size=n)
+        v0, h0 = ref.serve(q)
+        for b in brokers[1:]:
+            v, h = b.serve(q)
+            assert np.array_equal(v, v0) and np.array_equal(h, h0), n
+    for b in brokers[1:]:
+        for f in ("requests", "hits", "static_hits", "topic_hits", "admitted",
+                  "backend_calls", "batches"):
+            assert getattr(b.stats, f) == getattr(ref.stats, f), f
+    assert ref.stats.padded == 0
+    assert dev.stats.padded > 0 and hostb.stats.padded > 0
+    # after a flush the deferred fill has landed: cached values identical
+    dev.flush()
+    assert np.array_equal(np.asarray(dev.state["value"]), np.asarray(ref.state["value"]))
+    for b in brokers:
+        b.close()
+
+
+@pytest.mark.parametrize("routing", ["hash", "topic"])
+def test_bucketed_cluster_matches_unpadded(routing):
+    rng = np.random.default_rng(3)
+    nq, n = 600, 6000
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, 6, size=nq).astype(np.int64)
+    log = VecLog(keys=keys, n_train=n // 2, key_topic=topic)
+    stats = VecStats.from_log(log)
+    backend = _backend(2)
+    base = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 256, f_s=0.3, f_t=0.5),
+        value_dim=2, shards=2, routing=routing, engine="host",
+    )
+    test = log.test_keys
+    with Cluster.from_spec(
+        dataclasses.replace(base, bucket=BucketSpec(mode="none")),
+        stats, [backend], value_fn=backend,
+    ) as plain, Cluster.from_spec(
+        dataclasses.replace(base, bucket=BucketSpec(min_size=8)),
+        stats, [backend], value_fn=backend,
+    ) as bucketed:
+        lo = 0
+        for sz in RAGGED * 2:
+            q = test[lo : lo + sz]
+            lo += sz
+            v0, h0 = plain.serve(q)
+            v1, h1 = bucketed.serve(q)
+            assert np.array_equal(v0, v1) and np.array_equal(h0, h1)
+        s0, s1 = plain.stats, bucketed.stats
+        assert (s0.requests, s0.hits, s0.static_hits, s0.topic_hits) == (
+            s1.requests, s1.hits, s1.static_hits, s1.topic_hits,
+        )
+        assert s0.padded == 0 and s1.padded > 0
+
+
+def test_bucketed_serving_identical_across_live_rebalance():
+    """The conformance bar holds through a migration: tracker state,
+    triggers, and the repartitioned layout line up padded vs unpadded."""
+    rng = np.random.default_rng(5)
+    nq = 800
+    topic_of_q = rng.integers(-1, 4, size=nq)
+    cfg = DeviceCacheConfig.build(
+        128, f_s=0.0, f_t=0.8, topic_distinct={t: 10 for t in range(4)},
+        ways=4, value_dim=2,
+    )
+    backend = _backend(2)
+    reb = RebalanceSpec(every=4, decay=0.9, min_count=0.0)
+
+    def make(engine, bucket):
+        return Broker(
+            STDDeviceCache(cfg), [backend], lambda q: topic_of_q[q],
+            engine=engine, bucket=bucket, rebalance=reb,
+        )
+
+    ref = make("host", BucketSpec(mode="none"))
+    dev = make("device", BucketSpec(min_size=8))
+    # phase 1: topics 0/1 hot; phase 2: topics 2/3 hot -> live migrations
+    pools = [np.flatnonzero((topic_of_q == 0) | (topic_of_q == 1)),
+             np.flatnonzero((topic_of_q == 2) | (topic_of_q == 3))]
+    for phase in (0, 1):
+        for sz in RAGGED:
+            q = rng.choice(pools[phase], size=sz)
+            v0, h0 = ref.serve(q)
+            v1, h1 = dev.serve(q)
+            assert np.array_equal(v0, v1) and np.array_equal(h0, h1)
+    assert ref.stats.rebalances > 0
+    assert dev.stats.rebalances == ref.stats.rebalances
+    assert dev.cache.cfg == ref.cache.cfg  # same live allocation
+    ref.close()
+    dev.close()
+
+
+# -- compile counts ----------------------------------------------------------
+
+
+def _fused_traces(tc):
+    return tc.get("fused", 0) + tc.get("fused_fill", 0)
+
+
+def test_broker_compile_count_is_o_buckets():
+    rng, make = _sim_setup(seed=7)
+    bucket = BucketSpec(min_size=8)
+    broker = make("device", bucket)
+    sizes = RAGGED + RAGGED  # replay: second pass must add zero traces
+    for n in sizes:
+        broker.serve(rng.integers(0, 500, size=n))
+    buckets = {bucket.padded_len(n) for n in sizes}
+    tc = dict(broker.trace_counts)
+    # fused + fused_fill each trace at most once per bucket; the
+    # standalone fill at most once per bucket of a plan length
+    assert _fused_traces(tc) <= 2 * len(buckets), (tc, buckets)
+    assert tc.get("fill", 0) <= len(buckets), tc
+    # an unbucketed device broker traces every distinct shape instead
+    plain = make("device", BucketSpec(mode="none"), defer_fill=False)
+    for n in sizes:
+        plain.serve(rng.integers(0, 500, size=n))
+    assert _fused_traces(plain.trace_counts) == len(set(sizes))
+    broker.close()
+    plain.close()
+
+
+def test_unfused_commit_compile_count_is_o_buckets():
+    """The unfused path's data-dependent miss/refresh sub-batches are
+    bucketed too: probe + commit traces stay O(#buckets)."""
+    rng, make = _sim_setup(seed=11)
+    bucket = BucketSpec(min_size=8)
+    broker = make("device", bucket, fused=False)
+    sizes = RAGGED + RAGGED
+    for n in sizes:
+        broker.serve(rng.integers(0, 500, size=n))
+    buckets = {bucket.padded_len(n) for n in sizes}
+    tc = dict(broker.trace_counts)
+    assert tc.get("probe", 0) <= len(buckets), tc
+    # miss/refresh sub-batch lengths range over [1, n], so their bucket
+    # set is every bucket up to the largest batch's -- still O(#buckets)
+    sub_buckets = {bucket.padded_len(b) for b in range(1, max(sizes) + 1)}
+    assert tc.get("commit", 0) <= len(sub_buckets), tc
+    broker.close()
+
+
+def test_cluster_and_rebalance_compile_counts():
+    """Cluster shard slices and a post-rebalance batch stay O(#buckets):
+    data-dependent slice lengths pad to buckets, and the post-rebalance
+    re-bind re-traces at most the bucket set again."""
+    rng = np.random.default_rng(13)
+    nq, n = 600, 6000
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, 6, size=nq).astype(np.int64)
+    stats = VecStats.from_log(VecLog(keys=keys, n_train=n // 2, key_topic=topic))
+    backend = _backend(2)
+    bucket = BucketSpec(min_size=8)
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", 256, f_s=0.2, f_t=0.6),
+        value_dim=2, shards=2, engine="device", bucket=bucket,
+        rebalance=RebalanceSpec(every=10_000, decay=0.9, min_count=0.0),
+    )
+    max_bucket = bucket.padded_len(max(RAGGED))
+    n_buckets = len({bucket.padded_len(b) for b in range(1, max_bucket + 1)})
+    with Cluster.from_spec(spec, stats, [backend], value_fn=backend) as cluster:
+        for sz in RAGGED * 2:
+            cluster.serve(rng.integers(0, nq, size=sz))
+        per_bind = 2 * len(cluster.brokers) * n_buckets
+        assert _fused_traces(cluster.trace_counts) <= per_bind
+        # live rebalance: fresh jits, but still bucket-bounded
+        cluster.rebalance(force=True)
+        for sz in RAGGED:
+            cluster.serve(rng.integers(0, nq, size=sz))
+        assert _fused_traces(cluster.trace_counts) <= 2 * per_bind
+
+
+# -- rebalance cooldown / hysteresis -----------------------------------------
+
+
+def _reb_broker(spec):
+    cfg = DeviceCacheConfig(
+        total_entries=100, ways=4, value_dim=2,
+        topic_entries={0: 50, 1: 50}, dynamic_entries=0,
+    )
+    broker = Broker(
+        STDDeviceCache(cfg), [_backend(2)],
+        topic_of=lambda q: np.asarray(q) % 2,
+        rebalance=spec, engine="host",
+    )
+    return broker
+
+
+def test_min_interval_cooldown_blocks_rapid_migrations():
+    broker = _reb_broker(RebalanceSpec(every=1, decay=1.0, min_count=0.0,
+                                       min_interval=8))
+    rng = np.random.default_rng(0)
+    # every=1: a scheduled check runs after every batch; without the
+    # cooldown the oscillating traffic would migrate almost every check
+    for i in range(16):
+        hot = 0 if (i // 2) % 2 == 0 else 1  # popularity flips every 2 batches
+        q = rng.integers(0, 400, size=32) * 2 + hot
+        broker.serve(q)
+    assert broker.stats.batches == 16
+    # at most ceil(16 / 8) = 2 migrations can clear an 8-batch cooldown
+    assert 1 <= broker.stats.rebalances <= 2, broker.stats.rebalances
+    # force bypasses the cooldown
+    broker.tracker.counts[:-1] = [100.0, 0.0]
+    assert broker.rebalance(force=True) is True
+    broker.close()
+
+
+def test_hysteresis_band_gates_oscillation_and_rearms():
+    broker = _reb_broker(RebalanceSpec(every=10_000, decay=1.0, min_count=0.0,
+                                       threshold=0.5, hysteresis=0.4))
+
+    def set_counts(c0, c1):
+        broker.tracker.counts[:-1] = [float(c0), float(c1)]
+        broker.tracker.counts[-1] = 0.0
+
+    # divergence 1.0 >= threshold: migrate (alloc becomes 100/0)
+    set_counts(100, 0)
+    assert broker.rebalance() is True
+    assert broker.cache.cfg.topic_entries == {0: 100, 1: 0}
+    # swing back: divergence 0.6 >= threshold but < threshold+hysteresis
+    set_counts(70, 30)
+    assert broker.rebalance() is False  # the band absorbs the oscillation
+    # signal settles at/below the threshold: re-arms (and no migration)
+    set_counts(95, 5)  # divergence 0.1 <= 0.5
+    assert broker.rebalance() is False
+    # the same 0.6 swing now migrates: the band was re-armed
+    set_counts(70, 30)
+    assert broker.rebalance() is True
+    assert broker.stats.rebalances == 2
+    assert broker.cache.cfg.topic_entries == {0: 70, 1: 30}
+    # settling to *exactly* the live allocation (the no-op early return)
+    # must also re-arm: divergence 0 even though no migration can run
+    set_counts(40, 60)  # div 0.6 < 0.5 + 0.4: band absorbs it again
+    assert broker.rebalance() is False
+    set_counts(70, 30)  # identical allocation: no-op, but re-arms
+    assert broker.rebalance() is False
+    set_counts(40, 60)  # the same swing now clears the plain threshold
+    assert broker.rebalance() is True
+    assert broker.stats.rebalances == 3
+    broker.close()
+
+
+# -- checkpoint completeness under the double-buffered fill ------------------
+
+
+def test_checkpoint_flushes_pending_fill():
+    rng, make = _sim_setup(seed=17)
+    dev = make("device", BucketSpec(min_size=8))
+    ref = make("host", BucketSpec(mode="none"))
+    q = rng.integers(0, 500, size=48)
+    dev.serve(q)  # leaves a pending (double-buffered) value fill
+    ref.serve(q)
+    assert dev._pending_fill is not None
+    with tempfile.TemporaryDirectory() as d:
+        dev.save(d, 1)
+        assert dev._pending_fill is None  # save() flushed
+        # the checkpointed state carries the filled values: bit-equal to
+        # the engine that fills inline
+        assert np.array_equal(
+            np.asarray(dev.state["value"]), np.asarray(ref.state["value"])
+        )
+        dev.restore(d, 1)
+        v1, h1 = dev.serve(q)
+        v0, h0 = ref.serve(q)
+        assert np.array_equal(h1, h0)
+        assert np.array_equal(v1, v0)
+    dev.close()
+    ref.close()

@@ -27,6 +27,7 @@ from repro.serving import (
     RebalanceSpec,
     ServingSpec,
     splitmix64,
+    unpack_state,
 )
 
 
@@ -195,7 +196,8 @@ def test_hash_sharded_lru_capacity_fully_reachable():
         for b in cluster.brokers:
             k = b.cache.k  # dynamic partition index
             lo, hi = b.cache.part_offset[k], b.cache.part_offset[k + 1]
-            occ = (np.asarray(b.state["key_hi"][lo:hi]) != 0).any(axis=1)
+            key_hi, _, _ = unpack_state({"ks": np.asarray(b.state["ks"])})
+            occ = (key_hi[lo:hi] != 0).any(axis=1)
             assert occ.all(), f"unreachable dynamic sets: {np.flatnonzero(~occ)}"
 
 

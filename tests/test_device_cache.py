@@ -21,6 +21,7 @@ from repro.serving import (
     STDDeviceCache,
     pack_hashes,
     splitmix64,
+    unpack_state,
 )
 
 
@@ -92,8 +93,7 @@ def test_batch_conflicts_match_sequential():
         ref.request(int(k))
     resident = set(ref.state())
     got = set()
-    key_hi = np.asarray(state["key_hi"])
-    key_lo = np.asarray(state["key_lo"])
+    key_hi, key_lo, _ = unpack_state({"ks": np.asarray(state["ks"])})
     h_all = splitmix64(np.arange(12))
     for k in range(12):
         hi_k, lo_k = int(h_all[k] >> np.uint64(32)), int(h_all[k] & np.uint64(0xFFFFFFFF))
@@ -174,12 +174,12 @@ def test_broker_end_to_end_and_restart():
     with tempfile.TemporaryDirectory() as d:
         broker.save(d, 3)
         hr = broker.stats.hit_rate
-        snapshot = np.asarray(broker.state["key_hi"]).copy()
+        snapshot = np.asarray(broker.state["ks"]).copy()
         broker.state = dict(cache.init_state)  # simulate crash
         broker.stats.hits = 0
         step = broker.restore(d)
         assert step == 3
-        assert (np.asarray(broker.state["key_hi"]) == snapshot).all()
+        assert (np.asarray(broker.state["ks"]) == snapshot).all()
         assert broker.stats.hit_rate == hr
 
 

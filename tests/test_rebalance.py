@@ -42,9 +42,10 @@ from repro.serving import (
     ServingSpec,
     pack_hashes,
     splitmix64,
+    unpack_state,
 )
 
-STATE_KEYS = ("key_hi", "key_lo", "stamp", "value", "clock")
+STATE_KEYS = ("ks", "value", "clock")
 ENGINES = ("vec", "host", "oracle")
 
 
@@ -85,8 +86,9 @@ def _filled_cache(seed, ways=4, t0=32, t1=16, dyn=32, static=None):
 
 def _resident(state) -> np.ndarray:
     """Sorted packed 64-bit hashes of every resident (non-static) entry."""
-    kh = np.asarray(state["key_hi"]).astype(np.uint64)
-    kl = np.asarray(state["key_lo"]).astype(np.uint64)
+    key_hi, key_lo, _ = unpack_state({"ks": np.asarray(state["ks"])})
+    kh = key_hi.astype(np.uint64)
+    kl = key_lo.astype(np.uint64)
     live = kh != 0
     return np.sort((kh[live] << np.uint64(32)) | kl[live])
 
@@ -100,8 +102,7 @@ def _assert_states_equal(ref, got, label):
 def _migration_plan(cache, state, new_cache):
     """(h64, target set) of every live entry, replicating repartition's
     routing -- the test's independent model of where migrants land."""
-    key_hi = np.asarray(state["key_hi"])
-    key_lo = np.asarray(state["key_lo"])
+    key_hi, key_lo, _ = unpack_state({"ks": np.asarray(state["ks"])})
     live = key_hi != 0
     sets_l, ways_l = np.nonzero(live)
     h64 = (key_hi[sets_l, ways_l].astype(np.uint64) << np.uint64(32)) | key_lo[

@@ -12,8 +12,43 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL,
+        ).decode().strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _run_meta(args) -> dict:
+    """Provenance of this benchmark run, recorded as the ``meta/run`` row
+    so BENCH_serving.json numbers are attributable to an environment."""
+    import jax
+    import numpy as np
+
+    return {
+        "us_per_call": 0.0,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "python": ".".join(map(str, sys.version_info[:3])),
+        "git_rev": _git_rev(),
+        "seed": 7,
+        "quick": int(args.quick),
+        "lda": int(args.lda),
+        "scale": 0.2 if args.quick else args.scale,
+        "only": args.only or "all",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 
 def _row_to_json(row: str):
@@ -37,7 +72,8 @@ def main() -> None:
     ap.add_argument("--lda", action="store_true", help="LDA topics (not oracle)")
     ap.add_argument(
         "--only",
-        help="comma-separated subset: table2,table3,table45,table67,fig6,fig7,drift,perf",
+        help="comma-separated subset: table2,table3,table45,table67,"
+        "fig6,fig7,drift,load,perf",
     )
     ap.add_argument(
         "--scale", type=float, default=0.6,
@@ -53,6 +89,7 @@ def main() -> None:
         fig6_miss_distance,
         fig7_fs_sweep,
         fig_drift,
+        fig_load,
         perf_cache,
         perf_kernels,
         table2_hit_rates,
@@ -78,6 +115,8 @@ def main() -> None:
         # popularity-drift sweep: frozen vs rebalanced STD (own synthetic
         # stream, independent of the calibrated log)
         ("drift", lambda: fig_drift.run(quick=args.quick)),
+        # open-loop load harness: tail latency under arrival processes
+        ("load", lambda: fig_load.run(quick=args.quick)),
         ("perf", lambda: perf_cache.run(quick=args.quick) + perf_kernels.run()),
     ]
     print("name,us_per_call,derived")
@@ -96,9 +135,24 @@ def main() -> None:
             raise
         print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},elapsed={time.time()-t0:.1f}s", flush=True)
     if args.json_out and results:
+        results["meta/run"] = _run_meta(args)
+        # merge into an existing file so a partial (--only/--quick) run
+        # refreshes its own rows without dropping the committed table
+        merged = {}
+        if os.path.exists(args.json_out):
+            try:
+                with open(args.json_out) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+        merged.update(results)
         with open(args.json_out, "w") as f:
-            json.dump(results, f, indent=1, sort_keys=True)
-        print(f"# wrote {args.json_out} ({len(results)} rows)", file=sys.stderr)
+            json.dump(merged, f, indent=1, sort_keys=True)
+        print(
+            f"# wrote {args.json_out} ({len(results)} rows updated, "
+            f"{len(merged)} total)",
+            file=sys.stderr,
+        )
 
 
 if __name__ == "__main__":

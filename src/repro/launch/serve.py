@@ -9,10 +9,12 @@ runnable code, scaled out with ``--shards``/``--routing``.
   PYTHONPATH=src python -m repro.launch.serve --requests 50000 --entries 4096
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --routing topic
   PYTHONPATH=src python -m repro.launch.serve --drift-phases 4 --rebalance 8
+  PYTHONPATH=src python -m repro.launch.serve --open-loop --rate 100000 --burst 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -24,6 +26,7 @@ from ..configs.registry import get_arch
 from ..core import CacheSpec
 from ..core.spec import STRATEGIES
 from ..core.fast import VecLog, VecStats
+from ..loadgen import ArrivalSpec, SLOSpec, run_open_loop, stamp_arrivals
 from ..models import transformer as tf
 from ..querylog import DriftConfig, SynthConfig, generate, generate_drifting
 from ..serving import BucketSpec, Cluster, HedgeSpec, RebalanceSpec, ServingSpec
@@ -72,6 +75,35 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--rebalance-threshold", type=float, default=0.0,
         help="min L1 share divergence before a scheduled check migrates",
+    )
+    ap.add_argument(
+        "--open-loop", action="store_true",
+        help="serve the test stream open-loop: seeded arrival process, "
+        "deadline-driven batch coalescing via the spec's compiled "
+        "BatchPolicySpec, per-request latency = queueing + measured "
+        "service, SLO verdict (see docs/load_harness.md)",
+    )
+    ap.add_argument(
+        "--rate", type=float, default=0.0,
+        help="open-loop mean arrival rate in req/s (0 = 0.7x the batch "
+        "policy's provisioned capacity)",
+    )
+    ap.add_argument(
+        "--burst", type=float, default=1.0,
+        help="open-loop burstiness: 1 = Poisson arrivals, >1 = on-off "
+        "MMPP with this ON-state rate multiplier",
+    )
+    ap.add_argument(
+        "--deadline-ms", type=float, default=0.0,
+        help="override the batch policy's coalescing deadline (ms)",
+    )
+    ap.add_argument(
+        "--slo-p99-ms", type=float, default=50.0,
+        help="open-loop p99 latency SLO target (ms)",
+    )
+    ap.add_argument(
+        "--arrival-seed", type=int, default=0,
+        help="seed of the open-loop arrival process",
     )
     ap.add_argument(
         "--drift-phases", type=int, default=0,
@@ -168,6 +200,46 @@ def main(argv=None) -> int:
     with Cluster.from_spec(
         spec, stats, [backend], topic_of=lambda q: key_topic[q], value_fn=backend
     ) as cluster:
+        if args.open_loop:
+            policy = spec.compiled_batch_policy()
+            if args.deadline_ms > 0:
+                policy = dataclasses.replace(
+                    policy, deadline_us=args.deadline_ms * 1e3
+                )
+            rate = args.rate if args.rate > 0 else 0.7 * policy.capacity_rps()
+            if args.burst > 1.0:
+                arrivals = ArrivalSpec(
+                    process="onoff", rate=rate, burst=args.burst,
+                    seed=args.arrival_seed,
+                )
+            else:
+                arrivals = ArrivalSpec(
+                    process="poisson", rate=rate, seed=args.arrival_seed
+                )
+            print(
+                f"open-loop: {arrivals.process} arrivals at {rate:.0f} req/s "
+                f"(provisioned capacity {policy.capacity_rps():.0f} req/s), "
+                f"deadline {policy.deadline_us/1e3:.2f}ms, "
+                f"max_batch {policy.max_batch}, queue {policy.max_queue} "
+                f"({policy.overflow})"
+            )
+            workload = stamp_arrivals(test, arrivals)
+            rep = run_open_loop(workload, cluster, policy).report()
+            print(
+                f"served {rep.served}/{rep.n} "
+                f"(shed {rep.shed}, deferred {rep.deferred}) "
+                f"throughput={rep.achieved_rps:.0f} req/s "
+                f"(measured service {rep.service_rps:.0f} req/s) "
+                f"hit_rate={rep.hit_rate:.4f} pad_overhead={rep.pad_overhead:.2%}"
+            )
+            print(
+                f"latency ms: p50={rep.p50_ms:.3f} p90={rep.p90_ms:.3f} "
+                f"p99={rep.p99_ms:.3f} p99.9={rep.p999_ms:.3f} "
+                f"(queueing p99={rep.queue_p99_ms:.3f})"
+            )
+            verdict = SLOSpec(p99_ms=args.slo_p99_ms).evaluate(rep)
+            print(verdict.describe())
+            return 0 if verdict.ok else 1
         # time serving only: construction above preloads the static layer
         # through the model backend and warms per-shard jits, which would
         # otherwise skew the shards=1 vs shards=N comparison

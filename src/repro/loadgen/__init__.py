@@ -1,0 +1,43 @@
+"""Open-loop load generation: arrival processes, virtual-clock harness,
+tail-latency SLOs.
+
+The loadgen subsystem turns the repo's synthetic query streams into
+open-loop workloads (``arrivals``), drives them through a real
+``Broker``/``Cluster`` with deadline-driven, bucket-aware batch
+coalescing and bounded-queue backpressure (``harness``), and judges the
+resulting latency distribution against declarative SLO targets
+(``slo``).  ``inject`` provides deterministic latency injection for
+exercising the hedged-dispatch path.  See docs/load_harness.md.
+"""
+from .arrivals import ArrivalSpec, Workload, merge_workloads, stamp_arrivals
+from .harness import (
+    LoadPlan,
+    LoadReport,
+    LoadResult,
+    PlannedBatch,
+    plan_batches,
+    run_open_loop,
+    snap_down,
+    warmup_server,
+)
+from .inject import LatencyInjectSpec, inject_latency
+from .slo import SLOResult, SLOSpec
+
+__all__ = [
+    "ArrivalSpec",
+    "LatencyInjectSpec",
+    "LoadPlan",
+    "LoadReport",
+    "LoadResult",
+    "PlannedBatch",
+    "SLOResult",
+    "SLOSpec",
+    "Workload",
+    "inject_latency",
+    "merge_workloads",
+    "plan_batches",
+    "run_open_loop",
+    "snap_down",
+    "stamp_arrivals",
+    "warmup_server",
+]

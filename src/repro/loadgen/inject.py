@@ -1,0 +1,96 @@
+"""Deterministic latency injection for backend callables.
+
+Wraps a broker backend so that selected calls sleep for a seeded,
+reproducible delay before delegating.  This is how the hedging tests
+manufacture a straggler: the primary backend is wrapped with a large
+injected delay while the hedge replica is left fast, and the test then
+asserts that ``Cluster.serve`` under a ``HedgeSpec`` beats the injected
+delay while returning request-for-request identical results.
+
+The wrapper is thread-safe (hedged dispatch calls backends from a
+thread pool) and purely additive: values returned by the inner backend
+are passed through untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LatencyInjectSpec:
+    """Which calls to delay, and by how much (JSON round-trippable).
+
+    Every ``every``-th call (counting from the first) sleeps
+    ``delay_s`` plus a seeded uniform jitter in ``[0, jitter_s)``.
+    ``every=1`` delays every call; ``every=3`` delays calls 1, 4, 7, ...
+    """
+
+    delay_s: float = 0.2
+    every: int = 1
+    jitter_s: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "delay_s", float(self.delay_s))
+        object.__setattr__(self, "every", int(self.every))
+        object.__setattr__(self, "jitter_s", float(self.jitter_s))
+        object.__setattr__(self, "seed", int(self.seed))
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+        if self.every < 1:
+            raise ValueError(f"every must be >= 1, got {self.every}")
+        if self.jitter_s < 0:
+            raise ValueError(f"jitter_s must be >= 0, got {self.jitter_s}")
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "LatencyInjectSpec":
+        return cls(**json.loads(s))
+
+
+class _InjectedBackend:
+    """Callable wrapper: sleeps per the spec, then delegates."""
+
+    def __init__(self, backend: Callable, spec: LatencyInjectSpec):
+        self._backend = backend
+        self._spec = spec
+        self._rng = np.random.default_rng(spec.seed)
+        self._lock = threading.Lock()
+        self.calls = 0
+        self.delayed = 0
+
+    def __call__(self, keys):
+        spec = self._spec
+        with self._lock:
+            c = self.calls
+            self.calls += 1
+            delay = 0.0
+            if c % spec.every == 0:
+                self.delayed += 1
+                delay = spec.delay_s
+                if spec.jitter_s > 0:
+                    delay += float(self._rng.random()) * spec.jitter_s
+        if delay > 0:
+            time.sleep(delay)
+        return self._backend(keys)
+
+
+def inject_latency(backend: Callable, spec: LatencyInjectSpec) -> _InjectedBackend:
+    """Wrap ``backend`` with deterministic injected latency.
+
+    The returned wrapper exposes ``.calls`` and ``.delayed`` counters so
+    tests can assert the straggler path was actually exercised.
+    """
+    return _InjectedBackend(backend, spec)
+
+
+__all__ = ["LatencyInjectSpec", "inject_latency"]

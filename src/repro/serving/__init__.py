@@ -20,10 +20,11 @@ from .device_cache import (
     unpack_state,
 )
 from .rebalance import PopularityTracker, RebalanceSpec
-from .spec import BucketSpec, HedgeSpec, ServingSpec
+from .spec import BatchPolicySpec, BucketSpec, HedgeSpec, ServingSpec
 
 __all__ = [
     "Backend",
+    "BatchPolicySpec",
     "Broker",
     "BrokerStats",
     "BucketSpec",

@@ -128,6 +128,93 @@ class BucketSpec:
         return 1 << (max(int(b), self.min_size) - 1).bit_length()
 
 
+_OVERFLOWS = ("shed", "defer")
+
+
+@dataclass(frozen=True)
+class BatchPolicySpec:
+    """Deadline-driven batch coalescing -- the compiled form of the
+    ``ServingSpec.microbatch`` / ``coalesce`` knobs.
+
+    The open-loop load harness (``repro.loadgen.harness``) forms batches
+    from an arrival stream under this policy; the broker's bare knobs
+    compile to its defaults via
+    :meth:`ServingSpec.compiled_batch_policy`, so the batching a
+    deployment serves under is one declarative object, not scattered
+    integers.
+
+    ``max_batch``    -- close a batch as soon as this many requests are
+                        pending and the (model) server is free.
+    ``deadline_us``  -- the oldest pending request never waits longer
+                        than this (virtual time) for its batch to close:
+                        a deadline flush takes everything pending.
+    ``max_queue``    -- bounded pending queue (per tenant).  An arrival
+                        past the bound is dropped (``overflow="shed"``)
+                        or admitted-but-counted (``overflow="defer"``,
+                        pure backpressure accounting).
+    ``snap_to_bucket`` -- abundance-closed batches snap *down* to the
+                        serving tier's :class:`BucketSpec` boundary, so
+                        a formed batch is exactly a compiled shape and
+                        the pad overhead of the static-shape contract
+                        goes to zero on the saturated path.
+    ``coalesce``     -- mirror of the broker's in-batch duplicate-miss
+                        coalescing knob (the broker enforces it; the
+                        policy records it so one object describes the
+                        whole batching behaviour).
+    ``service_base_us`` / ``service_per_request_us`` -- the deterministic
+                        *provisioned* service model the virtual clock
+                        advances by: serving a (padded) batch of ``b``
+                        occupies the model server for ``base + per*b``
+                        microseconds.  Queueing decisions (batch
+                        formation, shed set) depend only on this model
+                        and the seeded arrivals -- never on measured
+                        wall time -- which is what makes the harness
+                        deterministic.  Measured wall-clock service time
+                        enters reported latency, not decisions.
+    """
+
+    max_batch: int = 256
+    deadline_us: float = 2_000.0
+    max_queue: int = 8192
+    overflow: str = "shed"  # "shed" | "defer"
+    snap_to_bucket: bool = True
+    coalesce: bool = True
+    service_base_us: float = 300.0
+    service_per_request_us: float = 2.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "max_batch", int(self.max_batch))
+        object.__setattr__(self, "max_queue", int(self.max_queue))
+        for f in ("deadline_us", "service_base_us", "service_per_request_us"):
+            object.__setattr__(self, f, float(getattr(self, f)))
+        for f in ("snap_to_bucket", "coalesce"):
+            object.__setattr__(self, f, bool(getattr(self, f)))
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.deadline_us <= 0:
+            raise ValueError(f"deadline_us must be > 0, got {self.deadline_us}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.overflow not in _OVERFLOWS:
+            raise ValueError(
+                f"overflow must be one of {_OVERFLOWS}, got {self.overflow!r}"
+            )
+        if self.service_base_us < 0 or self.service_per_request_us < 0:
+            raise ValueError("service model costs must be >= 0")
+
+    def service_cost_s(self, batch: int) -> float:
+        """Model service time (seconds) for a padded batch of ``batch``."""
+        return (self.service_base_us + self.service_per_request_us * batch) * 1e-6
+
+    def capacity_rps(self, batch: Optional[int] = None) -> float:
+        """Provisioned throughput (requests/s) at full batches of
+        ``batch`` (default ``max_batch``) -- the natural unit for offered
+        arrival rates in a load sweep."""
+        b = self.max_batch if batch is None else int(batch)
+        cost = self.service_cost_s(b)
+        return b / cost if cost > 0 else float("inf")
+
+
 @dataclass(frozen=True)
 class HedgeSpec:
     """Declarative straggler mitigation (serializable analogue of
@@ -174,6 +261,11 @@ class ServingSpec:
     #: nothing).  Set explicitly -- including ``BucketSpec(mode="none")``
     #: -- to override the auto choice on every shard.
     bucket: Optional[BucketSpec] = None
+    #: deadline-driven batch coalescing for open-loop serving.  None =
+    #: compile the ``microbatch``/``coalesce`` knobs into a default
+    #: policy (:meth:`compiled_batch_policy`); set explicitly to control
+    #: deadlines, queue bounds and the provisioned service model.
+    batch_policy: Optional[BatchPolicySpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -211,13 +303,37 @@ class ServingSpec:
         hedge = d.pop("hedge", None)
         rebalance = d.pop("rebalance", None)
         bucket = d.pop("bucket", None)
+        policy = d.pop("batch_policy", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
             rebalance=RebalanceSpec(**rebalance) if rebalance is not None else None,
             bucket=BucketSpec(**bucket) if bucket is not None else None,
+            batch_policy=BatchPolicySpec(**policy) if policy is not None else None,
             **d,
         )
+
+    # -- batching policy ---------------------------------------------------
+
+    def compiled_batch_policy(self) -> BatchPolicySpec:
+        """The batch coalescing policy this deployment serves under.
+
+        An explicit ``batch_policy`` wins wholesale; otherwise the bare
+        ``microbatch``/``coalesce`` knobs compile to a
+        :class:`BatchPolicySpec` with ``max_batch=microbatch`` -- the
+        knobs are defaults for the policy, not a separate mechanism.
+        """
+        if self.batch_policy is not None:
+            return self.batch_policy
+        return BatchPolicySpec(max_batch=self.microbatch, coalesce=self.coalesce)
+
+    def effective_bucket(self) -> BucketSpec:
+        """The bucket the batching policy snaps to: the explicit
+        ``bucket`` when set, else the device-engine auto default (pow2).
+        The planner needs a concrete bucket even for host-engine
+        deployments (which serve unpadded): snapping still shapes formed
+        batches, it just costs nothing there."""
+        return self.bucket if self.bucket is not None else BucketSpec()
 
     # -- routing -----------------------------------------------------------
 
@@ -315,6 +431,7 @@ class ServingSpec:
 
 __all__ = [
     "SERVING_SPEC_VERSION",
+    "BatchPolicySpec",
     "BucketSpec",
     "HedgeSpec",
     "RebalanceSpec",

@@ -1,0 +1,245 @@
+"""Fault-episode sweep (beyond-paper): availability under shard failure.
+
+Drives the PR-6 open-loop harness through seeded fault schedules
+(``repro.loadgen.inject``) against resilient spec-compiled clusters
+(``ServingSpec.resilience``, see docs/resilience.md), recording the four
+outage metrics the resilience layer exists to bound:
+
+* **availability**   -- fraction of served requests whose values match a
+                        pure backend oracle (degraded miss-through keeps
+                        this at 1.0: the backend is the source of truth);
+* **degraded_frac**  -- fraction of requests served by miss-through
+                        while their shard was down;
+* **outage_p99_ms**  -- p99 latency of the requests dispatched inside
+                        the down window;
+* **recovery_s**     -- virtual seconds from the health machine marking
+                        the shard ``down`` to it returning ``healthy``
+                        after checkpoint-verified warm restart.
+
+Scenarios (rows in BENCH_serving.json, quick-mode bounds CI-asserted):
+
+* ``fault/crash_recover/shards=4`` -- a seeded permanent single-shard
+  crash mid-stream; the shard warm-restarts from its last verified
+  checkpoint and rejoins without a cluster cold start;
+* ``fault/flaky/shards=4``         -- a transient error schedule on one
+  shard: bounded retries with seeded backoff absorb every fault
+  (no degraded traffic, availability 1.0);
+* ``fault/corrupt_ckpt/shards=2``  -- the crash also tears the newest
+  checkpoint: manifest checksums detect it and recovery falls back to
+  the previous verified step.
+
+Fault schedules, arrivals, and backoff jitter are all seeded: the same
+invocation replays the same episode bit-identically (the queueing plan
+and every health transition; wall clock enters only as measured service
+time).
+
+  PYTHONPATH=src python -m benchmarks.fig_fault --quick
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import CacheSpec
+from repro.loadgen import ArrivalSpec, FaultInjectSpec, run_open_loop, stamp_arrivals
+from repro.serving import Cluster, ResilienceSpec, ServingSpec
+from repro.train import checkpoint as ckpt_lib
+
+from .common import csv_row
+from .fig_load import BUCKET, POLICY, VALUE_DIM, _backend, _stream
+
+#: quick-mode bounds the CI smoke asserts (also recorded in the rows)
+MIN_AVAILABILITY = 1.0
+#: recovery must complete within a few circuit-breaker probe intervals
+MAX_RECOVERY_PROBES = 4.0
+
+
+def _cluster(log, stats, entries: int, shards: int, res: ResilienceSpec) -> Cluster:
+    spec = ServingSpec(
+        cache=CacheSpec.from_strategy("STDv_LRU", entries, f_s=0.1, f_t=0.7),
+        value_dim=VALUE_DIM,
+        shards=shards,
+        bucket=BUCKET,
+        batch_policy=POLICY,
+        resilience=res,
+    )
+    return Cluster.from_spec(spec, stats, [_backend], value_fn=_backend, log=log)
+
+
+def _availability(res, workload) -> float:
+    """Served requests answered with backend-identical values."""
+    served = ~np.isnan(res.queue_s)
+    if not served.any():
+        return 0.0
+    oracle = _backend(workload.keys[served])
+    return float(np.all(res.values[served] == oracle, axis=1).mean())
+
+
+def _outage_p99_ms(res, workload, span: Tuple[float, Optional[float]]) -> float:
+    """p99 end-to-end latency of requests dispatched inside the outage."""
+    down_at, up_at = span
+    t_dispatch = workload.t + res.queue_s  # NaN for shed
+    sel = t_dispatch >= down_at
+    if up_at is not None:
+        sel &= t_dispatch <= up_at
+    sel &= ~np.isnan(res.latency_s)
+    if not sel.any():
+        return float("nan")
+    return float(np.percentile(res.latency_s[sel] * 1e3, 99))
+
+
+def _episode_metrics(res, workload, cluster, shard: int) -> dict:
+    stats = cluster.stats
+    health = cluster.shard_health[shard]
+    spans = health.down_spans()
+    recovery = float("nan")
+    outage_p99 = float("nan")
+    if spans:
+        down_at, up_at = spans[0]
+        if up_at is not None:
+            recovery = up_at - down_at
+        outage_p99 = _outage_p99_ms(res, workload, spans[0])
+    return {
+        "availability": _availability(res, workload),
+        "degraded_frac": stats.degraded / max(stats.requests, 1),
+        "outage_p99_ms": outage_p99,
+        "recovery_s": recovery,
+        "retried": stats.retried,
+        "failed_over": stats.failed_over,
+        "degraded": stats.degraded,
+        "probes": health.counters.probes,
+        "recoveries": health.counters.recoveries,
+        "final_state": health.state,
+        "n_down_spans": len(spans),
+    }
+
+
+def _fmt(m: dict, extra: str = "") -> str:
+    parts = [
+        f"availability={m['availability']:.4f}",
+        f"degraded_frac={m['degraded_frac']:.4f}",
+        f"outage_p99_ms={m['outage_p99_ms']:.3f}",
+        f"recovery_s={m['recovery_s']:.6f}",
+        f"retried={m['retried']}",
+        f"failed_over={m['failed_over']}",
+        f"degraded={m['degraded']}",
+        f"probes={m['probes']}",
+        f"recoveries={m['recoveries']}",
+        f"final_state={m['final_state']}",
+        f"min_availability={MIN_AVAILABILITY:.4f}",
+    ]
+    if extra:
+        parts.append(extra)
+    return ";".join(parts)
+
+
+def run(quick: bool = False) -> List[str]:
+    n_req = 20_000 if quick else 100_000
+    entries = 2048 if quick else 4096
+    rows: List[str] = []
+
+    log, stats, test = _stream(n_req, n_phases=1, seed=0)
+    rate = 0.7 * POLICY.capacity_rps()
+    workload = stamp_arrivals(test, ArrivalSpec(process="poisson", rate=rate, seed=1))
+    span_s = float(workload.t[-1] - workload.t[0])
+    probe_s = max(span_s / 25.0, 1e-4)
+    crash_at = 0.3 * span_s
+    res_spec = ResilienceSpec(
+        max_retries=2,
+        backoff_base_us=50.0,
+        suspect_after=1,
+        down_after=3,
+        probe_interval_s=probe_s,
+        recover_after=1,
+        seed=7,
+    )
+    max_recovery_s = MAX_RECOVERY_PROBES * probe_s
+
+    # -- permanent single-shard crash + checkpoint recovery --------------
+    with tempfile.TemporaryDirectory() as ck:
+        cluster = _cluster(log, stats, entries, shards=4, res=res_spec)
+        with cluster:
+            cluster.save(ck, step=0)
+            cluster.inject_shard_faults(
+                2, FaultInjectSpec(crash_at_s=crash_at, seed=11)
+            )
+            result = run_open_loop(workload, cluster, POLICY, bucket=BUCKET, collect=True)
+            rep = result.report()
+            m = _episode_metrics(result, workload, cluster, shard=2)
+        rows.append(
+            csv_row(
+                "fault/crash_recover/shards=4",
+                rep.mean_ms * 1e3,
+                _fmt(
+                    m,
+                    extra=(
+                        f"crash_at_s={crash_at:.6f};probe_interval_s={probe_s:.6f}"
+                        f";max_recovery_s={max_recovery_s:.6f}"
+                        f";p99_ms={rep.p99_ms:.3f};hit_rate={rep.hit_rate:.4f}"
+                    ),
+                ),
+            )
+        )
+
+    # -- flaky shard: transient errors absorbed by retries ---------------
+    cluster = _cluster(log, stats, entries, shards=4, res=res_spec)
+    with cluster:
+        cluster.inject_shard_faults(1, FaultInjectSpec(error_every=7, seed=13))
+        result = run_open_loop(workload, cluster, POLICY, bucket=BUCKET, collect=True)
+        rep = result.report()
+        m = _episode_metrics(result, workload, cluster, shard=1)
+    rows.append(
+        csv_row(
+            "fault/flaky/shards=4",
+            rep.mean_ms * 1e3,
+            _fmt(m, extra=f"error_every=7;p99_ms={rep.p99_ms:.3f}"),
+        )
+    )
+
+    # -- corrupt newest checkpoint: checksum-verified fallback -----------
+    with tempfile.TemporaryDirectory() as ck:
+        cluster = _cluster(log, stats, entries, shards=2, res=res_spec)
+        with cluster:
+            cluster.save(ck, step=0)
+            # a later checkpoint the crash will tear: recovery must fall
+            # back to step 0 instead of loading garbage
+            for lo in range(0, 2048, 256):
+                cluster.serve(test[lo : lo + 256])
+            cluster.save(ck, step=1)
+            cluster.inject_shard_faults(
+                0, FaultInjectSpec(crash_at_s=crash_at, corrupt_latest=True, seed=17)
+            )
+            result = run_open_loop(workload, cluster, POLICY, bucket=BUCKET, collect=True)
+            rep = result.report()
+            m = _episode_metrics(result, workload, cluster, shard=0)
+            sd = os.path.join(ck, "shard_000")
+            fallback_ok = int(
+                not ckpt_lib.verify_step(sd, 1)
+                and ckpt_lib.latest_verified_step(sd) == 0
+                and m["recoveries"] >= 1
+            )
+        rows.append(
+            csv_row(
+                "fault/corrupt_ckpt/shards=2",
+                rep.mean_ms * 1e3,
+                _fmt(m, extra=f"fallback_to_verified={fallback_ok}"),
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-scale sweep")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -73,7 +73,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         help="comma-separated subset: table2,table3,table45,table67,"
-        "fig6,fig7,drift,load,perf",
+        "fig6,fig7,drift,load,fault,perf",
     )
     ap.add_argument(
         "--scale", type=float, default=0.6,
@@ -89,6 +89,7 @@ def main() -> None:
         fig6_miss_distance,
         fig7_fs_sweep,
         fig_drift,
+        fig_fault,
         fig_load,
         perf_cache,
         perf_kernels,
@@ -117,6 +118,9 @@ def main() -> None:
         ("drift", lambda: fig_drift.run(quick=args.quick)),
         # open-loop load harness: tail latency under arrival processes
         ("load", lambda: fig_load.run(quick=args.quick)),
+        # fault episodes: availability/degraded/recovery under injected
+        # shard crashes, flaky dispatch, and checkpoint corruption
+        ("fault", lambda: fig_fault.run(quick=args.quick)),
         ("perf", lambda: perf_cache.run(quick=args.quick) + perf_kernels.run()),
     ]
     print("name,us_per_call,derived")

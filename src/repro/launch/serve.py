@@ -10,12 +10,15 @@ runnable code, scaled out with ``--shards``/``--routing``.
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --routing topic
   PYTHONPATH=src python -m repro.launch.serve --drift-phases 4 --rebalance 8
   PYTHONPATH=src python -m repro.launch.serve --open-loop --rate 100000 --burst 4
+  PYTHONPATH=src python -m repro.launch.serve --open-loop --shards 4 \
+      --fault-shard 2@0.1 --min-availability 1.0
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import sys
+import tempfile
 import time
 
 import jax
@@ -26,11 +29,48 @@ from ..configs.registry import get_arch
 from ..core import CacheSpec
 from ..core.spec import STRATEGIES
 from ..core.fast import VecLog, VecStats
-from ..loadgen import ArrivalSpec, SLOSpec, run_open_loop, stamp_arrivals
+from ..loadgen import (
+    ArrivalSpec,
+    FaultInjectSpec,
+    SLOSpec,
+    run_open_loop,
+    stamp_arrivals,
+)
+from ..serving import (
+    BucketSpec,
+    Cluster,
+    HedgeSpec,
+    RebalanceSpec,
+    ResilienceSpec,
+    ServingSpec,
+)
 from ..models import transformer as tf
 from ..querylog import DriftConfig, SynthConfig, generate, generate_drifting
-from ..serving import BucketSpec, Cluster, HedgeSpec, RebalanceSpec, ServingSpec
 from ..topics import run_pipeline
+
+
+def _parse_fault_shard(s: str):
+    """``N@T`` -> (shard N, FaultInjectSpec crashing at virtual time T)."""
+    try:
+        shard, t = s.split("@", 1)
+        return int(shard), FaultInjectSpec(crash_at_s=float(t))
+    except (ValueError, TypeError):
+        raise argparse.ArgumentTypeError(
+            f"--fault-shard wants N@T (shard index @ crash time in virtual "
+            f"seconds), got {s!r}"
+        )
+
+
+def _parse_fault_profile(s: str):
+    """``N:JSON`` -> (shard N, FaultInjectSpec.from_json(JSON))."""
+    try:
+        shard, spec = s.split(":", 1)
+        return int(shard), FaultInjectSpec.from_json(spec)
+    except (ValueError, TypeError, KeyError) as e:
+        raise argparse.ArgumentTypeError(
+            f"--fault-profile wants N:JSON (shard index : FaultInjectSpec "
+            f"JSON), got {s!r} ({e})"
+        )
 
 
 def main(argv=None) -> int:
@@ -106,12 +146,39 @@ def main(argv=None) -> int:
         help="seed of the open-loop arrival process",
     )
     ap.add_argument(
+        "--fault-shard", type=_parse_fault_shard, action="append", default=[],
+        metavar="N@T",
+        help="inject a permanent crash of shard N at virtual time T "
+        "seconds (repeatable; open-loop only; enables the resilience "
+        "layer so the crash degrades instead of failing)",
+    )
+    ap.add_argument(
+        "--fault-profile", type=_parse_fault_profile, action="append",
+        default=[], metavar="N:JSON",
+        help="attach a full FaultInjectSpec (JSON) to shard N, e.g. "
+        '2:{"error_every": 7} (repeatable; open-loop only)',
+    )
+    ap.add_argument(
+        "--min-availability", type=float, default=0.0,
+        help="exit nonzero when availability (fraction of served requests "
+        "answered with backend-identical values) drops below this bound",
+    )
+    ap.add_argument(
         "--drift-phases", type=int, default=0,
         help="serve a piecewise-stationary drift stream with this many "
         "popularity phases (oracle topics, no LDA) instead of the "
         "calibrated stationary log",
     )
     args = ap.parse_args(argv)
+
+    faults = list(args.fault_shard) + list(args.fault_profile)
+    if faults and not args.open_loop:
+        ap.error("--fault-shard/--fault-profile need --open-loop (fault "
+                 "schedules run on the open-loop virtual clock)")
+    for shard, _ in faults:
+        if not 0 <= shard < args.shards:
+            ap.error(f"--fault shard index {shard} out of range for "
+                     f"--shards {args.shards}")
 
     # build the declarative spec up front so configuration errors (e.g. an
     # SDC-section strategy without --f-ts, or a bad shard/routing combo)
@@ -143,6 +210,9 @@ def main(argv=None) -> int:
             if args.rebalance > 0
             else None
         ),
+        # fault injection implies the resilience layer: without it any
+        # injected fault would simply propagate and kill the run
+        resilience=ResilienceSpec(probe_interval_s=0.005) if faults else None,
     )
     print(f"serving spec: {spec.to_json()}")
 
@@ -224,7 +294,19 @@ def main(argv=None) -> int:
                 f"({policy.overflow})"
             )
             workload = stamp_arrivals(test, arrivals)
-            rep = run_open_loop(workload, cluster, policy).report()
+            ckpt_tmp = None
+            if faults:
+                # a pre-stream checkpoint is what a crashed shard
+                # warm-restarts from (checksum-verified; docs/resilience.md)
+                ckpt_tmp = tempfile.TemporaryDirectory(prefix="serve_ckpt_")
+                cluster.save(ckpt_tmp.name, step=0)
+                for shard, fspec in faults:
+                    cluster.inject_shard_faults(shard, fspec)
+                    print(f"fault injected on shard {shard}: {fspec.to_json()}")
+            res = run_open_loop(
+                workload, cluster, policy, collect=bool(faults)
+            )
+            rep = res.report()
             print(
                 f"served {rep.served}/{rep.n} "
                 f"(shed {rep.shed}, deferred {rep.deferred}) "
@@ -239,7 +321,46 @@ def main(argv=None) -> int:
             )
             verdict = SLOSpec(p99_ms=args.slo_p99_ms).evaluate(rep)
             print(verdict.describe())
-            return 0 if verdict.ok else 1
+            available = True
+            if faults:
+                served = ~np.isnan(res.queue_s)
+                oracle = backend(workload.keys[served])
+                availability = (
+                    float(np.all(res.values[served] == oracle, axis=1).mean())
+                    if served.any()
+                    else 0.0
+                )
+                s = cluster.stats
+                recoveries = sum(
+                    h.counters.recoveries for h in cluster.shard_health
+                )
+                spans = [
+                    (i, sp)
+                    for i, h in enumerate(cluster.shard_health)
+                    for sp in h.down_spans()
+                ]
+                recovery_s = max(
+                    (sp[1] - sp[0] for _, sp in spans if sp[1] is not None),
+                    default=float("nan"),
+                )
+                print(
+                    f"resilience: availability={availability:.4f} "
+                    f"degraded={s.degraded} "
+                    f"({s.degraded / max(s.requests, 1):.2%} of requests) "
+                    f"retried={s.retried} failed_over={s.failed_over} "
+                    f"recoveries={recoveries} recovery_s={recovery_s:.4f}"
+                )
+                for i, (down_at, up_at) in spans:
+                    up = f"{up_at:.4f}" if up_at is not None else "open"
+                    print(f"  shard {i} outage: down@{down_at:.4f}s -> {up}")
+                available = availability >= args.min_availability
+                if not available:
+                    print(
+                        f"AVAILABILITY FAIL: {availability:.4f} < "
+                        f"--min-availability {args.min_availability:.4f}"
+                    )
+                ckpt_tmp.cleanup()
+            return 0 if (verdict.ok and available) else 1
         # time serving only: construction above preloads the static layer
         # through the model backend and warms per-shard jits, which would
         # otherwise skew the shards=1 vs shards=N comparison

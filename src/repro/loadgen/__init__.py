@@ -6,8 +6,10 @@ open-loop workloads (``arrivals``), drives them through a real
 ``Broker``/``Cluster`` with deadline-driven, bucket-aware batch
 coalescing and bounded-queue backpressure (``harness``), and judges the
 resulting latency distribution against declarative SLO targets
-(``slo``).  ``inject`` provides deterministic latency injection for
-exercising the hedged-dispatch path.  See docs/load_harness.md.
+(``slo``).  ``inject`` provides deterministic latency *and fault*
+injection -- seeded schedules of errors, timeouts, permanent shard
+crashes, and checkpoint corruption -- for exercising the hedged-dispatch
+and resilience paths.  See docs/load_harness.md and docs/resilience.md.
 """
 from .arrivals import ArrivalSpec, Workload, merge_workloads, stamp_arrivals
 from .harness import (
@@ -20,11 +22,28 @@ from .harness import (
     snap_down,
     warmup_server,
 )
-from .inject import LatencyInjectSpec, inject_latency
+from .inject import (
+    FaultInjectSpec,
+    FaultInjector,
+    InjectedCrash,
+    InjectedError,
+    InjectedFault,
+    InjectedTimeout,
+    LatencyInjectSpec,
+    corrupt_checkpoint,
+    inject_faults,
+    inject_latency,
+)
 from .slo import SLOResult, SLOSpec
 
 __all__ = [
     "ArrivalSpec",
+    "FaultInjectSpec",
+    "FaultInjector",
+    "InjectedCrash",
+    "InjectedError",
+    "InjectedFault",
+    "InjectedTimeout",
     "LatencyInjectSpec",
     "LoadPlan",
     "LoadReport",
@@ -33,6 +52,8 @@ __all__ = [
     "SLOResult",
     "SLOSpec",
     "Workload",
+    "corrupt_checkpoint",
+    "inject_faults",
     "inject_latency",
     "merge_workloads",
     "plan_batches",

@@ -289,6 +289,11 @@ class LoadResult:
     service_s: np.ndarray  # (n,) measured wall service of the request's batch
     wall_serve_s: float  # total measured service wall time
     stats: List[BrokerStats]  # per-tenant server stats (post-run)
+    #: with ``collect=True``: per-request served values (zeros for shed
+    #: requests) and hit mask -- what availability checks compare to a
+    #: backend oracle (see benchmarks/fig_fault.py)
+    values: Optional[np.ndarray] = None
+    hit: Optional[np.ndarray] = None
 
     @property
     def latency_s(self) -> np.ndarray:
@@ -363,7 +368,8 @@ def _reset_stats(server: Server) -> None:
         for f in (
             "requests", "hits", "static_hits", "topic_hits", "backend_calls",
             "hedged_calls", "admitted", "coalesced", "padded", "batches",
-            "rebalances", "migrated",
+            "rebalances", "migrated", "degraded", "retried", "failed_over",
+            "timeouts",
         ):
             setattr(b.stats, f, getattr(fresh, f))
 
@@ -415,6 +421,7 @@ def run_open_loop(
     plan: Optional[LoadPlan] = None,
     warmup: bool = True,
     clock: Callable[[], float] = time.perf_counter,
+    collect: bool = False,
 ) -> LoadResult:
     """Plan batches in virtual time, then serve them for real.
 
@@ -425,6 +432,14 @@ def run_open_loop(
     all-pad batch per planned batch size first (state-inert by the pad
     invariant) and resets stats, so jit tracing never lands in a
     measured service time.
+
+    Servers exposing ``advance_time`` (a resilient ``Cluster``) have
+    their virtual clock driven to each batch's ``t_dispatch`` before it
+    serves, so fault schedules, health transitions and circuit-breaker
+    probes replay deterministically on the plan's timeline.  With
+    ``collect=True`` the served values and hit mask are gathered into
+    the result (arrival order; zeros/False for shed requests) for
+    availability checks against a backend oracle.
     """
     srv = _as_list(servers, workload.n_tenants, "servers")
     buckets = (
@@ -442,13 +457,25 @@ def run_open_loop(
     n = len(workload)
     service = np.full(n, np.nan)
     wall = 0.0
+    values: Optional[np.ndarray] = None
+    hit: Optional[np.ndarray] = None
     for batch in plan.batches:
         keys = workload.keys[batch.idx]
+        server = srv[batch.tenant]
+        advance = getattr(server, "advance_time", None)
+        if advance is not None:
+            advance(batch.t_dispatch)
         t0 = clock()
-        srv[batch.tenant].serve(keys)
+        v, h = server.serve(keys)
         dt = clock() - t0
         service[batch.idx] = dt
         wall += dt
+        if collect:
+            if values is None:
+                values = np.zeros((n, np.asarray(v).shape[1]), np.int32)
+                hit = np.zeros(n, bool)
+            values[batch.idx] = v
+            hit[batch.idx] = h
     stats = [s.stats for s in srv]
     return LoadResult(
         workload=workload,
@@ -457,6 +484,8 @@ def run_open_loop(
         service_s=service,
         wall_serve_s=wall,
         stats=stats,
+        values=values,
+        hit=hit,
     )
 
 

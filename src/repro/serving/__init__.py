@@ -20,6 +20,15 @@ from .device_cache import (
     unpack_state,
 )
 from .rebalance import PopularityTracker, RebalanceSpec
+from .resilience import (
+    DOWN,
+    HEALTHY,
+    RECOVERING,
+    SUSPECT,
+    ResilienceCounters,
+    ResilienceSpec,
+    ShardHealth,
+)
 from .spec import BatchPolicySpec, BucketSpec, HedgeSpec, ServingSpec
 
 __all__ = [
@@ -29,8 +38,10 @@ __all__ = [
     "BrokerStats",
     "BucketSpec",
     "Cluster",
+    "DOWN",
     "DYNAMIC",
     "DeviceCacheConfig",
+    "HEALTHY",
     "HedgePolicy",
     "HedgeSpec",
     "PAD_H64",
@@ -38,9 +49,14 @@ __all__ = [
     "PAD_KEY",
     "PAD_LO",
     "PopularityTracker",
+    "RECOVERING",
     "RebalanceSpec",
+    "ResilienceCounters",
+    "ResilienceSpec",
     "STDDeviceCache",
+    "SUSPECT",
     "ServingSpec",
+    "ShardHealth",
     "pack_hashes",
     "splitmix64",
     "unpack_state",

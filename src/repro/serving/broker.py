@@ -81,6 +81,15 @@ class BrokerStats:
     rebalances: int = 0
     #: resident entries carried into new layouts, summed over rebalances
     migrated: int = 0
+    #: requests served by degraded miss-through while their shard was
+    #: down (cluster resilience; counted in ``requests`` too)
+    degraded: int = 0
+    #: shard dispatch attempts retried after a failure
+    retried: int = 0
+    #: requests that exhausted retries and failed over to miss-through
+    failed_over: int = 0
+    #: shard serves that exceeded the resilience timeout
+    timeouts: int = 0
     #: the online popularity tracker's state: exponentially-decayed served
     #: request counts per tracked topic (sorted id order) + a trailing
     #: no-topic bucket; shares memory with ``Broker.tracker`` and is None
@@ -192,6 +201,7 @@ class Broker:
             self.stats.topic_counts = self.tracker.counts
         self._bind_cache(cache)
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
+        self._closed = False
 
     def _traced(self, name: str, fn):
         """Wrap ``fn`` so each jax trace bumps ``trace_counts[name]`` --
@@ -292,9 +302,18 @@ class Broker:
 
     def close(self) -> None:
         """Apply any pending value fill and shut down the hedging
-        executor (idempotent)."""
+        executor.  Idempotent: a second close is a no-op, and ``serve``
+        after close raises ``RuntimeError`` instead of failing deep in
+        the executor."""
+        if self._closed:
+            return
         self.flush()
         self._pool.shutdown(wait=True)
+        self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def __enter__(self) -> "Broker":
         return self
@@ -333,6 +352,12 @@ class Broker:
         reach the backend, and are sliced off the outputs, so bucketed
         serving is request-for-request identical to unpadded serving.
         """
+        if self._closed:
+            raise RuntimeError(
+                "Broker.serve called after close(); the broker's executor "
+                "is shut down -- build a new broker (or restore one from a "
+                "checkpoint) to keep serving"
+            )
         b = len(query_ids)
         if topics is None:
             topics = self.topic_of(query_ids)

@@ -23,6 +23,17 @@ checkpoint plus a single ``cluster.json`` manifest embedding the
 ``ServingSpec``; :meth:`Cluster.restore` verifies shard count and spec
 *before* touching any cache arrays, so a mismatched restore fails with
 the informative ``ValueError`` instead of a shape mismatch.
+
+Resilience (``spec.resilience``, see docs/resilience.md): per-shard
+dispatch gets bounded retries with seeded exponential backoff, a
+health state machine with circuit-breaker re-probes, degraded
+miss-through for queries routed to a down shard (identical values --
+the backend is the source of truth -- at a hit-rate/latency cost), and
+checkpoint-verified warm recovery via :meth:`recover_shard`.  Faults
+are *injected* per shard with :meth:`inject_shard_faults`
+(:class:`repro.loadgen.inject.FaultInjectSpec`); the open-loop harness
+drives the virtual clock through :meth:`advance_time` so whole fault
+episodes replay bit-identically.
 """
 from __future__ import annotations
 
@@ -30,13 +41,16 @@ import dataclasses
 import json
 import os
 import tempfile
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from ..train import checkpoint as ckpt_lib
 from .broker import Backend, Broker, BrokerStats
 from .device_cache import STDDeviceCache, splitmix64
+from .resilience import DOWN, ShardHealth
 from .spec import ServingSpec
 
 MANIFEST_NAME = "cluster.json"
@@ -77,6 +91,27 @@ class Cluster:
             if parallel and len(brokers) > 1
             else None
         )
+        self._closed = False
+        #: per-shard health machines (None without a ResilienceSpec: any
+        #: shard failure propagates, the pre-resilience behaviour)
+        self._health: Optional[List[ShardHealth]] = (
+            [ShardHealth(spec.resilience) for _ in brokers]
+            if spec.resilience is not None
+            else None
+        )
+        #: per-shard fault injectors (tests/benchmarks attach these)
+        self._injectors: List[Optional[object]] = [None] * len(brokers)
+        #: where a down shard warm-restarts from (set by save/restore or
+        #: attach_recovery; None = recovery re-inits the shard cold)
+        self._recovery_dir: Optional[str] = None
+        self._corrupted = [False] * len(brokers)
+        #: per-shard dispatch sequence numbers (backoff jitter seeding)
+        self._seq = [0] * len(brokers)
+        # virtual clock: the open-loop harness drives it via advance_time
+        # (deterministic fault episodes); otherwise relative wall time
+        self._now = 0.0
+        self._virtual = False
+        self._t0 = time.monotonic()
 
     # -- construction ------------------------------------------------------
 
@@ -147,6 +182,12 @@ class Cluster:
         routing computes ``topic_of`` once here and hands each shard its
         slice, so the hot path never pays the lookup twice.
         """
+        if self._closed:
+            raise RuntimeError(
+                "Cluster.serve called after close(); the shard brokers and "
+                "scatter-gather pool are shut down -- build a new cluster "
+                "(or restore one from a checkpoint) to keep serving"
+            )
         query_ids = np.asarray(query_ids)
         b = len(query_ids)
         topics = (
@@ -168,7 +209,7 @@ class Cluster:
                 (
                     idx,
                     self._pool.submit(
-                        self.brokers[i].serve, query_ids[idx], sub_topics(idx)
+                        self._serve_shard, i, query_ids[idx], sub_topics(idx)
                     ),
                 )
                 for i, idx in work
@@ -179,10 +220,195 @@ class Cluster:
                 hit[idx] = h
         else:
             for i, idx in work:
-                v, h = self.brokers[i].serve(query_ids[idx], sub_topics(idx))
+                v, h = self._serve_shard(i, query_ids[idx], sub_topics(idx))
                 values[idx] = v
                 hit[idx] = h
         return values, hit
+
+    # -- resilient dispatch ------------------------------------------------
+
+    def advance_time(self, t: float) -> None:
+        """Move the cluster's virtual clock to ``t`` (monotone; the
+        open-loop harness calls this with each batch's dispatch time).
+        Once called, health timestamps, probe cadence, and injected fault
+        schedules all run on virtual time -- deterministic replay."""
+        t = float(t)
+        self._virtual = True
+        self._now = max(self._now, t)
+        for inj in self._injectors:
+            if inj is not None:
+                inj.advance_to(t)
+
+    def _clock(self) -> float:
+        return self._now if self._virtual else time.monotonic() - self._t0
+
+    def inject_shard_faults(self, shard: int, fault_spec):
+        """Attach a fault schedule to one shard's dispatch; returns the
+        compiled :class:`~repro.loadgen.inject.FaultInjector`.  Without a
+        ``ResilienceSpec`` on the serving spec, injected faults propagate
+        to the caller (the pre-resilience behaviour)."""
+        from ..loadgen.inject import FaultInjector  # deferred: loadgen imports serving
+
+        inj = (
+            fault_spec
+            if isinstance(fault_spec, FaultInjector)
+            else FaultInjector(fault_spec)
+        )
+        self._injectors[int(shard)] = inj
+        return inj
+
+    def attach_recovery(self, ckpt_dir: str) -> None:
+        """Point shard recovery at a cluster checkpoint directory (done
+        automatically by :meth:`save`/:meth:`restore`)."""
+        self._recovery_dir = ckpt_dir
+
+    @property
+    def shard_health(self) -> Optional[List[ShardHealth]]:
+        """Per-shard health machines (None without a ResilienceSpec)."""
+        return self._health
+
+    def _call_shard(self, i: int, query_ids, topics):
+        """One dispatch attempt: injected faults fire first (they model
+        the shard being unreachable -- the broker is never entered)."""
+        inj = self._injectors[i]
+        if inj is not None:
+            inj.check(self._clock(), n=len(query_ids))
+        return self.brokers[i].serve(query_ids, topics)
+
+    def _serve_shard(self, i: int, query_ids, topics):
+        if self._health is None:
+            return self._call_shard(i, query_ids, topics)
+        return self._serve_shard_resilient(i, query_ids, topics)
+
+    def _serve_shard_resilient(self, i: int, query_ids, topics):
+        res = self.spec.resilience
+        h = self._health[i]
+        now = self._clock()
+        if h.state == DOWN:
+            if not h.probe_due(now):
+                return self._serve_degraded(i, query_ids)
+            # circuit-breaker probe: try to warm-restart the shard, then
+            # let this very batch be the probe dispatch
+            h.counters.probes += 1
+            try:
+                self.recover_shard(i)
+            except Exception:
+                h.probe_failed(self._clock())
+                return self._serve_degraded(i, query_ids)
+        seq = self._seq[i]
+        self._seq[i] = seq + 1
+        attempts = res.max_retries + 1
+        err: Optional[Exception] = None
+        for attempt in range(attempts):
+            try:
+                t_start = time.monotonic()
+                out = self._call_shard(i, query_ids, topics)
+            except Exception as e:
+                err = e
+                h.record_failure(self._clock())
+                if h.state == DOWN:
+                    break  # circuit opened mid-dispatch: stop retrying
+                if attempt + 1 < attempts:
+                    h.counters.retried += 1
+                    delay = res.backoff_s(i, seq, attempt)
+                    if delay > 0 and not self._virtual:
+                        time.sleep(delay)
+                continue
+            # completed: a slow serve still counts as a timeout *failure*
+            # for the health machine, but its result is used -- the broker
+            # is single-writer, so a completed serve is never discarded
+            dt_us = (time.monotonic() - t_start) * 1e6
+            if res.timeout_us > 0 and dt_us > res.timeout_us:
+                h.counters.timeouts += 1
+                h.record_failure(self._clock())
+            else:
+                h.record_success(self._clock())
+            return out
+        h.counters.failed_over += len(query_ids)
+        if res.failover == "fail":
+            raise err if err is not None else RuntimeError(
+                f"shard {i} dispatch failed with failover policy 'fail'"
+            )
+        return self._serve_degraded(i, query_ids)
+
+    def _serve_degraded(self, i: int, query_ids):
+        """Miss-through for a down shard: serve its slice straight from
+        the backend in arrival order.  Cache values equal backend values
+        by construction (the backend is the source of truth the cache
+        fills from), so degraded results are request-identical -- only
+        the hit mask and latency change."""
+        res = self.spec.resilience
+        if res is None or res.failover == "fail":
+            raise RuntimeError(
+                f"shard {i} is unavailable and the failover policy is "
+                "'fail'; no degraded path is configured"
+            )
+        h = self._health[i]
+        backend = self.brokers[i].backends[0]
+        mb = max(self.spec.microbatch, 1)
+        vals = []
+        for lo in range(0, len(query_ids), mb):
+            vals.append(np.asarray(backend(query_ids[lo : lo + mb]), np.int32))
+            h.counters.degraded_calls += 1
+        h.counters.degraded += len(query_ids)
+        values = (
+            np.concatenate(vals, axis=0)
+            if vals
+            else np.zeros((0, self.spec.value_dim), np.int32)
+        )
+        return values, np.zeros(len(query_ids), bool)
+
+    def recover_shard(self, i: int) -> Optional[int]:
+        """Warm-restart shard ``i`` as a replacement process would: clear
+        the crash latch, re-init the in-memory state (the static layer's
+        preloaded arrays survive -- they are rebuilt at deploy, not
+        learned), then restore the newest *manifest-verified* checkpoint
+        step when a recovery dir is attached.  Returns the restored step
+        (None = cold restart).  A corrupt newest step (torn write or
+        tampered bytes) is detected by the manifest checksums and
+        recovery falls back to the previous verified step."""
+        from ..loadgen.inject import corrupt_checkpoint  # deferred: loadgen imports serving
+
+        broker = self.brokers[i]
+        inj = self._injectors[i]
+        if inj is not None:
+            if (
+                inj.spec.corrupt_latest
+                and not self._corrupted[i]
+                and self._recovery_dir is not None
+            ):
+                # the crash tore the newest checkpoint: damage it once, so
+                # recovery must prove it falls back to the previous step
+                self._corrupted[i] = True
+                sd = _shard_dir(self._recovery_dir, i)
+                step = ckpt_lib.latest_step(sd)
+                if step is not None:
+                    corrupt_checkpoint(
+                        os.path.join(sd, f"step_{step:010d}"),
+                        mode="tamper",
+                        seed=inj.spec.seed,
+                    )
+            inj.restart()
+        # replacement process: in-memory cache state and stats are gone
+        broker._pending_fill = None
+        broker.state = dict(broker.cache.init_state)
+        for f in dataclasses.fields(BrokerStats):
+            if f.name != "topic_counts":
+                setattr(broker.stats, f.name, 0)
+        if broker.tracker is not None:
+            broker.tracker.load(np.zeros_like(broker.tracker.counts))
+        restored: Optional[int] = None
+        if self._recovery_dir is not None:
+            sd = _shard_dir(self._recovery_dir, i)
+            step = ckpt_lib.latest_verified_step(sd)
+            if step is not None:
+                broker.restore(sd, step=step)
+                restored = step
+        if self._health is not None:
+            h = self._health[i]
+            h.counters.recoveries += 1
+            h.begin_recovery(self._clock())
+        return restored
 
     # -- drift-aware rebalancing -------------------------------------------
 
@@ -207,7 +433,11 @@ class Cluster:
 
         Scalar counters sum; ``topic_counts`` stays None in the aggregate
         (each shard tracks its own disjoint topic universe -- read the
-        per-shard trackers via ``shard_stats``).
+        per-shard trackers via ``shard_stats``).  Resilience accounting
+        (degraded/retried/failed-over/timeout counters, kept cluster-side
+        so a shard's restart never loses the outage's bookkeeping) is
+        merged in: degraded requests count as requests, and their
+        miss-through calls as backend calls.
         """
         agg = BrokerStats()
         for b in self.brokers:
@@ -215,11 +445,34 @@ class Cluster:
                 if f.name == "topic_counts":
                     continue
                 setattr(agg, f.name, getattr(agg, f.name) + getattr(b.stats, f.name))
+        if self._health is not None:
+            for h in self._health:
+                self._merge_resilience(agg, h)
         return agg
+
+    @staticmethod
+    def _merge_resilience(s: BrokerStats, h: ShardHealth) -> None:
+        c = h.counters
+        s.requests += c.degraded
+        s.degraded += c.degraded
+        s.backend_calls += c.degraded_calls
+        s.retried += c.retried
+        s.failed_over += c.failed_over
+        s.timeouts += c.timeouts
 
     @property
     def shard_stats(self) -> List[BrokerStats]:
-        return [b.stats for b in self.brokers]
+        """Per-shard stats.  Without resilience these are the live broker
+        objects; with it, copies merged with the shard's cluster-side
+        resilience counters (mirroring the aggregate's accounting)."""
+        if self._health is None:
+            return [b.stats for b in self.brokers]
+        out = []
+        for b, h in zip(self.brokers, self._health):
+            s = dataclasses.replace(b.stats)
+            self._merge_resilience(s, h)
+            out.append(s)
+        return out
 
     @property
     def trace_counts(self) -> dict:
@@ -265,6 +518,8 @@ class Cluster:
             if os.path.exists(tmp):
                 os.unlink(tmp)
             raise
+        # a freshly saved checkpoint is where a down shard warm-restarts
+        self._recovery_dir = ckpt_dir
         return ckpt_dir
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
@@ -297,16 +552,25 @@ class Cluster:
         ]
         if len(set(steps)) != 1:
             raise ValueError(f"shard checkpoints disagree on the step: {steps}")
+        self._recovery_dir = ckpt_dir
         return steps[0]
 
     # -- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
-        """Shut down the scatter-gather pool and every shard broker."""
+        """Shut down the scatter-gather pool and every shard broker.
+        Idempotent; ``serve`` after close raises ``RuntimeError``."""
+        if self._closed:
+            return
         for broker in self.brokers:
             broker.close()
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def __enter__(self) -> "Cluster":
         return self

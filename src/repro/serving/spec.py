@@ -49,6 +49,7 @@ import numpy as np
 from ..core.spec import CacheSpec
 from .device_cache import DeviceCacheConfig, splitmix64
 from .rebalance import RebalanceSpec
+from .resilience import ResilienceSpec
 
 SERVING_SPEC_VERSION = 1
 
@@ -266,6 +267,11 @@ class ServingSpec:
     #: policy (:meth:`compiled_batch_policy`); set explicitly to control
     #: deadlines, queue bounds and the provisioned service model.
     batch_policy: Optional[BatchPolicySpec] = None
+    #: fault handling for sharded dispatch: timeout/retry/backoff, the
+    #: per-shard health state machine, and degraded miss-through (see
+    #: docs/resilience.md).  None = the pre-resilience behaviour: any
+    #: shard failure propagates to the caller.
+    resilience: Optional[ResilienceSpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -304,12 +310,16 @@ class ServingSpec:
         rebalance = d.pop("rebalance", None)
         bucket = d.pop("bucket", None)
         policy = d.pop("batch_policy", None)
+        resilience = d.pop("resilience", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
             rebalance=RebalanceSpec(**rebalance) if rebalance is not None else None,
             bucket=BucketSpec(**bucket) if bucket is not None else None,
             batch_policy=BatchPolicySpec(**policy) if policy is not None else None,
+            resilience=(
+                ResilienceSpec(**resilience) if resilience is not None else None
+            ),
             **d,
         )
 
@@ -435,5 +445,6 @@ __all__ = [
     "BucketSpec",
     "HedgeSpec",
     "RebalanceSpec",
+    "ResilienceSpec",
     "ServingSpec",
 ]

@@ -1,0 +1,491 @@
+"""Resilient cluster serving: fault injection, retry/backoff dispatch,
+shard health + degraded miss-through, checkpoint-verified recovery.
+
+The contract under test (docs/resilience.md):
+
+* fault schedules and backoff jitter are seeded and bit-deterministic --
+  the same spec replays the same episode;
+* a crashed shard never costs availability: its queries miss-through to
+  the backend with request-identical values (only hit stats/latency
+  change), with exact degraded/retried/failed-over accounting;
+* the health machine walks healthy -> suspect -> down -> recovering ->
+  healthy, with circuit-breaker probes while down;
+* recovery restores the newest *checksum-verified* checkpoint step --
+  torn or tampered checkpoints are detected and skipped;
+* saves are atomic (an interrupted save never shadows a good step), and
+  double-close / serve-after-close fail safely.
+"""
+import dataclasses
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, CacheSpec, VecLog, VecStats
+from repro.loadgen import (
+    ArrivalSpec,
+    FaultInjectSpec,
+    FaultInjector,
+    InjectedCrash,
+    InjectedError,
+    InjectedTimeout,
+    LatencyInjectSpec,
+    corrupt_checkpoint,
+    run_open_loop,
+    stamp_arrivals,
+)
+from repro.serving import (
+    DOWN,
+    HEALTHY,
+    RECOVERING,
+    SUSPECT,
+    Broker,
+    Cluster,
+    ResilienceSpec,
+    ServingSpec,
+    ShardHealth,
+)
+from repro.serving.spec import BatchPolicySpec
+from repro.train import checkpoint as ckpt_lib
+
+
+def _stats(seed=0, nq=300, n=3000, n_topics=6):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    return log, VecStats.from_log(log)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _res(**kw):
+    base = dict(
+        max_retries=2, backoff_base_us=1.0, suspect_after=1, down_after=3,
+        probe_interval_s=0.01, recover_after=1,
+    )
+    base.update(kw)
+    return ResilienceSpec(**base)
+
+
+def _spec(n=256, value_dim=2, **kw):
+    cache = CacheSpec.from_strategy("STDv_LRU", n, f_s=0.3, f_t=0.5)
+    return ServingSpec(cache=cache, value_dim=value_dim, microbatch=64, **kw)
+
+
+def _cluster(spec, stats, backend, **kw):
+    return Cluster.from_spec(spec, stats, [backend], value_fn=backend, **kw)
+
+
+# -- specs: round trips + validation ----------------------------------------
+
+
+def test_resilience_spec_round_trip():
+    spec = _res(timeout_us=500.0, backoff_jitter=0.25, seed=9, failover="fail")
+    again = ResilienceSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_json() == spec.to_json()
+    # and embedded in a ServingSpec
+    sspec = _spec(shards=4, resilience=spec)
+    again = ServingSpec.from_json(sspec.to_json())
+    assert again == sspec
+    assert again.resilience == spec
+
+
+def test_resilience_spec_validates():
+    with pytest.raises(ValueError, match="down_after"):
+        _res(suspect_after=3, down_after=2)
+    with pytest.raises(ValueError, match="failover"):
+        _res(failover="retry_forever")
+    with pytest.raises(ValueError, match="probe_interval_s"):
+        _res(probe_interval_s=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        _res(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_mult"):
+        _res(backoff_mult=0.5)
+
+
+def test_fault_inject_spec_round_trip():
+    spec = FaultInjectSpec(
+        error_every=5, timeout_rate=0.125, crash_at_s=1.5, corrupt_latest=True,
+        latency=LatencyInjectSpec(delay_s=0.01, every=3, jitter_s=0.002, seed=4),
+        seed=21,
+    )
+    again = FaultInjectSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.latency == spec.latency
+    # no latency composed: still round-trips
+    bare = FaultInjectSpec(error_rate=0.5)
+    assert FaultInjectSpec.from_json(bare.to_json()) == bare
+    with pytest.raises(ValueError, match="error_rate"):
+        FaultInjectSpec(error_rate=1.5)
+
+
+# -- injector: deterministic schedules --------------------------------------
+
+
+def _schedule(spec, n_calls, t=0.0):
+    inj = FaultInjector(spec)
+    out = []
+    for _ in range(n_calls):
+        try:
+            inj.check(t)
+            out.append("ok")
+        except InjectedError:
+            out.append("err")
+        except InjectedTimeout:
+            out.append("to")
+        except InjectedCrash:
+            out.append("crash")
+    return out, inj
+
+
+def test_fault_injector_schedule_is_deterministic():
+    spec = FaultInjectSpec(error_every=7, timeout_rate=0.1, seed=3)
+    a, inj_a = _schedule(spec, 200)
+    b, inj_b = _schedule(spec, 200)
+    assert a == b
+    assert inj_a.errors == inj_b.errors > 0
+    assert inj_a.timeouts == inj_b.timeouts > 0
+    # a different seed draws a different rate schedule
+    c, _ = _schedule(FaultInjectSpec(error_every=7, timeout_rate=0.1, seed=4), 200)
+    assert c != a
+
+
+def test_fault_injector_crash_is_permanent_until_restart():
+    inj = FaultInjector(FaultInjectSpec(crash_at_s=1.0))
+    inj.check(0.5)  # before the crash time: serves
+    with pytest.raises(InjectedCrash):
+        inj.check(1.5)
+    with pytest.raises(InjectedCrash):
+        inj.check(0.2)  # the clock is monotone: still crashed
+    inj.restart()
+    inj.check(2.0)  # the replacement process serves; no re-crash
+    assert inj.restarts == 1 and inj.crashed_calls == 2
+
+
+def test_backoff_is_seeded_deterministic_and_capped():
+    spec = _res(backoff_base_us=100.0, backoff_mult=2.0, backoff_cap_us=350.0,
+                backoff_jitter=0.5, seed=11)
+    a = [spec.backoff_s(1, 7, k) for k in range(5)]
+    b = [spec.backoff_s(1, 7, k) for k in range(5)]
+    assert a == b  # pure function of (spec, shard, seq, attempt)
+    assert spec.backoff_s(2, 7, 0) != spec.backoff_s(1, 7, 0)  # decorrelated
+    for k, d in enumerate(a):
+        lo = min(100.0 * 2.0 ** k, 350.0) * 1e-6
+        assert lo <= d <= lo * 1.5  # jitter in [1, 1 + jitter)
+
+
+# -- health state machine ---------------------------------------------------
+
+
+def test_health_state_machine_walk():
+    h = ShardHealth(_res(suspect_after=1, down_after=3, recover_after=2))
+    assert h.state == HEALTHY
+    h.record_failure(1.0)
+    assert h.state == SUSPECT
+    h.record_success(1.5)
+    assert h.state == HEALTHY  # one success heals a suspect
+    for t in (2.0, 2.1, 2.2):
+        h.record_failure(t)
+    assert h.state == DOWN
+    assert not h.probe_due(2.205)  # probe interval gates re-dispatch
+    assert h.probe_due(2.2 + 2 * h.spec.probe_interval_s)
+    h.begin_recovery(3.0)
+    assert h.state == RECOVERING
+    h.record_success(3.1)
+    assert h.state == RECOVERING  # recover_after=2 wants two successes
+    h.record_success(3.2)
+    assert h.state == HEALTHY
+    assert h.down_spans() == [(2.2, 3.2)]
+    # a failure while recovering drops straight back to down
+    for t in (4.0, 4.1, 4.2):
+        h.record_failure(t)
+    h.begin_recovery(5.0)
+    h.record_failure(5.1)
+    assert h.state == DOWN
+    assert h.down_spans()[-1] == (4.2, None)
+
+
+# -- dispatch: retries, degraded mode, recovery -----------------------------
+
+
+def test_flaky_shard_absorbed_by_retries():
+    log, stats = _stats(seed=5)
+    spec = _spec(shards=4, resilience=_res(suspect_after=2))
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    cluster.inject_shard_faults(1, FaultInjectSpec(error_every=5, seed=2))
+    stream = log.test_keys
+    with cluster:
+        for lo in range(0, len(stream), 64):
+            batch = stream[lo : lo + 64]
+            v, h = cluster.serve(batch)
+            assert np.array_equal(v, backend(batch))  # every value correct
+    s = cluster.stats
+    assert s.retried > 0  # the schedule fired and retries absorbed it
+    assert s.degraded == 0 and s.failed_over == 0  # never escalated
+    assert s.requests == len(stream)
+    assert cluster.shard_health[1].state == HEALTHY
+
+
+def test_crash_degrades_then_recovers_from_checkpoint():
+    log, stats = _stats(seed=7)
+    spec = _spec(shards=4, resilience=_res())
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    stream = log.test_keys
+    with cluster, tempfile.TemporaryDirectory() as ck:
+        warm, rest = stream[:256], stream[256:]
+        for lo in range(0, len(warm), 64):
+            cluster.serve(warm[lo : lo + 64])
+        cluster.save(ck, step=3)
+        pre_requests = cluster.brokers[2].stats.requests
+        cluster.inject_shard_faults(2, FaultInjectSpec(crash_at_s=0.0, seed=1))
+        for lo in range(0, len(rest), 64):
+            cluster.advance_time(lo * 1e-4)  # ~6 batches per probe interval
+            batch = rest[lo : lo + 64]
+            v, h = cluster.serve(batch)
+            assert np.array_equal(v, backend(batch))  # availability: 1.0
+        h2 = cluster.shard_health[2]
+        # the machine walked down and came back after a warm restart
+        states = [s for _, s in h2.events]
+        assert DOWN in states and RECOVERING in states
+        assert h2.state == HEALTHY
+        assert h2.counters.recoveries == 1
+        (down_at, up_at), *_ = h2.down_spans()
+        assert up_at is not None and up_at - down_at >= spec.resilience.probe_interval_s
+        # warm restart: the checkpointed stats came back (not a cold zero)
+        assert cluster.brokers[2].stats.requests >= pre_requests
+        s = cluster.stats
+        assert s.degraded > 0 and s.failed_over > 0
+
+
+def test_degraded_accounting_is_exact_while_down():
+    log, stats = _stats(seed=9)
+    # huge probe interval: once down, the shard stays down for the test
+    spec = _spec(shards=2, resilience=_res(max_retries=0, down_after=1,
+                                           probe_interval_s=1e6))
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    cluster.inject_shard_faults(0, FaultInjectSpec(crash_at_s=0.0))
+    cluster.advance_time(1e-6)
+    stream = log.test_keys
+    routed = int((spec.shard_of(stream) == 0).sum())
+    with cluster:
+        for lo in range(0, len(stream), 64):
+            batch = stream[lo : lo + 64]
+            v, h = cluster.serve(batch)
+            assert np.array_equal(v, backend(batch))
+            assert not h[spec.shard_of(batch) == 0].any()  # degraded = miss
+        s = cluster.stats
+        assert s.degraded == routed  # every routed request, exactly once
+        assert s.requests == len(stream)
+        assert cluster.shard_health[0].state == DOWN
+        # per-shard view mirrors the aggregate's accounting
+        assert cluster.shard_stats[0].degraded == routed
+
+
+def test_fault_episode_is_bit_deterministic():
+    log, stats = _stats(seed=11)
+    spec = _spec(shards=4, resilience=_res(backoff_jitter=0.3, seed=5))
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+
+    def episode():
+        cluster = _cluster(spec, stats, backend)
+        cluster.inject_shard_faults(
+            1, FaultInjectSpec(error_every=4, timeout_rate=0.05, crash_at_s=0.02, seed=3)
+        )
+        with cluster:
+            for lo in range(0, len(stream), 64):
+                cluster.advance_time(lo * 1e-5)
+                cluster.serve(stream[lo : lo + 64])
+            h = cluster.shard_health[1]
+            return (
+                tuple(h.events),
+                dataclasses.astuple(h.counters),
+                dataclasses.asdict(cluster.stats),
+            )
+
+    assert episode() == episode()
+
+
+def test_timeout_failures_open_the_circuit():
+    log, stats = _stats(seed=13)
+    # 1e-3 us = 1ns: every completed serve counts as a timeout failure
+    spec = _spec(shards=2, resilience=_res(timeout_us=1e-3, max_retries=0,
+                                           down_after=2, probe_interval_s=1e6))
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    stream = log.test_keys
+    with cluster:
+        for lo in range(0, 512, 64):
+            batch = stream[lo : lo + 64]
+            v, h = cluster.serve(batch)
+            # slow results are still used -- never discarded
+            assert np.array_equal(v, backend(batch))
+        s = cluster.stats
+        assert s.timeouts > 0
+        assert all(h.state == DOWN for h in cluster.shard_health)
+        assert s.degraded > 0  # circuit open: later batches missed through
+
+
+def test_failover_fail_propagates():
+    log, stats = _stats(seed=15)
+    spec = _spec(shards=2, resilience=_res(max_retries=0, failover="fail"))
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    cluster.inject_shard_faults(0, FaultInjectSpec(error_every=1))
+    with cluster:
+        with pytest.raises(InjectedError):
+            cluster.serve(log.test_keys[:64])
+
+
+# -- checkpoint checksums + atomic saves ------------------------------------
+
+
+def test_checksums_detect_tamper_and_truncate():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": np.arange(64.0).reshape(8, 8), "b": np.ones(3, np.int32)}
+        ckpt_lib.save(d, 1, tree)
+        ckpt_lib.save(d, 2, tree)
+        assert ckpt_lib.verify_step(d, 2)
+        assert ckpt_lib.latest_verified_step(d) == 2
+        corrupt_checkpoint(os.path.join(d, "step_0000000002"), mode="tamper", seed=0)
+        assert not ckpt_lib.verify_step(d, 2)
+        assert ckpt_lib.latest_verified_step(d) == 1  # falls back
+        with pytest.raises(ValueError, match="checksum"):
+            ckpt_lib.restore(d, tree, step=2)
+        # torn write: even the archive layer fails, verify says no
+        corrupt_checkpoint(os.path.join(d, "step_0000000001"), mode="truncate")
+        assert not ckpt_lib.verify_step(d, 1)
+        assert ckpt_lib.latest_verified_step(d) is None
+
+
+def test_interrupted_save_never_shadows_good_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": np.arange(6.0)}
+        ckpt_lib.save(d, 1, tree)
+        # a kill mid-save leaves a tmp dir (arrays written, no manifest,
+        # no rename): it must be invisible to every reader
+        stale = os.path.join(d, ".tmp_interrupted")
+        os.makedirs(stale)
+        np.savez(os.path.join(stale, "arrays.npz"), w=np.zeros(6))
+        # ...and a step dir missing its arrays must be skipped too
+        torn = os.path.join(d, "step_0000000009")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "manifest.json"), "w") as f:
+            json.dump({"step": 9, "keys": [], "shapes": {}, "dtypes": {}}, f)
+        assert ckpt_lib.all_steps(d) == [1]
+        assert ckpt_lib.latest_step(d) == 1
+        restored, got = ckpt_lib.restore(d, tree)
+        assert got == 1 and np.array_equal(restored["w"], tree["w"])
+        # the next save sweeps the stale tmp dir
+        ckpt_lib.save(d, 2, tree)
+        assert not os.path.exists(stale)
+
+
+def test_recovery_falls_back_past_corrupt_checkpoint():
+    log, stats = _stats(seed=17)
+    spec = _spec(shards=2, resilience=_res(max_retries=0, down_after=1))
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    stream = log.test_keys
+    with cluster, tempfile.TemporaryDirectory() as ck:
+        for lo in range(0, 256, 64):
+            cluster.serve(stream[lo : lo + 64])
+        cluster.save(ck, step=1)
+        for lo in range(256, 512, 64):
+            cluster.serve(stream[lo : lo + 64])
+        cluster.save(ck, step=2)
+        # the crash also tears shard 1's newest checkpoint
+        cluster.inject_shard_faults(
+            1, FaultInjectSpec(crash_at_s=0.0, corrupt_latest=True)
+        )
+        for lo in range(512, len(stream), 64):
+            cluster.advance_time((lo - 512) * 1e-4)
+            batch = stream[lo : lo + 64]
+            v, h = cluster.serve(batch)
+            assert np.array_equal(v, backend(batch))
+        sd = os.path.join(ck, "shard_001")
+        assert not ckpt_lib.verify_step(sd, 2)  # torn, detected
+        assert ckpt_lib.latest_verified_step(sd) == 1  # the fallback target
+        h1 = cluster.shard_health[1]
+        assert h1.counters.recoveries == 1 and h1.state == HEALTHY
+
+
+# -- lifecycle hardening ----------------------------------------------------
+
+
+def test_broker_double_close_and_serve_after_close():
+    log, stats = _stats(seed=19)
+    spec = _spec()
+    backend = _backend(spec.value_dim)
+    broker = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    broker.serve(log.test_keys[:64])
+    broker.close()
+    broker.close()  # idempotent
+    assert broker.closed
+    with pytest.raises(RuntimeError, match="close"):
+        broker.serve(log.test_keys[:64])
+
+
+def test_cluster_double_close_and_serve_after_close():
+    log, stats = _stats(seed=19)
+    spec = _spec(shards=2)
+    backend = _backend(spec.value_dim)
+    cluster = _cluster(spec, stats, backend)
+    cluster.serve(log.test_keys[:64])
+    cluster.close()
+    cluster.close()  # idempotent (and re-closes already-closed brokers)
+    assert cluster.closed
+    assert all(b.closed for b in cluster.brokers)
+    with pytest.raises(RuntimeError, match="close"):
+        cluster.serve(log.test_keys[:64])
+
+
+# -- open-loop harness integration ------------------------------------------
+
+
+def test_open_loop_drives_virtual_clock_and_collects():
+    log, stats = _stats(seed=21, n=6000)
+    policy = BatchPolicySpec(
+        max_batch=128, deadline_us=1_000.0, service_base_us=300.0,
+        service_per_request_us=2.0,
+    )
+    spec = _spec(shards=4, resilience=_res(), batch_policy=policy)
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    workload = stamp_arrivals(
+        stream, ArrivalSpec(process="poisson", rate=0.5 * policy.capacity_rps(), seed=3)
+    )
+    span = float(workload.t[-1])
+    cluster = _cluster(spec, stats, backend)
+    with cluster, tempfile.TemporaryDirectory() as ck:
+        cluster.save(ck, step=0)
+        cluster.inject_shard_faults(
+            1, FaultInjectSpec(crash_at_s=0.3 * span, seed=4)
+        )
+        res = run_open_loop(workload, cluster, policy, collect=True)
+        assert res.values is not None and res.hit is not None
+        served = ~np.isnan(res.queue_s)
+        assert served.all()  # nothing shed at 0.5x capacity
+        assert np.array_equal(res.values, backend(workload.keys))
+        h1 = cluster.shard_health[1]
+        (down_at, up_at), *_ = h1.down_spans()
+        # the outage window sits on the *plan's* virtual timeline
+        assert 0.3 * span <= down_at <= span
+        assert up_at is not None and h1.state == HEALTHY
+        assert cluster.stats.degraded > 0

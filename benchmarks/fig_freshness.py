@@ -1,0 +1,246 @@
+"""Freshness sweep (beyond-paper): hit rate vs TTL, stale serving, invalidation.
+
+The result cache stores *answers*, and answers rot: the paper's topical
+split gives each topic its own refresh economics (news rots in minutes,
+navigational queries in days).  This sweep serves one synthetic stream
+through spec-compiled brokers under ``FreshnessSpec`` configurations and
+records, per TTL and stale policy:
+
+* ``hit_rate``      -- what expiry costs (misses re-fetch);
+* ``stale_rate``    -- fraction of requests answered from an expired
+  entry (``serve_stale_while_revalidate`` only; bounded by CI);
+* ``violations``    -- the broker's structural tripwire (must be 0);
+* ``oracle_*``      -- an *independent* staleness measurement: the
+  backend stamps each value with its production time (virtual seconds),
+  so served payloads carry their true age and the sweep re-derives
+  staleness from the answers alone, not from broker bookkeeping.
+
+Scenarios beyond the TTL grid: ``ttl=inf`` must match the
+freshness-off baseline (delta row), a per-topic TTL override, and an
+invalidation-stream run (``repro.querylog.generate_invalidations``)
+where explicit topic flushes and key invalidations ride the same clock.
+Rows land in ``BENCH_serving.json`` as ``freshness/...`` and the CI
+perf smoke asserts ``violations == 0`` and the stale-rate bound.
+
+  PYTHONPATH=src python -m benchmarks.fig_freshness --quick
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import CacheSpec, VecLog, VecStats
+from repro.querylog import (
+    InvalidationConfig,
+    InvalidationStream,
+    SynthConfig,
+    generate,
+    generate_invalidations,
+)
+from repro.serving import Broker, FreshnessSpec, ServingSpec
+
+from .common import csv_row
+
+VALUE_DIM = 2
+BATCH = 512
+TICK = 1.0  # FreshnessSpec default tick, virtual seconds
+DAY_S = 86400.0  # synth timestamps are days; the serving clock runs in seconds
+#: epoch quantisation slack for the oracle: insert and probe each round
+#: to a tick, plus one for the strict/loose boundary convention
+SLACK_S = 3.0 * TICK
+
+#: the backend's notion of "now" -- advanced once per batch, so produced
+#: values are stamped with their production time and the oracle can
+#: measure the true age of every served answer
+_clock = {"t": 0.0}
+
+
+def _backend(qids: np.ndarray) -> np.ndarray:
+    out = np.empty((len(qids), VALUE_DIM), np.int32)
+    out[:, 0] = np.asarray(qids, np.int64) & 0x7FFFFFFF
+    out[:, 1] = int(_clock["t"])
+    return out
+
+
+def _spec(n_entries: int, freshness: Optional[FreshnessSpec]) -> ServingSpec:
+    # no static layer: static entries are prefilled once and exempt from
+    # expiry by design, which would blind the value-age oracle
+    cache = CacheSpec.from_strategy("STDv_LRU", n_entries, f_s=0.0, f_t=0.7)
+    return ServingSpec(cache=cache, value_dim=VALUE_DIM, freshness=freshness)
+
+
+def _ttl_req(broker: Broker, fs: FreshnessSpec, topics: np.ndarray) -> np.ndarray:
+    """Effective per-request TTL under partition semantics: a per-topic
+    override only applies where the topic owns a partition (topics folded
+    into the dynamic partition use the default TTL)."""
+    ttl = np.full(len(topics), fs.ttl_s, np.float64)
+    for tau, tt in fs.topic_ttl_s.items():
+        part = int(broker.cache.parts_for(np.asarray([tau]))[0])
+        if part < broker.cache.k:
+            ttl[topics == tau] = tt
+    return ttl
+
+
+def _serve(
+    spec: ServingSpec,
+    stats: VecStats,
+    test: np.ndarray,
+    t_s: np.ndarray,
+    topics: Optional[np.ndarray] = None,
+    stream: Optional[InvalidationStream] = None,
+):
+    """Serve the stream on the virtual clock; returns (BrokerStats,
+    us_per_batch, oracle_stale) where ``oracle_stale`` counts served
+    values older than their effective TTL, measured from the payload."""
+    oracle_stale = 0
+    with Broker.from_spec(spec, stats, [_backend], value_fn=_backend) as broker:
+        fs = spec.freshness
+        ttl = (
+            _ttl_req(broker, fs, topics)
+            if fs is not None and topics is not None
+            else None
+        )
+        t0 = time.time()
+        n_batches = 0
+        for lo in range(0, len(test), BATCH):
+            batch = test[lo : lo + BATCH]
+            t = float(t_s[lo])
+            _clock["t"] = t
+            broker.advance_time(t)
+            if stream is not None:
+                stream.apply(broker, t)
+            values, _hit = broker.serve(batch)
+            if ttl is not None:
+                age = t - values[:, 1].astype(np.float64)
+                oracle_stale += int((age > ttl[lo : lo + BATCH] + SLACK_S).sum())
+            n_batches += 1
+        us = (time.time() - t0) / max(n_batches, 1) * 1e6
+        return broker.stats, us, oracle_stale
+
+
+def run(quick: bool = False) -> List[str]:
+    cfg = SynthConfig(
+        n_requests=60_000 if quick else 240_000,
+        n_topics=16,
+        n_topical_queries=8_000 if quick else 24_000,
+        n_notopic_queries=2_500 if quick else 8_000,
+        n_days=2.0,
+        seed=7,
+    )
+    log = generate(cfg)
+    n_train = log.split(0.3)
+    vlog = VecLog(
+        keys=log.keys,
+        n_train=n_train,
+        key_topic=log.true_topic,
+        key_terms=log.n_terms,
+        key_chars=log.n_chars,
+    )
+    stats = VecStats.from_log(vlog)
+    test = vlog.test_keys
+    t_s = np.asarray(log.timestamps, np.float64)[n_train:] * DAY_S
+    topics = np.asarray(log.true_topic)[test]
+    n_entries = 2048 if quick else 4096
+
+    rows: List[str] = []
+
+    # reference: freshness off, then ttl=inf which must cost nothing
+    s_off, us, _ = _serve(_spec(n_entries, None), stats, test, t_s)
+    rows.append(csv_row("freshness/off", us, f"hit_rate={s_off.hit_rate:.4f}"))
+    s_inf, us, oracle = _serve(
+        _spec(n_entries, FreshnessSpec(ttl_s=math.inf)), stats, test, t_s,
+        topics=topics,
+    )
+    rows.append(
+        csv_row(
+            "freshness/ttl=inf",
+            us,
+            f"hit_rate={s_inf.hit_rate:.4f};"
+            f"delta_vs_off={s_inf.hit_rate - s_off.hit_rate:.6f};"
+            f"expired={s_inf.expired};violations={s_inf.freshness_violations};"
+            f"oracle_violations={oracle}",
+        )
+    )
+
+    # TTL grid x stale policy
+    # quick batches span ~1500 virtual seconds, so the shortest quick TTL
+    # stays above one batch gap (a sub-batch TTL degenerates to hit_rate 0)
+    ttls = (3600.0, 14400.0) if quick else (900.0, 3600.0, 14400.0)
+    for ttl in ttls:
+        for policy, tag in (
+            ("miss", "miss"),
+            ("serve_stale_while_revalidate", "swr"),
+        ):
+            fs = FreshnessSpec(ttl_s=ttl, stale_policy=policy)
+            s, us, oracle = _serve(
+                _spec(n_entries, fs), stats, test, t_s, topics=topics
+            )
+            stale_rate = s.stale_served / max(s.requests, 1)
+            oracle_rate = oracle / max(s.requests, 1)
+            derived = (
+                f"hit_rate={s.hit_rate:.4f};expired={s.expired};"
+                f"stale_rate={stale_rate:.4f};revalidations={s.revalidations};"
+                f"violations={s.freshness_violations}"
+            )
+            if policy == "miss":
+                # under policy "miss" the oracle count IS a violation count
+                derived += f";oracle_violations={oracle}"
+            else:
+                derived += f";oracle_stale_rate={oracle_rate:.4f}"
+            rows.append(csv_row(f"freshness/ttl={ttl:.0f}/{tag}", us, derived))
+
+    # per-topic override: the busiest topic rots 6x faster than the rest
+    counts = np.bincount(topics[topics >= 0], minlength=cfg.n_topics)
+    tau = int(np.argmax(counts))
+    fs = FreshnessSpec(ttl_s=3600.0, topic_ttl_s={tau: 600.0})
+    s, us, oracle = _serve(_spec(n_entries, fs), stats, test, t_s, topics=topics)
+    rows.append(
+        csv_row(
+            f"freshness/topic_ttl/tau={tau}",
+            us,
+            f"hit_rate={s.hit_rate:.4f};expired={s.expired};"
+            f"violations={s.freshness_violations};oracle_violations={oracle}",
+        )
+    )
+
+    # invalidation stream: long TTL so expiry comes from explicit events
+    # (rates are per day of log time; stream times rescaled to seconds)
+    fs = FreshnessSpec(ttl_s=14_400.0)
+    raw = generate_invalidations(
+        InvalidationConfig(topic_rate=1.5, key_rate=400.0, seed=11), log
+    )
+    stream = InvalidationStream(
+        times=np.asarray(raw.times, np.float64) * DAY_S,
+        kinds=raw.kinds,
+        targets=raw.targets,
+    )
+    s, us, oracle = _serve(
+        _spec(n_entries, fs), stats, test, t_s, topics=topics, stream=stream
+    )
+    rows.append(
+        csv_row(
+            "freshness/inval",
+            us,
+            f"hit_rate={s.hit_rate:.4f};invalidations={s.invalidations};"
+            f"expired={s.expired};violations={s.freshness_violations};"
+            f"oracle_violations={oracle};events={len(stream)}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-scale grid")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -73,7 +73,7 @@ def main() -> None:
     ap.add_argument(
         "--only",
         help="comma-separated subset: table2,table3,table45,table67,"
-        "fig6,fig7,drift,load,fault,perf",
+        "fig6,fig7,drift,load,fault,freshness,perf",
     )
     ap.add_argument(
         "--scale", type=float, default=0.6,
@@ -90,6 +90,7 @@ def main() -> None:
         fig7_fs_sweep,
         fig_drift,
         fig_fault,
+        fig_freshness,
         fig_load,
         perf_cache,
         perf_kernels,
@@ -121,6 +122,9 @@ def main() -> None:
         # fault episodes: availability/degraded/recovery under injected
         # shard crashes, flaky dispatch, and checkpoint corruption
         ("fault", lambda: fig_fault.run(quick=args.quick)),
+        # freshness sweep: hit rate / stale serving / violations vs TTL,
+        # plus the invalidation-stream scenario
+        ("freshness", lambda: fig_freshness.run(quick=args.quick)),
         ("perf", lambda: perf_cache.run(quick=args.quick) + perf_kernels.run()),
     ]
     print("name,us_per_call,derived")
@@ -139,7 +143,10 @@ def main() -> None:
             raise
         print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},elapsed={time.time()-t0:.1f}s", flush=True)
     if args.json_out and results:
-        results["meta/run"] = _run_meta(args)
+        meta = _run_meta(args)
+        # provenance is keyed by git rev so successive runs from different
+        # commits keep their own row instead of silently overwriting
+        results[f"meta/run/{meta['git_rev']}"] = meta
         # merge into an existing file so a partial (--only/--quick) run
         # refreshes its own rows without dropping the committed table
         merged = {}
@@ -149,6 +156,9 @@ def main() -> None:
                     merged = json.load(f)
             except (OSError, ValueError):
                 merged = {}
+        # dedupe provenance: drop the legacy un-keyed row (pre-rev-keyed
+        # files); same-rev rows are replaced by the update below
+        merged.pop("meta/run", None)
         merged.update(results)
         with open(args.json_out, "w") as f:
             json.dump(merged, f, indent=1, sort_keys=True)

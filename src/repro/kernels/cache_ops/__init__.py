@@ -5,6 +5,7 @@ from .ops import (
     plan_segments,
     probe_and_commit_op,
     resolve_conflicts,
+    unpack_epoch,
     unpack_words,
 )
 
@@ -16,5 +17,6 @@ __all__ = [
     "plan_segments",
     "probe_and_commit_op",
     "resolve_conflicts",
+    "unpack_epoch",
     "unpack_words",
 ]

@@ -10,26 +10,29 @@ hashed sets is O(B/S) in expectation.
 
 Tiling: grid = (B_pad / bm,) over segment tiles.  Each step owns
 
-* the tile's row state       (bm, 3W)  x1   packed key/stamp words,
-                                            identity map
+* the tile's row state       (bm, 4W)  x1   packed key/stamp/epoch
+                                            words, identity map
 * the tile's segment table   (bm, 1)   x2   leader / length
-* the whole sorted batch     (B, 1)    x5   request fields, constant map
-* per-request outputs        (B, 1)    x4   constant map, revisited
+* the whole sorted batch     (B, 1)    x7   request fields, constant map
+* per-request outputs        (B, 1)    x6   constant map, revisited
 
-The per-slot key_hi / key_lo / stamp words are packed into a single
-(bm, 3W) uint32 block (columns [0:W] hi, [W:2W] lo, [2W:3W] stamp) --
-one gather feeds the whole replay and one scatter drains it, and the
-row blocks fill 3x more of the 128-wide lanes than the old (bm, W)
-triple.  Constant-index blocks stay resident in VMEM across steps (same
-pattern as embedding_bag's bag accumulation), so each step's dynamic
-gathers of its requests and scatters of its per-request outputs never
-touch HBM.  The conflict loop is a `lax.fori_loop` with a
-*data-dependent* trip count (the tile's deepest segment), lowered to a
-scalar while-loop.
+The per-slot key_hi / key_lo / stamp / insertion-epoch words are packed
+into a single (bm, 4W) uint32 block (columns [0:W] hi, [W:2W] lo,
+[2W:3W] stamp, [3W:4W] epoch) -- one gather feeds the whole replay and
+one scatter drains it, and the row blocks fill 4x more of the 128-wide
+lanes than the old (bm, W) triple.  The epoch word carries freshness:
+a match whose epoch is below the request's ``min_epoch`` floor is a
+*stale* hit -- still a hit for LRU purposes, but reported separately
+and scheduled for a value refresh (see docs/freshness.md).  Constant-
+index blocks stay resident in VMEM across steps (same pattern as
+embedding_bag's bag accumulation), so each step's dynamic gathers of
+its requests and scatters of its per-request outputs never touch HBM.
+The conflict loop is a `lax.fori_loop` with a *data-dependent* trip
+count (the tile's deepest segment), lowered to a scalar while-loop.
 
 VMEM budget at defaults (bm=256, W=8, B=4096):
-  rows 2*256*24*4 = 48 KiB, request fields 5*4096*4 = 80 KiB,
-  outputs 4*4096*4 = 64 KiB  -- ~0.2 MiB of ~16 MiB/core; B up to ~256K
+  rows 2*256*32*4 = 64 KiB, request fields 7*4096*4 = 112 KiB,
+  outputs 6*4096*4 = 96 KiB  -- ~0.3 MiB of ~16 MiB/core; B up to ~190K
   requests fits.
 
 The static-shape serving contract reserves one key: requests whose
@@ -60,7 +63,10 @@ def is_pad(h_hi: jnp.ndarray, h_lo: jnp.ndarray) -> jnp.ndarray:
     return (h_hi == jnp.uint32(PAD_HI)) & (h_lo == jnp.uint32(PAD_LO))
 
 
-def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act):
+def conflict_round(
+    r_hi, r_lo, r_st, r_ep, hi_i, lo_i, admit_i, static_i, ep_i, minep_i,
+    stamp_i, act,
+):
     """One replay round on evolving rows: the exact sequential LRU step.
 
     Shared by the Pallas kernel body and the pure-jnp rounds loop
@@ -68,6 +74,12 @@ def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act
     a hit refreshes the matching way, an admitted miss evicts the
     min-stamp way, first-index tie-breaking matches the fori_loop oracle.
     Requests carrying the reserved pad key neither match nor write.
+
+    Freshness: a hit whose resident epoch is below ``minep_i`` is
+    *stale* -- it still refreshes the LRU stamp, but its value slot is
+    scheduled for a rewrite (``refresh``) and its epoch word advances to
+    ``ep_i``.  With ``minep_i == 0`` (freshness disabled) ``refresh``
+    degenerates to the classic ``do_write & ~is_hit`` insert plan.
     """
     w = r_hi.shape[1]
     ways = jnp.arange(w, dtype=jnp.int32)
@@ -78,12 +90,18 @@ def conflict_round(r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, stamp_i, act
     way = jnp.where(
         is_hit, jnp.argmax(m, axis=1), jnp.argmin(r_st, axis=1)
     ).astype(jnp.int32)
+    sel = ways[None, :] == way[:, None]
+    ep_way = jnp.where(sel, r_ep, 0).max(axis=1)  # the target way's epoch
+    stale = is_hit & (ep_way < minep_i)
     do_write = act & ~static_i & ~pad_i & (is_hit | admit_i)
-    upd = do_write[:, None] & (ways[None, :] == way[:, None])
+    refresh = do_write & (~is_hit | stale)
+    upd = do_write[:, None] & sel
+    updv = refresh[:, None] & sel
     r_hi = jnp.where(upd, hi_i[:, None], r_hi)
     r_lo = jnp.where(upd, lo_i[:, None], r_lo)
     r_st = jnp.where(upd, stamp_i[:, None], r_st)
-    return r_hi, r_lo, r_st, is_hit, way, do_write
+    r_ep = jnp.where(updv, ep_i[:, None], r_ep)
+    return r_hi, r_lo, r_st, r_ep, is_hit, way, do_write, refresh
 
 
 def _kernel(
@@ -95,10 +113,14 @@ def _kernel(
     s_pos_ref,
     s_admit_ref,
     s_static_ref,
+    s_epoch_ref,
+    s_minep_ref,
     clock_ref,
     out_rows_ref,
     pre_hit_ref,
     pre_way_ref,
+    pre_stale_ref,
+    pre_ep_ref,
     wrote_ref,
     way_ref,
 ):
@@ -108,14 +130,17 @@ def _kernel(
     def _init():
         pre_hit_ref[...] = jnp.zeros_like(pre_hit_ref)
         pre_way_ref[...] = jnp.zeros_like(pre_way_ref)
+        pre_stale_ref[...] = jnp.zeros_like(pre_stale_ref)
+        pre_ep_ref[...] = jnp.zeros_like(pre_ep_ref)
         wrote_ref[...] = jnp.zeros_like(wrote_ref)
         way_ref[...] = jnp.zeros_like(way_ref)
 
-    rows = rows_ref[...]  # (bm, 3W) packed pristine rows: the atomic probe
-    w = rows.shape[1] // 3  # targets pre-commit state for every item
+    rows = rows_ref[...]  # (bm, 4W) packed pristine rows: the atomic probe
+    w = rows.shape[1] // 4  # targets pre-commit state for every item
     init_hi = rows[:, :w]
     init_lo = rows[:, w : 2 * w]
-    init_st = rows[:, 2 * w :].astype(jnp.int32)
+    init_st = rows[:, 2 * w : 3 * w].astype(jnp.int32)
+    init_ep = rows[:, 3 * w :]
     leader = leader_ref[...][:, 0]
     seg_len = seg_len_ref[...][:, 0]
     s_hi = s_hi_ref[...][:, 0]
@@ -123,11 +148,13 @@ def _kernel(
     s_pos = s_pos_ref[...][:, 0]
     s_admit = s_admit_ref[...][:, 0]
     s_static = s_static_ref[...][:, 0]
+    s_epoch = s_epoch_ref[...][:, 0]
+    s_minep = s_minep_ref[...][:, 0]
     clock = clock_ref[0, 0]
     b_total = s_hi.shape[0]
 
     def body(j, carry):
-        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = carry
+        r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy = carry
         idx = jnp.minimum(leader + j, b_total - 1)  # (bm,) global item ids
         act = j < seg_len
         hi_i = s_hi[idx]
@@ -135,46 +162,58 @@ def _kernel(
         admit_i = s_admit[idx] != 0
         static_i = s_static[idx] != 0
         pos_i = s_pos[idx]
+        minep_i = s_minep[idx]
         # probe against the pristine rows (duplicates count as misses;
         # the reserved pad key never hits)
         pm = (init_hi == hi_i[:, None]) & (init_lo == lo_i[:, None]) & (init_hi != 0)
         pm = pm & ~is_pad(hi_i, lo_i)[:, None]
+        pm_ep = jnp.where(pm, init_ep, 0).max(axis=1)
         # evolving rows: exact sequential LRU semantics within the segment
-        r_hi, r_lo, r_st, is_hit, way, do_write = conflict_round(
-            r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, clock + 1 + pos_i, act
+        r_hi, r_lo, r_st, r_ep, is_hit, way, do_write, refresh = conflict_round(
+            r_hi, r_lo, r_st, r_ep, hi_i, lo_i, admit_i, static_i,
+            s_epoch[idx], minep_i, clock + 1 + pos_i, act,
         )
         tgt = jnp.where(act, idx, b_total)  # inactive lanes scatter-drop
         p_hit = p_hit.at[tgt].set(pm.any(axis=1).astype(jnp.int32), mode="drop")
         p_way = p_way.at[tgt].set(jnp.argmax(pm, axis=1).astype(jnp.int32), mode="drop")
-        wr = wr.at[tgt].set((do_write & ~is_hit).astype(jnp.int32), mode="drop")
+        p_stale = p_stale.at[tgt].set(
+            (pm.any(axis=1) & (pm_ep < minep_i)).astype(jnp.int32), mode="drop"
+        )
+        p_ep = p_ep.at[tgt].set(pm_ep, mode="drop")
+        wr = wr.at[tgt].set(refresh.astype(jnp.int32), mode="drop")
         wy = wy.at[tgt].set(way, mode="drop")
-        return r_hi, r_lo, r_st, p_hit, p_way, wr, wy
+        return r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy
 
     carry = (
         init_hi,
         init_lo,
         init_st,
+        init_ep,
         pre_hit_ref[...][:, 0],
         pre_way_ref[...][:, 0],
+        pre_stale_ref[...][:, 0],
+        pre_ep_ref[...][:, 0],
         wrote_ref[...][:, 0],
         way_ref[...][:, 0],
     )
     n_rounds = jnp.max(seg_len)  # tile-local conflict depth
-    r_hi, r_lo, r_st, p_hit, p_way, wr, wy = jax.lax.fori_loop(
-        0, n_rounds, body, carry
+    r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy = (
+        jax.lax.fori_loop(0, n_rounds, body, carry)
     )
     out_rows_ref[...] = jnp.concatenate(
-        [r_hi, r_lo, r_st.astype(jnp.uint32)], axis=1
+        [r_hi, r_lo, r_st.astype(jnp.uint32), r_ep], axis=1
     )
     pre_hit_ref[...] = p_hit[:, None]
     pre_way_ref[...] = p_way[:, None]
+    pre_stale_ref[...] = p_stale[:, None]
+    pre_ep_ref[...] = p_ep[:, None]
     wrote_ref[...] = wr[:, None]
     way_ref[...] = wy[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def probe_and_commit(
-    rows: jnp.ndarray,  # (B_pad, 3W) uint32 packed gathered segment rows
+    rows: jnp.ndarray,  # (B_pad, 4W) uint32 packed gathered segment rows
     leader: jnp.ndarray,  # (B_pad, 1) int32 first sorted item per segment
     seg_len: jnp.ndarray,  # (B_pad, 1) int32 items per segment (0 = pad)
     s_hi: jnp.ndarray,  # (B_pad, 1) uint32 sorted request hashes
@@ -182,14 +221,16 @@ def probe_and_commit(
     s_pos: jnp.ndarray,  # (B_pad, 1) int32 original batch position
     s_admit: jnp.ndarray,  # (B_pad, 1) int32
     s_static: jnp.ndarray,  # (B_pad, 1) int32
+    s_epoch: jnp.ndarray,  # (B_pad, 1) uint32 write epochs
+    s_minep: jnp.ndarray,  # (B_pad, 1) uint32 freshness floors
     clock: jnp.ndarray,  # (1, 1) int32
     bm: int = 256,
     interpret: bool = False,
 ):
-    b, w3 = rows.shape
+    b, w4 = rows.shape
     bm = min(bm, b)
     grid = (pl.cdiv(b, bm),)
-    rows_spec = pl.BlockSpec((bm, w3), lambda g: (g, 0))
+    rows_spec = pl.BlockSpec((bm, w4), lambda g: (g, 0))
     seg_spec = pl.BlockSpec((bm, 1), lambda g: (g, 0))
     full_spec = pl.BlockSpec((b, 1), lambda g: (0, 0))
     return pl.pallas_call(
@@ -204,6 +245,8 @@ def probe_and_commit(
             full_spec,
             full_spec,
             full_spec,
+            full_spec,
+            full_spec,
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=[
@@ -212,11 +255,15 @@ def probe_and_commit(
             full_spec,
             full_spec,
             full_spec,
+            full_spec,
+            full_spec,
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, w3), jnp.uint32),
+            jax.ShapeDtypeStruct((b, w4), jnp.uint32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.uint32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ],
@@ -230,5 +277,7 @@ def probe_and_commit(
         s_pos,
         s_admit,
         s_static,
+        s_epoch,
+        s_minep,
         clock,
     )

@@ -12,13 +12,25 @@ with three data-parallel phases:
    times, not B times;
 3. **scatter** -- write each resolved row back in a single scatter.
 
-State layout: the per-slot key_hi / key_lo / stamp words live in one
-packed ``(S, 3W)`` uint32 array (``pack_words`` / ``unpack_words``:
-columns ``[0:W]`` hi, ``[W:2W]`` lo, ``[2W:3W]`` stamp bit-cast), so the
-resolve phase costs **one** gather and **one** scatter instead of three
-of each, and the Pallas kernel's row blocks fill 3x more of the 128-wide
-lanes.  The adapters are exact bit-reinterpretations, which is what lets
-the fori_loop oracle keep operating on the unpacked view.
+State layout: the per-slot key_hi / key_lo / stamp / epoch words live in
+one packed ``(S, 4W)`` uint32 array (``pack_words`` / ``unpack_words``:
+columns ``[0:W]`` hi, ``[W:2W]`` lo, ``[2W:3W]`` stamp bit-cast,
+``[3W:4W]`` insertion epoch), so the resolve phase costs **one** gather
+and **one** scatter instead of four of each, and the Pallas kernel's row
+blocks fill 4x more of the 128-wide lanes.  The adapters are exact
+bit-reinterpretations, which is what lets the fori_loop oracle keep
+operating on the unpacked view.
+
+Freshness rides the same gather: per request, ``min_epoch`` is the
+smallest insertion epoch still considered fresh (0 disables expiry --
+the default -- making the op bit-identical to the pre-freshness
+semantics), and ``epochs`` is the insertion epoch stamped on writes.  A
+key match whose epoch is below ``min_epoch`` is *stale*: it still counts
+as a hit for LRU/eviction purposes (the entry stays resident and the
+matched way refreshes), but the op reports it in ``pre_stale`` and
+schedules a value refresh (``wrote``) so callers can either re-fetch
+(``stale_policy=miss``) or serve stale while the deferred fill
+revalidates.  See docs/freshness.md.
 
 `use_kernel=True` routes phase 2 through the Pallas kernel (interpret=True
 on CPU hosts); otherwise a pure-jnp implementation of the same rounds loop
@@ -46,47 +58,65 @@ from .ref import probe_and_commit_ref  # noqa: F401  (re-exported for tests)
 
 Array = Union[np.ndarray, jnp.ndarray]
 
-#: words packed per cache slot: key_hi, key_lo, stamp
-PACKED_WORDS = 3
+#: words packed per cache slot: key_hi, key_lo, stamp, insertion epoch
+PACKED_WORDS = 4
 
 
-def pack_words(key_hi: Array, key_lo: Array, stamp: Array) -> Array:
-    """Pack per-slot (key_hi, key_lo, stamp) into one ``(..., 3W)`` uint32
-    array -- the device state's lane-friendly layout.  The stamp words are
-    bit-reinterpreted (int32 -> uint32), so pack/unpack is exact."""
+def pack_words(key_hi: Array, key_lo: Array, stamp: Array, epoch: Array = None) -> Array:
+    """Pack per-slot (key_hi, key_lo, stamp[, epoch]) into one ``(..., 4W)``
+    uint32 array -- the device state's lane-friendly layout.  The stamp
+    words are bit-reinterpreted (int32 -> uint32), so pack/unpack is
+    exact.  ``epoch`` defaults to zeros (entries inserted before the
+    freshness subsystem existed, or with it disabled, carry epoch 0)."""
     if isinstance(key_hi, np.ndarray):
+        if epoch is None:
+            epoch = np.zeros(key_hi.shape, np.uint32)
         return np.concatenate(
             [
                 np.asarray(key_hi, np.uint32),
                 np.asarray(key_lo, np.uint32),
                 np.ascontiguousarray(np.asarray(stamp, np.int32)).view(np.uint32),
+                np.asarray(epoch, np.uint32),
             ],
             axis=-1,
         )
+    if epoch is None:
+        epoch = jnp.zeros(key_hi.shape, jnp.uint32)
     return jnp.concatenate(
         [
             key_hi.astype(jnp.uint32),
             key_lo.astype(jnp.uint32),
             stamp.astype(jnp.uint32),
+            epoch.astype(jnp.uint32),
         ],
         axis=-1,
     )
 
 
 def unpack_words(ks: Array) -> Tuple[Array, Array, Array]:
-    """``(..., 3W)`` packed words -> (key_hi, key_lo, stamp) views.
+    """``(..., 4W)`` packed words -> (key_hi, key_lo, stamp) views.
 
     For numpy inputs the three outputs are *views* into ``ks`` (the host
     engine mutates them in place); for jnp inputs they are slices of the
-    same buffer (XLA fuses the split into the consumer).
+    same buffer (XLA fuses the split into the consumer).  The epoch word
+    has its own accessor (``unpack_epoch``) so pre-freshness callers keep
+    their three-tuple destructuring.
     """
     w = ks.shape[-1] // PACKED_WORDS
     hi = ks[..., :w]
     lo = ks[..., w : 2 * w]
-    st = ks[..., 2 * w :]
+    st = ks[..., 2 * w : 3 * w]
     if isinstance(ks, np.ndarray):
         return hi, lo, st.view(np.int32)
     return hi, lo, st.astype(jnp.int32)
+
+
+def unpack_epoch(ks: Array) -> Array:
+    """``(..., 4W)`` packed words -> the insertion-epoch word (uint32).
+
+    A numpy input yields a mutable view (host engine); jnp a slice."""
+    w = ks.shape[-1] // PACKED_WORDS
+    return ks[..., 3 * w :]
 
 
 def plan_segments(
@@ -115,11 +145,14 @@ def resolve_conflicts(
     rows_hi: jnp.ndarray,  # (B, W) one pristine row per segment
     rows_lo: jnp.ndarray,
     rows_st: jnp.ndarray,
+    rows_ep: jnp.ndarray,  # (B, W) uint32 insertion epochs
     s_hi: jnp.ndarray,  # (B,) sorted request fields
     s_lo: jnp.ndarray,
     s_pos: jnp.ndarray,  # original batch positions (stamps follow arrival)
     s_admit: jnp.ndarray,
     s_static: jnp.ndarray,
+    s_epoch: jnp.ndarray,  # (B,) uint32 insertion epoch stamped on writes
+    s_minep: jnp.ndarray,  # (B,) uint32 freshness floor (0 = no expiry)
     leader: jnp.ndarray,
     seg_len: jnp.ndarray,
     clock: jnp.ndarray,
@@ -127,13 +160,14 @@ def resolve_conflicts(
     """Pure-jnp rounds loop: replay round j across all segments at once.
 
     Bit-exact with the sequential fori_loop commit: within a segment the
-    evolving row sees exactly the same match / argmin-eviction / stamp
-    sequence, and segments never share a set so rounds are independent.
+    evolving row sees exactly the same match / argmin-eviction / stamp /
+    staleness sequence, and segments never share a set so rounds are
+    independent.
     """
     b = rows_hi.shape[0]
 
     def body(j, carry):
-        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = carry
+        r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy = carry
         idx = jnp.minimum(leader + j, b - 1)
         act = j < seg_len
         hi_i = s_hi[idx]
@@ -143,22 +177,31 @@ def resolve_conflicts(
         pos_i = s_pos[idx]
         pm = (rows_hi == hi_i[:, None]) & (rows_lo == lo_i[:, None]) & (rows_hi != 0)
         pm = pm & ~is_pad(hi_i, lo_i)[:, None]
-        r_hi, r_lo, r_st, is_hit, way, do_write = conflict_round(
-            r_hi, r_lo, r_st, hi_i, lo_i, admit_i, static_i, clock + 1 + pos_i, act
+        pm_ep = jnp.where(pm, rows_ep, 0).max(axis=1)  # matched way's epoch
+        r_hi, r_lo, r_st, r_ep, is_hit, way, do_write, refresh = conflict_round(
+            r_hi, r_lo, r_st, r_ep, hi_i, lo_i, admit_i, static_i,
+            s_epoch[idx], s_minep[idx], clock + 1 + pos_i, act,
         )
         tgt = jnp.where(act, idx, b)
         p_hit = p_hit.at[tgt].set(pm.any(axis=1), mode="drop")
         p_way = p_way.at[tgt].set(jnp.argmax(pm, axis=1).astype(jnp.int32), mode="drop")
-        wr = wr.at[tgt].set(do_write & ~is_hit, mode="drop")
+        p_stale = p_stale.at[tgt].set(
+            pm.any(axis=1) & (pm_ep < s_minep[idx]), mode="drop"
+        )
+        p_ep = p_ep.at[tgt].set(pm_ep, mode="drop")
+        wr = wr.at[tgt].set(refresh, mode="drop")
         wy = wy.at[tgt].set(way, mode="drop")
-        return r_hi, r_lo, r_st, p_hit, p_way, wr, wy
+        return r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy
 
     init = (
         rows_hi,
         rows_lo,
         rows_st,
+        rows_ep,
         jnp.zeros(b, bool),
         jnp.zeros(b, jnp.int32),
+        jnp.zeros(b, bool),
+        jnp.zeros(b, jnp.uint32),
         jnp.zeros(b, bool),
         jnp.zeros(b, jnp.int32),
     )
@@ -173,13 +216,15 @@ def _pad(x: jnp.ndarray, target: int, value=0):
 
 
 def probe_and_commit_op(
-    ks: jnp.ndarray,  # (S, 3W) uint32 packed key/stamp state
+    ks: jnp.ndarray,  # (S, 4W) uint32 packed key/stamp/epoch state
     h_hi: jnp.ndarray,  # (B,) uint32 request hashes
     h_lo: jnp.ndarray,
     set_idx: jnp.ndarray,  # (B,) int32
     admit: jnp.ndarray,  # (B,) bool
     static_hit: jnp.ndarray,  # (B,) bool (static-layer hits never write)
     clock: jnp.ndarray,  # () int32
+    epochs: jnp.ndarray = None,  # (B,) uint32 write epochs (None -> 0)
+    min_epoch: jnp.ndarray = None,  # (B,) uint32 freshness floor (None -> 0)
     use_kernel: bool = False,
     interpret: bool = True,
     bm: int = 256,
@@ -187,29 +232,57 @@ def probe_and_commit_op(
     """Fused probe + batch commit over the packed state array.
 
     Returns the updated ``ks`` plus, per request (original batch order):
-    ``pre_hit``/``pre_way`` -- the probe outcome against pre-commit
-    state, and ``wrote``/``way`` -- the deferred value fill plan.  The
-    caller owns the clock bump and value scatter.
+    ``pre_hit``/``pre_way``/``pre_stale``/``pre_epoch`` -- the probe
+    outcome against pre-commit state (``pre_stale``: matched, but the
+    entry's epoch is below the request's ``min_epoch`` floor), and
+    ``wrote``/``way`` -- the deferred value fill plan (inserts *and*
+    stale refreshes).  The caller owns the clock bump and value scatter.
+    With ``min_epoch`` unset or zero nothing ever expires and the op is
+    bit-identical to the pre-freshness semantics.
     """
     b = h_hi.shape[0]
+    if epochs is None:
+        epochs = jnp.zeros((b,), jnp.uint32)
+    if min_epoch is None:
+        min_epoch = jnp.zeros((b,), jnp.uint32)
     if b == 0:
         z = jnp.zeros((0,), jnp.int32)
+        zb = jnp.zeros((0,), bool)
         return dict(
             ks=ks,
-            pre_hit=jnp.zeros((0,), bool), pre_way=z,
+            pre_hit=zb, pre_way=z,
+            pre_stale=zb, pre_epoch=jnp.zeros((0,), jnp.uint32),
             wrote=jnp.zeros((0,), bool), way=z,
         )
     order, seg_id, leader, seg_len, seg_set = plan_segments(set_idx)
-    rows = ks[seg_set]  # ONE gather: key + stamp words together
+    rows = ks[seg_set]  # ONE gather: key + stamp + epoch words together
     rows_hi, rows_lo, rows_st = unpack_words(rows)
+    rows_ep = unpack_epoch(rows)
     s_hi, s_lo = h_hi[order], h_lo[order]
     s_pos = order.astype(jnp.int32)
     s_admit, s_static = admit[order], static_hit[order]
+    s_epoch = epochs[order].astype(jnp.uint32)
+    s_minep = min_epoch[order].astype(jnp.uint32)
+    # Effective write epoch: a pristine *fresh* hit keeps its resident
+    # epoch.  A mid-batch conflict can evict such an entry and re-insert
+    # it in a later round (the caller serves and re-fills its probed,
+    # unchanged value -- no backend dispatch happens for it), so stamping
+    # the request epoch there would launder the entry's age.  Dispatched
+    # data (true misses, stale refreshes) stamps the request epoch.  The
+    # rule is idempotent, and with all-zero epochs it writes zero either
+    # way, so pre-freshness behavior is bit-identical.
+    s_rows = rows[seg_id]
+    sr_hi, sr_lo, _ = unpack_words(s_rows)
+    sr_ep = unpack_epoch(s_rows)
+    s_pm = (sr_hi == s_hi[:, None]) & (sr_lo == s_lo[:, None]) & (sr_hi != 0)
+    s_pm = s_pm & ~is_pad(s_hi, s_lo)[:, None]
+    s_pm_ep = jnp.where(s_pm, sr_ep, 0).max(axis=1)
+    s_epoch = jnp.where(s_pm.any(axis=1) & (s_pm_ep >= s_minep), s_pm_ep, s_epoch)
 
     if use_kernel:
         bp = ((b + bm - 1) // bm) * bm if b > bm else b
         col = lambda x: _pad(x, bp)[:, None]
-        r_rows, p_hit, p_way, wr, wy = _kernel_call(
+        r_rows, p_hit, p_way, p_stale, p_ep, wr, wy = _kernel_call(
             _pad(rows, bp),
             col(leader),
             col(seg_len),
@@ -218,6 +291,8 @@ def probe_and_commit_op(
             col(s_pos),
             col(s_admit.astype(jnp.int32)),
             col(s_static.astype(jnp.int32)),
+            col(s_epoch),
+            col(s_minep),
             jnp.reshape(clock.astype(jnp.int32), (1, 1)),
             bm=bm,
             interpret=interpret,
@@ -225,14 +300,18 @@ def probe_and_commit_op(
         r_rows = r_rows[:b]
         p_hit = p_hit[:b, 0] != 0
         p_way = p_way[:b, 0]
+        p_stale = p_stale[:b, 0] != 0
+        p_ep = p_ep[:b, 0]
         wr = wr[:b, 0] != 0
         wy = wy[:b, 0]
     else:
-        r_hi, r_lo, r_st, p_hit, p_way, wr, wy = resolve_conflicts(
-            rows_hi, rows_lo, rows_st, s_hi, s_lo, s_pos,
-            s_admit, s_static, leader, seg_len, clock,
+        r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy = (
+            resolve_conflicts(
+                rows_hi, rows_lo, rows_st, rows_ep, s_hi, s_lo, s_pos,
+                s_admit, s_static, s_epoch, s_minep, leader, seg_len, clock,
+            )
         )
-        r_rows = pack_words(r_hi, r_lo, r_st)
+        r_rows = pack_words(r_hi, r_lo, r_st, r_ep)
 
     # ONE scatter of the resolved packed rows; padded segments drop
     scat = jnp.where(leader < b, seg_set, ks.shape[0])
@@ -245,6 +324,8 @@ def probe_and_commit_op(
         ks=new_ks,
         pre_hit=unsort(p_hit),
         pre_way=unsort(p_way),
+        pre_stale=unsort(p_stale),
+        pre_epoch=unsort(p_ep),
         wrote=unsort(wr),
         way=unsort(wy),
     )

@@ -32,15 +32,33 @@ def probe_and_commit_ref(
     admit: np.ndarray,  # (B,) bool
     static_hit: np.ndarray,  # (B,) bool
     clock: int,
+    epoch: np.ndarray = None,  # (S, W) uint32 insertion epochs (None -> 0)
+    epochs: np.ndarray = None,  # (B,) uint32 write epochs (None -> 0)
+    min_epoch: np.ndarray = None,  # (B,) uint32 freshness floors (None -> 0)
 ) -> Dict[str, np.ndarray]:
     key_hi = np.array(key_hi, np.uint32)
     key_lo = np.array(key_lo, np.uint32)
     stamp = np.array(stamp, np.int32)
-    pre_hi, pre_lo = key_hi.copy(), key_lo.copy()
-    s_max = key_hi.shape[0] - 1
+    epoch = (
+        np.zeros(key_hi.shape, np.uint32)
+        if epoch is None
+        else np.array(epoch, np.uint32)
+    )
     b = len(h_hi)
+    epochs = (
+        np.zeros(b, np.uint32) if epochs is None else np.asarray(epochs, np.uint32)
+    )
+    min_epoch = (
+        np.zeros(b, np.uint32)
+        if min_epoch is None
+        else np.asarray(min_epoch, np.uint32)
+    )
+    pre_hi, pre_lo, pre_ep = key_hi.copy(), key_lo.copy(), epoch.copy()
+    s_max = key_hi.shape[0] - 1
     pre_hit = np.zeros(b, bool)
     pre_way = np.zeros(b, np.int32)
+    pre_stale = np.zeros(b, bool)
+    pre_epoch = np.zeros(b, np.uint32)
     wrote = np.zeros(b, bool)
     way_w = np.zeros(b, np.int32)
     clock = int(clock)
@@ -52,23 +70,38 @@ def probe_and_commit_ref(
         pm &= not pad
         pre_hit[i] = pm.any()
         pre_way[i] = int(pm.argmax())
+        pre_epoch[i] = np.where(pm, pre_ep[s], 0).max()
+        pre_stale[i] = bool(pm.any()) and int(pre_epoch[i]) < int(min_epoch[i])
         m = (key_hi[s] == h_hi[i]) & (key_lo[s] == h_lo[i]) & (key_hi[s] != 0)
         m &= not pad
         is_hit = bool(m.any())
         way = int(m.argmax()) if is_hit else int(stamp[s].argmin())
+        stale = is_hit and int(epoch[s, way]) < int(min_epoch[i])
         do_write = (not static_hit[i]) and (not pad) and (is_hit or bool(admit[i]))
+        refresh = do_write and ((not is_hit) or stale)
         if do_write and not oob:
             key_hi[s, way] = h_hi[i]
             key_lo[s, way] = h_lo[i]
             stamp[s, way] = clock + 1 + i
-        wrote[i] = do_write and not is_hit
+        if refresh and not oob:
+            # effective write epoch (mirrors probe_and_commit_op): a
+            # pristine *fresh* hit keeps its resident epoch, so a
+            # mid-batch evict + re-insert cannot launder the entry's age
+            if pre_hit[i] and not pre_stale[i]:
+                epoch[s, way] = pre_epoch[i]
+            else:
+                epoch[s, way] = epochs[i]
+        wrote[i] = refresh
         way_w[i] = way
     return dict(
         key_hi=key_hi,
         key_lo=key_lo,
         stamp=stamp,
+        epoch=epoch,
         pre_hit=pre_hit,
         pre_way=pre_way,
+        pre_stale=pre_stale,
+        pre_epoch=pre_epoch,
         wrote=wrote,
         way=way_w,
     )

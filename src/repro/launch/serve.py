@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import sys
 import tempfile
 import time
@@ -39,6 +40,7 @@ from ..loadgen import (
 from ..serving import (
     BucketSpec,
     Cluster,
+    FreshnessSpec,
     HedgeSpec,
     RebalanceSpec,
     ResilienceSpec,
@@ -57,6 +59,21 @@ def _parse_fault_shard(s: str):
     except (ValueError, TypeError):
         raise argparse.ArgumentTypeError(
             f"--fault-shard wants N@T (shard index @ crash time in virtual "
+            f"seconds), got {s!r}"
+        )
+
+
+def _parse_ttl_topic(s: str):
+    """``TAU:SECONDS`` -> (topic id, TTL seconds)."""
+    try:
+        tau, sec = s.split(":", 1)
+        ttl = float(sec)
+        if not ttl > 0:
+            raise ValueError("TTL must be > 0")
+        return int(tau), ttl
+    except (ValueError, TypeError):
+        raise argparse.ArgumentTypeError(
+            f"--ttl-topic wants TAU:SECONDS (topic id : TTL in virtual "
             f"seconds), got {s!r}"
         )
 
@@ -164,6 +181,28 @@ def main(argv=None) -> int:
         "answered with backend-identical values) drops below this bound",
     )
     ap.add_argument(
+        "--ttl-s", type=float, default=0.0,
+        help="default result TTL in virtual seconds (0 = entries never "
+        "expire).  Closed-loop runs map the synthetic log's time axis to "
+        "seconds at one day = 86400s; open-loop runs use the arrival clock",
+    )
+    ap.add_argument(
+        "--ttl-topic", type=_parse_ttl_topic, action="append", default=[],
+        metavar="TAU:SECONDS",
+        help="per-topic TTL override (repeatable), e.g. --ttl-topic 3:60",
+    )
+    ap.add_argument(
+        "--stale-policy", default="miss",
+        choices=("miss", "serve_stale_while_revalidate"),
+        help="what an expired hit does: re-fetch before answering (miss) "
+        "or answer stale now and revalidate through the deferred fill",
+    )
+    ap.add_argument(
+        "--max-stale-rate", type=float, default=1.0,
+        help="exit nonzero when the stale-serve rate (stale_served / "
+        "requests) exceeds this bound (serve_stale_while_revalidate only)",
+    )
+    ap.add_argument(
         "--drift-phases", type=int, default=0,
         help="serve a piecewise-stationary drift stream with this many "
         "popularity phases (oracle topics, no LDA) instead of the "
@@ -213,6 +252,15 @@ def main(argv=None) -> int:
         # fault injection implies the resilience layer: without it any
         # injected fault would simply propagate and kill the run
         resilience=ResilienceSpec(probe_interval_s=0.005) if faults else None,
+        freshness=(
+            FreshnessSpec(
+                ttl_s=args.ttl_s if args.ttl_s > 0 else math.inf,
+                topic_ttl_s=dict(args.ttl_topic),
+                stale_policy=args.stale_policy,
+            )
+            if (args.ttl_s > 0 or args.ttl_topic)
+            else None
+        ),
     )
     print(f"serving spec: {spec.to_json()}")
 
@@ -321,6 +369,9 @@ def main(argv=None) -> int:
             )
             verdict = SLOSpec(p99_ms=args.slo_p99_ms).evaluate(rep)
             print(verdict.describe())
+            fresh_ok = _report_freshness(
+                spec, cluster.stats, args.max_stale_rate
+            )
             available = True
             if faults:
                 served = ~np.isnan(res.queue_s)
@@ -360,14 +411,24 @@ def main(argv=None) -> int:
                         f"--min-availability {args.min_availability:.4f}"
                     )
                 ckpt_tmp.cleanup()
-            return 0 if (verdict.ok and available) else 1
+            return 0 if (verdict.ok and available and fresh_ok) else 1
         # time serving only: construction above preloads the static layer
         # through the model backend and warms per-shard jits, which would
         # otherwise skew the shards=1 vs shards=N comparison
         t0 = time.time()
+        # closed-loop freshness clock: the synthetic log's time axis (days
+        # for the calibrated log, one "day" per phase for drift) mapped to
+        # virtual seconds, advanced to each batch's first arrival
+        ts_test = (
+            np.asarray(synth.timestamps, np.float64)[log.n_train :] * 86400.0
+            if spec.freshness is not None
+            else None
+        )
         # serve every batch including the ragged tail, so the reported hit
         # rate covers the whole test stream
         for lo in range(0, len(test), args.batch):
+            if ts_test is not None:
+                cluster.advance_time(float(ts_test[lo]))
             cluster.serve(test[lo : lo + args.batch])
         dt = time.time() - t0
         s = cluster.stats
@@ -396,13 +457,41 @@ def main(argv=None) -> int:
                 f"(check every {args.rebalance} batches, "
                 f"decay={args.rebalance_decay})"
             )
+        fresh_ok = _report_freshness(spec, s, args.max_stale_rate)
         if args.shards > 1:
             for i, ss in enumerate(cluster.shard_stats):
                 print(
                     f"  shard {i}: requests={ss.requests} "
                     f"hit_rate={ss.hit_rate:.4f}"
                 )
-    return 0
+    return 0 if fresh_ok else 1
+
+
+def _report_freshness(spec: ServingSpec, s, max_stale_rate: float) -> bool:
+    """Print the freshness stats line; False = the run must exit nonzero
+    (stale-serve bound exceeded, or the zero-violation tripwire fired)."""
+    if spec.freshness is None:
+        return True
+    stale_rate = s.stale_served / max(s.requests, 1)
+    print(
+        f"freshness: expired={s.expired} stale_served={s.stale_served} "
+        f"(stale_rate={stale_rate:.4f}) revalidations={s.revalidations} "
+        f"violations={s.freshness_violations} invalidations={s.invalidations}"
+    )
+    ok = True
+    if stale_rate > max_stale_rate:
+        print(
+            f"FRESHNESS FAIL: stale_rate {stale_rate:.4f} > "
+            f"--max-stale-rate {max_stale_rate:.4f}"
+        )
+        ok = False
+    if s.freshness_violations:
+        print(
+            f"FRESHNESS FAIL: {s.freshness_violations} stale values served "
+            "without a revalidation in flight"
+        )
+        ok = False
+    return ok
 
 
 if __name__ == "__main__":

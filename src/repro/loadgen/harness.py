@@ -369,7 +369,8 @@ def _reset_stats(server: Server) -> None:
             "requests", "hits", "static_hits", "topic_hits", "backend_calls",
             "hedged_calls", "admitted", "coalesced", "padded", "batches",
             "rebalances", "migrated", "degraded", "retried", "failed_over",
-            "timeouts",
+            "timeouts", "expired", "stale_served", "revalidations",
+            "freshness_violations", "invalidations",
         ):
             setattr(b.stats, f, getattr(fresh, f))
 
@@ -422,6 +423,7 @@ def run_open_loop(
     warmup: bool = True,
     clock: Callable[[], float] = time.perf_counter,
     collect: bool = False,
+    invalidations=None,
 ) -> LoadResult:
     """Plan batches in virtual time, then serve them for real.
 
@@ -440,6 +442,13 @@ def run_open_loop(
     ``collect=True`` the served values and hit mask are gathered into
     the result (arrival order; zeros/False for shed requests) for
     availability checks against a backend oracle.
+
+    ``invalidations`` (an
+    :class:`repro.querylog.synth.InvalidationStream`, or one per tenant)
+    replays invalidation events against each tenant's server in the
+    same virtual time: events due at or before a batch's dispatch time
+    land before it serves, so freshness episodes -- like fault
+    episodes -- are a deterministic function of the plan and the seeds.
     """
     srv = _as_list(servers, workload.n_tenants, "servers")
     buckets = (
@@ -453,6 +462,11 @@ def run_open_loop(
         for k, s in enumerate(srv):
             sizes = {len(b.idx) for b in plan.batches if b.tenant == k}
             warmup_server(s, sizes)
+    invals = (
+        [None] * workload.n_tenants
+        if invalidations is None
+        else _as_list(invalidations, workload.n_tenants, "invalidations")
+    )
 
     n = len(workload)
     service = np.full(n, np.nan)
@@ -465,6 +479,9 @@ def run_open_loop(
         advance = getattr(server, "advance_time", None)
         if advance is not None:
             advance(batch.t_dispatch)
+        stream = invals[batch.tenant]
+        if stream is not None:
+            stream.apply(server, batch.t_dispatch)
         t0 = clock()
         v, h = server.serve(keys)
         dt = clock() - t0

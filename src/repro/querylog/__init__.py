@@ -1,14 +1,30 @@
 """Query-log substrate: synthetic generation, real-log parsing, splitting."""
 from .parse import ParsedLog, normalize_query, parse_aol, parse_msn, time_split
-from .synth import DriftConfig, SynthConfig, SynthLog, generate, generate_drifting
+from .synth import (
+    INVAL_KEY,
+    INVAL_TOPIC,
+    DriftConfig,
+    InvalidationConfig,
+    InvalidationStream,
+    SynthConfig,
+    SynthLog,
+    generate,
+    generate_drifting,
+    generate_invalidations,
+)
 
 __all__ = [
     "DriftConfig",
+    "INVAL_KEY",
+    "INVAL_TOPIC",
+    "InvalidationConfig",
+    "InvalidationStream",
     "ParsedLog",
     "SynthConfig",
     "SynthLog",
     "generate",
     "generate_drifting",
+    "generate_invalidations",
     "normalize_query",
     "parse_aol",
     "parse_msn",

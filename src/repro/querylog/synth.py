@@ -391,3 +391,138 @@ def generate_drifting(cfg: DriftConfig) -> SynthLog:
         phi=None,
         config=None,
     )
+
+
+# ---------------------------------------------------------------------------
+# Invalidation-event streams (freshness; docs/freshness.md)
+# ---------------------------------------------------------------------------
+
+#: event kinds in an :class:`InvalidationStream`
+INVAL_KEY = 0
+INVAL_TOPIC = 1
+
+
+@dataclass
+class InvalidationConfig:
+    """Seeded invalidation processes riding a query stream's virtual time.
+
+    Real backends re-crawl and re-rank: a result set becomes wrong, not
+    just cold.  This models the two granularities the serving tier
+    supports (see ``Broker.invalidate``): whole-topic flushes (an index
+    segment for one topic was rebuilt) as independent per-topic Poisson
+    processes, and single-key events (one query's results changed) as a
+    popularity-weighted Poisson process over the stream's requested
+    keys -- popular content is re-crawled more often.
+
+    Rates are events per unit of the log's own time axis (days for
+    :func:`generate`, phases for :func:`generate_drifting`), so one
+    config composes with either stream family unchanged.
+    """
+
+    #: mean topic-flush events per topic per time unit
+    topic_rate: float = 0.0
+    #: mean key events per time unit (whole stream)
+    key_rate: float = 0.0
+    #: restrict topic events to these topics (None = every topic)
+    topics: Optional[Tuple[int, ...]] = None
+    #: weight key choice by request frequency (False = uniform over the
+    #: distinct requested keys)
+    popularity_weighted: bool = True
+    seed: int = 0
+
+
+@dataclass
+class InvalidationStream:
+    """Time-ordered invalidation events with a replay cursor.
+
+    ``kinds[i]`` is :data:`INVAL_KEY` or :data:`INVAL_TOPIC`;
+    ``targets[i]`` is the key id or topic id.  ``take_until`` is the
+    replay interface: the harness (or any driver) calls it with each
+    batch's dispatch time and applies the returned events before
+    serving, so an episode replays bit-identically on any deployment.
+    """
+
+    times: np.ndarray  # (m,) float64, ascending
+    kinds: np.ndarray  # (m,) int8
+    targets: np.ndarray  # (m,) int64
+    _cursor: int = 0
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+    def reset(self) -> None:
+        self._cursor = 0
+
+    def take_until(self, t: float) -> List[Tuple[int, int]]:
+        """Consume and return every not-yet-replayed event with
+        ``time <= t`` as ``(kind, target)`` pairs, in time order."""
+        lo = self._cursor
+        hi = int(np.searchsorted(self.times, float(t), side="right"))
+        self._cursor = max(lo, hi)
+        return [
+            (int(self.kinds[i]), int(self.targets[i])) for i in range(lo, self._cursor)
+        ]
+
+    def apply(self, server, t: float) -> int:
+        """Replay due events against a Broker/Cluster (anything with
+        ``invalidate``); returns the number of events applied."""
+        events = self.take_until(t)
+        for kind, target in events:
+            if kind == INVAL_TOPIC:
+                server.invalidate(topic=target)
+            else:
+                server.invalidate(keys=np.asarray([target], np.int64))
+        return len(events)
+
+
+def generate_invalidations(
+    cfg: InvalidationConfig, log: SynthLog
+) -> InvalidationStream:
+    """Draw an invalidation stream against ``log``'s time axis (seeded,
+    independent of the query draw -- the same log composes with many
+    invalidation scenarios)."""
+    rng = np.random.default_rng(cfg.seed)
+    t_end = float(log.timestamps[-1]) if len(log.timestamps) else 1.0
+    t_end = max(t_end, 1e-9)
+    times, kinds, targets = [], [], []
+
+    topical = np.flatnonzero(log.true_topic != NO_TOPIC)
+    all_topics = np.unique(log.true_topic[topical]) if len(topical) else np.array([], np.int64)
+    topic_pool = (
+        np.asarray(sorted(cfg.topics), np.int64)
+        if cfg.topics is not None
+        else all_topics
+    )
+    if cfg.topic_rate > 0:
+        for t in topic_pool:
+            m = int(rng.poisson(cfg.topic_rate * t_end))
+            if m:
+                times.append(rng.random(m) * t_end)
+                kinds.append(np.full(m, INVAL_TOPIC, np.int8))
+                targets.append(np.full(m, int(t), np.int64))
+
+    if cfg.key_rate > 0:
+        freq = np.bincount(log.keys, minlength=log.n_queries)
+        requested = np.flatnonzero(freq > 0)
+        if len(requested):
+            m = int(rng.poisson(cfg.key_rate * t_end))
+            if m:
+                if cfg.popularity_weighted:
+                    p = freq[requested].astype(np.float64)
+                    p /= p.sum()
+                    ks = rng.choice(requested, size=m, p=p)
+                else:
+                    ks = rng.choice(requested, size=m)
+                times.append(rng.random(m) * t_end)
+                kinds.append(np.full(m, INVAL_KEY, np.int8))
+                targets.append(np.asarray(ks, np.int64))
+
+    if not times:
+        z = np.zeros(0)
+        return InvalidationStream(z, z.astype(np.int8), z.astype(np.int64))
+    times = np.concatenate(times)
+    kinds = np.concatenate(kinds)
+    targets = np.concatenate(targets)
+    # deterministic total order: time, then kind, then target
+    order = np.lexsort((targets, kinds, times))
+    return InvalidationStream(times[order], kinds[order], targets[order])

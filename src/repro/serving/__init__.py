@@ -29,7 +29,7 @@ from .resilience import (
     ResilienceSpec,
     ShardHealth,
 )
-from .spec import BatchPolicySpec, BucketSpec, HedgeSpec, ServingSpec
+from .spec import BatchPolicySpec, BucketSpec, FreshnessSpec, HedgeSpec, ServingSpec
 
 __all__ = [
     "Backend",
@@ -41,6 +41,7 @@ __all__ = [
     "DOWN",
     "DYNAMIC",
     "DeviceCacheConfig",
+    "FreshnessSpec",
     "HEALTHY",
     "HedgePolicy",
     "HedgeSpec",

@@ -47,6 +47,7 @@ import numpy as np
 
 from ..core.alloc import allocation_divergence
 from ..core.spec import CacheSpec
+from ..freshness import FreshnessRuntime, FreshnessSpec
 from ..train import checkpoint as ckpt_lib
 from .device_cache import (
     DYNAMIC,
@@ -90,6 +91,20 @@ class BrokerStats:
     failed_over: int = 0
     #: shard serves that exceeded the resilience timeout
     timeouts: int = 0
+    #: topic-layer hits whose entry had outlived its TTL (or fell under
+    #: an invalidation floor) at probe time, both stale policies
+    expired: int = 0
+    #: expired hits answered from the cached value anyway
+    #: (``stale_policy="serve_stale_while_revalidate"``)
+    stale_served: int = 0
+    #: backend refreshes triggered by stale serves (after coalescing)
+    revalidations: int = 0
+    #: stale values served *without* a revalidation in flight -- must
+    #: stay 0; a nonzero count means the freshness contract broke
+    freshness_violations: int = 0
+    #: invalidation events applied (slots zeroed for key events, one per
+    #: topic/flush event for epoch-bump invalidations)
+    invalidations: int = 0
     #: the online popularity tracker's state: exponentially-decayed served
     #: request counts per tracked topic (sorted id order) + a trailing
     #: no-topic bucket; shares memory with ``Broker.tracker`` and is None
@@ -130,6 +145,7 @@ class Broker:
         rebalance: Optional[RebalanceSpec] = None,
         bucket: Optional[BucketSpec] = None,
         defer_fill: Optional[bool] = None,
+        freshness: Optional[FreshnessSpec] = None,
     ):
         self.cache = cache
         #: declarative configuration this cache was compiled from (embedded
@@ -199,6 +215,15 @@ class Broker:
         if rebalance is not None:
             self.tracker = rebalance.to_tracker(cache.topic_ids)
             self.stats.topic_counts = self.tracker.counts
+        #: freshness clock (TTL expiry + invalidation floors); None =
+        #: entries never expire and every engine call carries zero
+        #: epochs/floors -- bit-identical to pre-freshness serving
+        self.freshness_spec = freshness
+        self.freshness: Optional[FreshnessRuntime] = (
+            FreshnessRuntime(freshness, cache.topic_ids)
+            if freshness is not None
+            else None
+        )
         self._bind_cache(cache)
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(backends)))
         self._closed = False
@@ -296,6 +321,7 @@ class Broker:
             engine=spec.engine,
             rebalance=spec.rebalance,
             bucket=spec.bucket,
+            freshness=spec.freshness,
         )
 
     # -- lifecycle -----------------------------------------------------------
@@ -323,6 +349,27 @@ class Broker:
         return False
 
     # -- serving -------------------------------------------------------------
+
+    def advance_time(self, t_s: float) -> None:
+        """Advance the freshness clock to virtual time ``t_s`` (seconds).
+
+        The open-loop load harness calls this with each batch's arrival
+        time before serving it; trace-driven callers without a clock can
+        skip it (the clock stays at 0 and only invalidation floors can
+        expire entries).  No-op without a :class:`FreshnessSpec`.
+        """
+        if self.freshness is not None:
+            self.freshness.advance(t_s)
+
+    def _freshness_arrays(self, parts: np.ndarray):
+        """Per-request (min_epoch, epochs) for a (padded) batch.  Always
+        arrays -- the jitted entry points keep one signature whether
+        freshness is configured or not, so enabling it compiles zero new
+        shapes (pinned by the trace-count regression tests)."""
+        if self.freshness is None:
+            z = np.zeros(len(parts), np.uint32)
+            return z, z
+        return self.freshness.min_epoch(parts), self.freshness.epochs(len(parts))
 
     def serve(
         self, query_ids: np.ndarray, topics: Optional[np.ndarray] = None
@@ -365,16 +412,33 @@ class Broker:
         h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
         h_hi, h_lo, parts = self._pad_to_bucket(h_hi, h_lo, parts)
+        min_ep, eps = self._freshness_arrays(parts)
         if self.fused:
-            out = self._serve_fused(query_ids, parts, h_hi, h_lo)
+            out = self._serve_fused(query_ids, parts, h_hi, h_lo, min_ep, eps)
             self._after_batch(topics)
             return out
-        hit, layer, value = self._probe(
-            self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts)
+        hit, layer, value, stale = self._probe(
+            self.state, jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(parts),
+            jnp.asarray(min_ep),
         )
         hit = np.asarray(hit)[:b]
         layer = np.asarray(layer)[:b]
+        stale = np.asarray(stale)[:b]
         values = np.array(value)[:b]  # writable copy, pads sliced off
+        self.stats.expired += int(stale.sum())
+        swr = (
+            self.freshness_spec is not None
+            and self.freshness_spec.stale_policy == "serve_stale_while_revalidate"
+        )
+        if not swr:
+            # policy "miss": an expired hit re-fetches before answering
+            hit = hit & ~stale
+            # tripwire, not bookkeeping: any expired entry still claiming
+            # a fresh hit after the mask would be served stale under a
+            # policy that forbids it -- structurally zero, counted so the
+            # stat (and the launch/CI asserts on it) trip if a refactor
+            # ever breaks the masking
+            self.stats.freshness_violations += int((hit & stale).sum())
 
         miss_idx = np.flatnonzero(~hit)
         if len(miss_idx):
@@ -390,16 +454,34 @@ class Broker:
                 if self.admission is not None
                 else np.ones(len(miss_idx), bool)
             )
-            self.stats.admitted += int(admit.sum())
+            # expired entries refresh regardless of admission (they are
+            # resident); only true misses consult the gate
+            self.stats.admitted += int((admit & ~stale[miss_idx]).sum())
             self._commit_bucketed(
-                h_hi[miss_idx], h_lo[miss_idx], parts[miss_idx], miss_values, admit
+                h_hi[miss_idx], h_lo[miss_idx], parts[miss_idx], miss_values, admit,
+                epochs=eps[miss_idx], min_epoch=min_ep[miss_idx],
             )
-        # hits refresh recency too (exact LRU semantics)
+        # hits refresh recency too (exact LRU semantics); a stale
+        # serve-while-revalidate hit additionally carries its backend
+        # refresh value into the same commit (the engines only write
+        # values where the entry is stale)
         hit_idx = np.flatnonzero(hit & (layer == 1))
         if len(hit_idx):
+            commit_vals = values[hit_idx]
+            if swr:
+                reval = np.flatnonzero(stale[hit_idx])
+                if len(reval):
+                    self.stats.stale_served += len(reval)
+                    uniq, inverse = np.unique(
+                        query_ids[hit_idx][reval], return_inverse=True
+                    )
+                    self.stats.revalidations += len(uniq)
+                    commit_vals = commit_vals.copy()
+                    commit_vals[reval] = self._dispatch(uniq)[inverse]
             self._commit_bucketed(
-                h_hi[hit_idx], h_lo[hit_idx], parts[hit_idx], values[hit_idx],
+                h_hi[hit_idx], h_lo[hit_idx], parts[hit_idx], commit_vals,
                 np.zeros(len(hit_idx), bool),  # refresh only, never insert
+                epochs=eps[hit_idx], min_epoch=min_ep[hit_idx],
             )
         self.stats.requests += b
         self.stats.hits += int(hit.sum())
@@ -421,7 +503,9 @@ class Broker:
         h_hi, h_lo, parts, _, _ = pad_batch(h_hi, h_lo, parts, self.cache.k, bp)
         return h_hi, h_lo, parts
 
-    def _commit_bucketed(self, h_hi, h_lo, parts, values, admit) -> None:
+    def _commit_bucketed(
+        self, h_hi, h_lo, parts, values, admit, epochs=None, min_epoch=None
+    ) -> None:
         """Unfused-path commit over a data-dependent subset (misses or hit
         refreshes), padded up to its bucket so the jitted commit compiles
         O(#buckets) shapes instead of one per subset length."""
@@ -431,6 +515,12 @@ class Broker:
         h_hi, h_lo, parts, values, admit = pad_batch(
             h_hi, h_lo, parts, self.cache.k, bp, values=values, admit=admit
         )
+        eps = np.zeros(bp, np.uint32)
+        minep = np.zeros(bp, np.uint32)
+        if epochs is not None:
+            eps[:n] = epochs
+        if min_epoch is not None:
+            minep[:n] = min_epoch
         self.state = self._commit(
             self.state,
             jnp.asarray(h_hi),
@@ -438,6 +528,8 @@ class Broker:
             jnp.asarray(parts),
             jnp.asarray(values),
             jnp.asarray(admit),
+            jnp.asarray(eps),
+            jnp.asarray(minep),
         )
 
     def _after_batch(self, topics: np.ndarray) -> None:
@@ -454,10 +546,14 @@ class Broker:
         if every and self.stats.batches % every == 0:
             self.rebalance()
 
-    def _serve_fused(self, query_ids, parts, h_hi, h_lo) -> Tuple[np.ndarray, np.ndarray]:
+    def _serve_fused(
+        self, query_ids, parts, h_hi, h_lo, min_ep, eps
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """One fused device call per batch; the request arrays may carry a
         bucket-padded tail (``len(h_hi) >= len(query_ids)``) of reserved
-        pad keys -- inert in the engines, sliced off the outputs here."""
+        pad keys -- inert in the engines, sliced off the outputs here.
+        ``min_ep``/``eps`` are the batch's freshness floors and write
+        epochs (zeros without a spec); expiry rides the same call."""
         b = len(query_ids)
         bp = len(h_hi)
         admit = (
@@ -470,9 +566,10 @@ class Broker:
         if self.engine == "host":
             # the broker owns its state: the previous batch's arrays are
             # consumed in place (the host-engine analogue of jit donation)
-            hit, layer, value, self.state, (set_idx, wrote, way) = (
+            hit, layer, value, stale, self.state, (set_idx, wrote, way) = (
                 self.cache.probe_and_commit_host(
-                    self.state, h_hi, h_lo, parts, admit, inplace=True
+                    self.state, h_hi, h_lo, parts, admit,
+                    epochs=eps, min_epoch=min_ep, inplace=True,
                 )
             )
         else:
@@ -481,8 +578,7 @@ class Broker:
                 # double-buffered fill: the previous batch's value scatter
                 # rides inside this fused call (applied before its probe),
                 # with the plan padded to this batch's bucket
-                self._pending_fill = None
-                hit, layer, value, self.state, (set_idx, wrote, way) = (
+                hit, layer, value, stale, new_state, (set_idx, wrote, way) = (
                     self._fused_fill_step(
                         self.state,
                         *self._pad_plan(pending, bp),
@@ -490,20 +586,46 @@ class Broker:
                         jnp.asarray(h_lo),
                         jnp.asarray(parts),
                         jnp.asarray(admit),
+                        jnp.asarray(eps),
+                        jnp.asarray(min_ep),
                     )
                 )
+                # the plan is consumed only once the call was issued
+                # against it: a raise above leaves it pending, so a retry
+                # or flush() still lands the values instead of losing them
+                self._pending_fill = None
+                self.state = new_state
             else:
                 self.flush()  # plan larger than this bucket: standalone fill
-                hit, layer, value, self.state, (set_idx, wrote, way) = self._fused_step(
-                    self.state,
-                    jnp.asarray(h_hi),
-                    jnp.asarray(h_lo),
-                    jnp.asarray(parts),
-                    jnp.asarray(admit),
+                hit, layer, value, stale, self.state, (set_idx, wrote, way) = (
+                    self._fused_step(
+                        self.state,
+                        jnp.asarray(h_hi),
+                        jnp.asarray(h_lo),
+                        jnp.asarray(parts),
+                        jnp.asarray(admit),
+                        jnp.asarray(eps),
+                        jnp.asarray(min_ep),
+                    )
                 )
         hit = np.asarray(hit)[:b]
         layer = np.asarray(layer)[:b]
+        stale = np.asarray(stale)[:b]
         values = np.array(value)  # (bp, V) writable; sliced on return
+        self.stats.expired += int(stale.sum())
+        swr = (
+            self.freshness_spec is not None
+            and self.freshness_spec.stale_policy == "serve_stale_while_revalidate"
+        )
+        if not swr:
+            # policy "miss": an expired hit re-fetches before answering --
+            # the engines already reserved its slot for the refresh
+            # (``wrote`` covers stale hits), so it joins the miss dispatch
+            # and its backend value lands through the same deferred fill
+            hit = hit & ~stale
+            # tripwire mirroring the unfused path: stale serves under
+            # policy "miss" are violations, structurally zero
+            self.stats.freshness_violations += int((hit & stale).sum())
         miss_idx = np.flatnonzero(~hit)
         if len(miss_idx):
             if self.coalesce:
@@ -512,14 +634,30 @@ class Broker:
                 values[miss_idx] = self._dispatch(uniq)[inverse]
             else:
                 values[miss_idx] = self._dispatch(query_ids[miss_idx])
-            self.stats.admitted += int(admit[miss_idx].sum())
+            # expired entries refresh regardless of admission (they are
+            # resident); only true misses consult the gate
+            self.stats.admitted += int((admit[miss_idx] & ~stale[miss_idx]).sum())
+        # serve-stale-while-revalidate: answer stale hits from the cached
+        # value *now*, fetch the fresh one too, and route it into the
+        # reserved slot via the deferred fill -- the caller sees bounded
+        # staleness instead of backend latency
+        fill_vals = values
+        if swr:
+            reval_idx = np.flatnonzero(hit & stale)
+            if len(reval_idx):
+                self.stats.stale_served += len(reval_idx)
+                uniq, inverse = np.unique(query_ids[reval_idx], return_inverse=True)
+                self.stats.revalidations += len(uniq)
+                fill_vals = values.copy()
+                fill_vals[reval_idx] = self._dispatch(uniq)[inverse]
         # deferred fill: scatter results into the slots the fused call
-        # reserved (hit refreshes kept their values; only inserts write)
+        # reserved (fresh hit refreshes kept their values; inserts and
+        # stale revalidations write)
         wrote_np = np.asarray(wrote)
         if wrote_np.any():
             if self.engine == "host":
                 self.state = self.cache.fill_values_host(
-                    self.state, set_idx, wrote_np, way, values, inplace=True
+                    self.state, set_idx, wrote_np, way, fill_vals, inplace=True
                 )
             elif self.defer_fill:
                 # double-buffer: hold the compressed plan; it lands inside
@@ -530,11 +668,11 @@ class Broker:
                 self._pending_fill = (
                     np.asarray(set_idx)[sel],
                     np.asarray(way)[sel],
-                    values[sel],
+                    fill_vals[sel],
                 )
             else:
                 self.state = self._fill(
-                    self.state, set_idx, wrote, way, jnp.asarray(values)
+                    self.state, set_idx, wrote, way, jnp.asarray(fill_vals)
                 )
         self.stats.requests += b
         self.stats.hits += int(hit.sum())
@@ -573,10 +711,58 @@ class Broker:
         pending = self._pending_fill
         if pending is None:
             return
-        self._pending_fill = None
         n = len(pending[0])
         bp = self.bucket.padded_len(n) if self.bucket is not None else n
         self.state = self._fill(self.state, *self._pad_plan(pending, bp))
+        # consumed only after the fill was issued: a raise above keeps the
+        # plan pending, so a retrying caller (resilient dispatch) flushes
+        # again instead of silently losing the values
+        self._pending_fill = None
+
+    # -- invalidation --------------------------------------------------------
+
+    def invalidate(
+        self,
+        keys: Optional[np.ndarray] = None,
+        topic: Optional[int] = None,
+    ) -> int:
+        """Invalidate cached results: by key, by topic, or everything.
+
+        Exactly one of ``keys``/``topic`` must be given.  ``keys`` zeroes
+        the matching resident slots host-side (control-plane traffic;
+        returns the number of slots dropped).  ``topic`` is O(1): the
+        topic's partition floor jumps above the current epoch and every
+        resident entry of the partition expires at once -- no cache words
+        move, the next probes simply see them stale (then refresh or
+        re-fetch per the stale policy).  ``topic=-1`` flushes every
+        partition.  Topic invalidation needs a :class:`FreshnessSpec`
+        (the epoch machinery); key invalidation works on any broker.
+        """
+        if (keys is None) == (topic is None):
+            raise ValueError("invalidate() takes exactly one of keys= or topic=")
+        if topic is not None:
+            if self.freshness is None:
+                raise ValueError(
+                    "topic invalidation uses epoch floors and needs a "
+                    "FreshnessSpec; pass keys= for slot-zeroing invalidation "
+                    "or build the broker with freshness configured"
+                )
+            if int(topic) < 0:
+                self.freshness.flush_all()
+            else:
+                part = int(self.cache.parts_for(np.asarray([int(topic)]))[0])
+                self.freshness.flush_topic(part)
+            self.stats.invalidations += 1
+            return 0
+        keys = np.asarray(keys)
+        if len(keys) == 0:
+            return 0
+        self.flush()  # pending values must land before slots are dropped
+        h_hi, h_lo = pack_hashes(splitmix64(keys))
+        parts = np.asarray(self.cache.parts_for(np.asarray(self.topic_of(keys))))
+        self.state, n = self.cache.invalidate_keys(self.state, h_hi, h_lo, parts)
+        self.stats.invalidations += n
+        return n
 
     def _dispatch(self, miss_ids: np.ndarray) -> np.ndarray:
         """Micro-batched backend dispatch with hedging."""
@@ -686,6 +872,11 @@ class Broker:
     def save(self, ckpt_dir: str, step: int) -> str:
         self.flush()  # a pending value fill is part of the state
         tree = {"cache": self.state, "stats": self._stats_tree()}
+        if self.freshness is not None:
+            # the clock and invalidation floors are state: a restored
+            # broker must keep enforcing TTLs from where it left off
+            # (entries must not un-expire across a restart)
+            tree["freshness"] = self.freshness.tree()
         if self.spec is not None:
             tree["spec_json"] = np.frombuffer(
                 self.spec.to_json().encode("utf-8"), dtype=np.uint8
@@ -748,9 +939,20 @@ class Broker:
             # let the tracker cold-start from its zero counts
             del stats_tree["topic_counts"]
         tree_like = {"cache": state_template, "stats": stats_tree}
+        if (
+            self.freshness is not None
+            and ckpt_lib.load_leaf(ckpt_dir, step, "freshness/floors") is not None
+        ):
+            # freshness leaves restore only when both sides have them: a
+            # pre-freshness checkpoint leaves the live clock untouched
+            # (cold start), and a freshness checkpoint restored into a
+            # TTL-less broker has no runtime to land in
+            tree_like["freshness"] = self.freshness.tree()
         tree, got = ckpt_lib.restore(ckpt_dir, tree_like, step)
         if pending_cache is not None:
             self._bind_cache(pending_cache)
+        if "freshness" in tree:
+            self.freshness.load(tree["freshness"])
         self.state = jax.tree.map(jnp.asarray, tree["cache"])
         for k, v in tree["stats"].items():
             if k == "topic_counts":

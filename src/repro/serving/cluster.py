@@ -47,6 +47,7 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from ..freshness import FreshnessRuntime
 from ..train import checkpoint as ckpt_lib
 from .broker import Backend, Broker, BrokerStats
 from .device_cache import STDDeviceCache, splitmix64
@@ -107,6 +108,10 @@ class Cluster:
         self._corrupted = [False] * len(brokers)
         #: per-shard dispatch sequence numbers (backoff jitter seeding)
         self._seq = [0] * len(brokers)
+        #: invalidation events that arrived while a shard was DOWN,
+        #: replayed on top of the restored checkpoint by recover_shard
+        #: (the checkpoint may predate the event)
+        self._pending_inval: List[list] = [[] for _ in brokers]
         # virtual clock: the open-loop harness drives it via advance_time
         # (deterministic fault episodes); otherwise relative wall time
         self._now = 0.0
@@ -238,6 +243,10 @@ class Cluster:
         for inj in self._injectors:
             if inj is not None:
                 inj.advance_to(t)
+        # the freshness clocks tick on the same virtual time, so TTL
+        # expiry replays as deterministically as the fault episodes
+        for b in self.brokers:
+            b.advance_time(t)
 
     def _clock(self) -> float:
         return self._now if self._virtual else time.monotonic() - self._t0
@@ -397,6 +406,12 @@ class Cluster:
                 setattr(broker.stats, f.name, 0)
         if broker.tracker is not None:
             broker.tracker.load(np.zeros_like(broker.tracker.counts))
+        if broker.freshness_spec is not None:
+            # fresh clock; the restore below reloads the checkpointed
+            # floors/time, and queued invalidations replay on top
+            broker.freshness = FreshnessRuntime(
+                broker.freshness_spec, broker.cache.topic_ids
+            )
         restored: Optional[int] = None
         if self._recovery_dir is not None:
             sd = _shard_dir(self._recovery_dir, i)
@@ -404,11 +419,76 @@ class Cluster:
             if step is not None:
                 broker.restore(sd, step=step)
                 restored = step
+        # invalidations that arrived during the outage: the checkpoint may
+        # predate them, so they must land again before the shard serves
+        for event in self._pending_inval[i]:
+            self._exec_invalidation(broker, event)
+        self._pending_inval[i] = []
         if self._health is not None:
             h = self._health[i]
             h.counters.recoveries += 1
             h.begin_recovery(self._clock())
         return restored
+
+    # -- invalidation ------------------------------------------------------
+
+    def invalidate(
+        self,
+        keys: Optional[np.ndarray] = None,
+        topic: Optional[int] = None,
+    ) -> int:
+        """Cluster-wide invalidation, routed like the queries it affects.
+
+        ``topic`` under topic routing goes to the single owner shard
+        (``tau mod N``); under hash routing every shard holds a slice of
+        the topic's partition, so the O(1) epoch bump fans out to all of
+        them (still no cache words move).  ``topic=-1`` flushes every
+        shard.  ``keys`` are grouped by ``shard_of`` and dropped
+        shard-locally; returns the number of slots zeroed.
+
+        Degraded-safe: an event for a DOWN shard is queued and replayed
+        by :meth:`recover_shard` *after* the checkpoint restore -- the
+        checkpoint may predate the event, and a recovered shard must not
+        resurrect results the stream already invalidated.
+        """
+        if (keys is None) == (topic is None):
+            raise ValueError("invalidate() takes exactly one of keys= or topic=")
+        if topic is not None:
+            if self.spec.routing == "topic" and int(topic) >= 0:
+                targets = [int(topic) % self.spec.shards]
+            else:
+                targets = list(range(len(self.brokers)))
+            for i in targets:
+                self._route_invalidation(i, ("topic", int(topic)))
+            return 0
+        keys = np.asarray(keys)
+        if len(keys) == 0:
+            return 0
+        topics = (
+            np.asarray(self.topic_of(keys))
+            if self.spec.routing == "topic"
+            else None
+        )
+        shard = self.spec.shard_of(keys, topics=topics)
+        n = 0
+        for i in range(len(self.brokers)):
+            sub = keys[shard == i]
+            if len(sub):
+                n += self._route_invalidation(i, ("keys", sub))
+        return n
+
+    def _route_invalidation(self, i: int, event) -> int:
+        if self._health is not None and self._health[i].state == DOWN:
+            self._pending_inval[i].append(event)
+            return 0
+        return self._exec_invalidation(self.brokers[i], event)
+
+    @staticmethod
+    def _exec_invalidation(broker: Broker, event) -> int:
+        kind, arg = event
+        if kind == "topic":
+            return broker.invalidate(topic=arg)
+        return broker.invalidate(keys=arg)
 
     # -- drift-aware rebalancing -------------------------------------------
 

@@ -3,16 +3,22 @@
 The CPU hash-table LRU of the paper becomes three dense arrays -- a W-way
 set-associative cache whose *address space is partitioned by topic*:
 
-    ks    : (S, 3W) uint32  packed per-slot words: columns [0:W] key_hi,
+    ks    : (S, 4W) uint32  packed per-slot words: columns [0:W] key_hi,
                             [W:2W] key_lo, [2W:3W] recency stamp
-                            (int32 bit-cast); key 0 = empty slot
+                            (int32 bit-cast), [3W:4W] insertion epoch;
+                            key 0 = empty slot
     value : (S, W, V) int32 cached result payload (doc ids)
 
-The packed key/stamp layout makes the hot path one gather (probe) and
-one scatter (commit) over a lane-friendly (S, 3W) array instead of three
-of each over (S, W) strips; ``pack_words`` / ``unpack_words`` are exact
-bit-reinterpretations, so the fori_loop oracle keeps operating on the
-unpacked (key_hi, key_lo, stamp) view.
+The packed key/stamp/epoch layout makes the hot path one gather (probe)
+and one scatter (commit) over a lane-friendly (S, 4W) array instead of
+four of each over (S, W) strips; ``pack_words`` / ``unpack_words`` are
+exact bit-reinterpretations, so the fori_loop oracle keeps operating on
+the unpacked (key_hi, key_lo, stamp) view.  The epoch word carries the
+freshness subsystem (docs/freshness.md): every update op takes optional
+``epochs`` (insertion epoch stamped on writes) and ``min_epoch`` (the
+per-request freshness floor; a match below it is a *stale* hit that
+schedules a value refresh).  Both default to zero, which makes expiry
+provably inert -- the pre-freshness semantics bit-for-bit.
 
 Topic tau owns the contiguous set range [offset[tau], offset[tau]+sets[tau])
 sized by the paper's proportional allocation; the dynamic cache is
@@ -53,7 +59,12 @@ from ..core.alloc import proportional_allocation
 from ..core.spec import PAD_KEY
 from ..kernels.cache_ops.kernel import PAD_HI as _PAD_HI_INT
 from ..kernels.cache_ops.kernel import PAD_LO as _PAD_LO_INT
-from ..kernels.cache_ops.ops import pack_words, probe_and_commit_op, unpack_words
+from ..kernels.cache_ops.ops import (
+    pack_words,
+    probe_and_commit_op,
+    unpack_epoch,
+    unpack_words,
+)
 
 DYNAMIC = -1  # callers pass topic=-1 for no-topic queries
 
@@ -129,32 +140,51 @@ def pad_batch(h_hi, h_lo, parts, pad_part: int, bp: int, values=None, admit=None
     return h_hi, h_lo, parts, values, admit
 
 
-def _sequential_replay(key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit, clock):
+def _sequential_replay(
+    key_hi, key_lo, stamp, epoch, h_hi, h_lo, set_idx, admit, static_hit,
+    clock, epochs, min_epoch,
+):
     """The oracle commit's fori_loop, additionally emitting the per-request
     write plan (wrote, way) the deferred value fill needs.  Fallback engine
-    for conflict depths where round-based replay degenerates."""
+    for conflict depths where round-based replay degenerates.  ``wrote``
+    covers inserts *and* stale refreshes (hits whose resident epoch is
+    below the request's ``min_epoch`` floor)."""
     b = h_hi.shape[0]
     pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
+    # effective write epoch (mirrors probe_and_commit_op): a pristine
+    # fresh hit keeps its resident epoch, so a mid-batch evict +
+    # re-insert of the same key (served and re-filled with its probed,
+    # unchanged value) cannot launder the entry's age; idempotent, so
+    # callers that already applied the rule compose safely
+    sc0 = jnp.minimum(set_idx, key_hi.shape[0] - 1)
+    p_hi, p_lo = key_hi[sc0], key_lo[sc0]
+    pm0 = (p_hi == h_hi[:, None]) & (p_lo == h_lo[:, None]) & (p_hi != 0)
+    pm0 = pm0 & ~pad[:, None]
+    pm0_ep = jnp.where(pm0, epoch[sc0], 0).max(axis=1)
+    epochs = jnp.where(pm0.any(axis=1) & (pm0_ep >= min_epoch), pm0_ep, epochs)
 
     def body(i, st):
-        key_hi, key_lo, stamp, wrote, way_out = st
+        key_hi, key_lo, stamp, epoch, wrote, way_out = st
         s = set_idx[i]
         row_hi = key_hi[s]
         row_lo = key_lo[s]
         match = (row_hi == h_hi[i]) & (row_lo == h_lo[i]) & (row_hi != 0) & ~pad[i]
         is_hit = match.any()
         way = jnp.where(match.any(), jnp.argmax(match), jnp.argmin(stamp[s]))
+        stale = is_hit & (epoch[s, way] < min_epoch[i])
         do_write = (~static_hit[i]) & ~pad[i] & (is_hit | admit[i])
+        refresh = do_write & (~is_hit | stale)
         key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
         key_lo = key_lo.at[s, way].set(jnp.where(do_write, h_lo[i], key_lo[s, way]))
         stamp = stamp.at[s, way].set(jnp.where(do_write, clock + 1 + i, stamp[s, way]))
-        wrote = wrote.at[i].set(do_write & ~is_hit)
+        epoch = epoch.at[s, way].set(jnp.where(refresh, epochs[i], epoch[s, way]))
+        wrote = wrote.at[i].set(refresh)
         way_out = way_out.at[i].set(way.astype(jnp.int32))
-        return key_hi, key_lo, stamp, wrote, way_out
+        return key_hi, key_lo, stamp, epoch, wrote, way_out
 
     return jax.lax.fori_loop(
         0, b, body,
-        (key_hi, key_lo, stamp, jnp.zeros(b, bool), jnp.zeros(b, jnp.int32)),
+        (key_hi, key_lo, stamp, epoch, jnp.zeros(b, bool), jnp.zeros(b, jnp.int32)),
     )
 
 
@@ -312,7 +342,7 @@ class STDDeviceCache:
             s_vals = np.zeros((0, cfg.value_dim), np.int32)
         s_hi, s_lo = pack_hashes(static)
         self.init_state = {
-            "ks": jnp.zeros((max(self.n_sets, 1), 3 * w), jnp.uint32),
+            "ks": jnp.zeros((max(self.n_sets, 1), 4 * w), jnp.uint32),
             "value": jnp.zeros((max(self.n_sets, 1), w, cfg.value_dim), jnp.int32),
             "clock": jnp.zeros((), jnp.int32),
             "static_hi": jnp.asarray(s_hi),
@@ -397,25 +427,34 @@ class STDDeviceCache:
         idx = jnp.minimum(lo, n - 1)
         return (s_hi[idx] == h_hi) & (s_lo[idx] == h_lo), idx
 
-    def probe(self, state, h_hi, h_lo, part):
-        """Parallel probe: returns (hit, layer, value).
+    def probe(self, state, h_hi, h_lo, part, min_epoch=None):
+        """Parallel probe: returns (hit, layer, value, stale).
 
         layer: 0 = static, 1 = set-associative partition, -1 = miss.
-        One gather fetches every probed slot's key *and* stamp words (the
-        packed layout); pad requests never hit.
+        One gather fetches every probed slot's key, stamp *and* epoch
+        words (the packed layout); pad requests never hit.  ``stale``
+        marks topic-layer hits whose insertion epoch is below the
+        request's ``min_epoch`` floor (all-False when ``min_epoch`` is
+        None or zero -- freshness disabled; static entries are read-only
+        and never expire).
         """
         pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
         static_hit = static_hit & ~pad
         set_idx = self._set_index(h_lo, part)
         w = self.cfg.ways
-        rows = state["ks"][set_idx]  # (B, 3W): one gather
+        rows = state["ks"][set_idx]  # (B, 4W): one gather
         keys_hi = rows[:, :w]
         keys_lo = rows[:, w : 2 * w]
         match = (keys_hi == h_hi[:, None]) & (keys_lo == h_lo[:, None]) & (keys_hi != 0)
         match = match & ~pad[:, None]
         way_hit = match.any(axis=1)
         way = jnp.argmax(match, axis=1)
+        if min_epoch is None:
+            stale = jnp.zeros(h_hi.shape, bool)
+        else:
+            ep = jnp.where(match, rows[:, 3 * w :], 0).max(axis=1)
+            stale = way_hit & (ep < min_epoch.astype(jnp.uint32))
         value = state["value"][set_idx, way]
         if state["static_value"].shape[0]:
             value = jnp.where(
@@ -423,27 +462,48 @@ class STDDeviceCache:
             )
         hit = static_hit | way_hit
         layer = jnp.where(static_hit, 0, jnp.where(way_hit, 1, -1))
-        return hit, layer, value
+        return hit, layer, value, stale
 
-    def commit(self, state, h_hi, h_lo, part, values, admit):
+    def commit(self, state, h_hi, h_lo, part, values, admit, epochs=None, min_epoch=None):
         """Serialized batch update preserving exact W-way LRU order.
 
         Hits refresh stamps; admitted misses evict the LRU way of their
         set.  Items are processed in request order (fori_loop), so two
         same-set requests in one batch behave exactly like back-to-back
         requests in the sequential simulator.  This is the *oracle*: it
-        runs on the unpacked (key_hi, key_lo, stamp) view via the exact
-        pack/unpack adapters, so the packed engines are property-tested
-        against unchanged reference semantics.  Pad requests are inert.
+        runs on the unpacked (key_hi, key_lo, stamp, epoch) view via the
+        exact pack/unpack adapters, so the packed engines are
+        property-tested against unchanged reference semantics.  Pad
+        requests are inert.  A hit whose resident epoch is below
+        ``min_epoch[i]`` is stale: its value slot and epoch are rewritten
+        from ``values[i]`` / ``epochs[i]`` (both default to zeros --
+        freshness off).
         """
         b = h_hi.shape[0]
         static_hit, _ = self.static_lookup(state, h_hi, h_lo)
         set_idx = self._set_index(h_lo, part)
         key_hi0, key_lo0, stamp0 = unpack_words(state["ks"])
+        epoch0 = unpack_epoch(state["ks"])
         pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
+        if epochs is None:
+            epochs = jnp.zeros((b,), jnp.uint32)
+        if min_epoch is None:
+            min_epoch = jnp.zeros((b,), jnp.uint32)
+        # effective write epoch (mirrors probe_and_commit_op): a pristine
+        # fresh hit keeps its resident epoch, so a mid-batch evict +
+        # re-insert cannot extend the entry's lifetime past its original
+        # insertion; conservative in the rare race, uniform across engines
+        sc0 = jnp.minimum(set_idx, key_hi0.shape[0] - 1)
+        p_hi0, p_lo0 = key_hi0[sc0], key_lo0[sc0]
+        pm0 = (p_hi0 == h_hi[:, None]) & (p_lo0 == h_lo[:, None]) & (p_hi0 != 0)
+        pm0 = pm0 & ~pad[:, None]
+        pm0_ep = jnp.where(pm0, epoch0[sc0], 0).max(axis=1)
+        epochs = jnp.where(
+            pm0.any(axis=1) & (pm0_ep >= min_epoch), pm0_ep, epochs
+        ).astype(jnp.uint32)
 
         def body(i, st):
-            key_hi, key_lo, stamp, value, clock = st
+            key_hi, key_lo, stamp, epoch, value, clock = st
             s = set_idx[i]
             row_hi = key_hi[s]
             row_lo = key_lo[s]
@@ -453,29 +513,32 @@ class STDDeviceCache:
             way_e = jnp.argmin(stamp[s], axis=0)
             do_write = (~static_hit[i]) & ~pad[i] & (is_hit | admit[i])
             way = jnp.where(is_hit, way_h, way_e)
+            stale = is_hit & (epoch[s, way] < min_epoch[i])
+            refresh = do_write & (~is_hit | stale)
             new_stamp = clock + 1 + i
             key_hi = key_hi.at[s, way].set(jnp.where(do_write, h_hi[i], key_hi[s, way]))
             key_lo = key_lo.at[s, way].set(jnp.where(do_write, h_lo[i], key_lo[s, way]))
             stamp = stamp.at[s, way].set(jnp.where(do_write, new_stamp, stamp[s, way]))
+            epoch = epoch.at[s, way].set(jnp.where(refresh, epochs[i], epoch[s, way]))
             value = value.at[s, way].set(
-                jnp.where(do_write & ~is_hit, values[i], value[s, way])
+                jnp.where(refresh, values[i], value[s, way])
             )
-            return key_hi, key_lo, stamp, value, clock
+            return key_hi, key_lo, stamp, epoch, value, clock
 
-        key_hi, key_lo, stamp, value, clock = jax.lax.fori_loop(
+        key_hi, key_lo, stamp, epoch, value, clock = jax.lax.fori_loop(
             0,
             b,
             body,
-            (key_hi0, key_lo0, stamp0, state["value"], state["clock"]),
+            (key_hi0, key_lo0, stamp0, epoch0, state["value"], state["clock"]),
         )
         out = dict(state)
         out.update(
-            ks=pack_words(key_hi, key_lo, stamp), value=value, clock=clock + b
+            ks=pack_words(key_hi, key_lo, stamp, epoch), value=value, clock=clock + b
         )
         return out
 
     def commit_vectorized(
-        self, state, h_hi, h_lo, part, values, admit,
+        self, state, h_hi, h_lo, part, values, admit, epochs=None, min_epoch=None,
         use_kernel: bool = False, interpret: bool = True,
     ):
         """Conflict-aware batch commit, bit-exact with :meth:`commit`.
@@ -485,8 +548,8 @@ class STDDeviceCache:
         (sequential depth = deepest conflict, not batch size), and the
         result lands in one gather/compute/scatter over the packed state.
         Values are applied by the deferred fill (:meth:`fill_values`):
-        last insert per slot wins, which is exactly the order the
-        fori_loop writes them.
+        last insert (or stale refresh) per slot wins, which is exactly
+        the order the fori_loop writes them.
         """
         b = h_hi.shape[0]
         if b == 0:
@@ -495,6 +558,7 @@ class STDDeviceCache:
         set_idx = self._set_index(h_lo, part)
         out = probe_and_commit_op(
             state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            epochs=epochs, min_epoch=min_epoch,
             use_kernel=use_kernel, interpret=interpret,
         )
         new = dict(state)
@@ -502,19 +566,21 @@ class STDDeviceCache:
         return self.fill_values(new, set_idx, out["wrote"], out["way"], values)
 
     def probe_and_commit(
-        self, state, h_hi, h_lo, part, admit,
+        self, state, h_hi, h_lo, part, admit, epochs=None, min_epoch=None,
         use_kernel: bool = False, interpret: bool = True,
     ):
         """Fused serve step: probe + key/stamp commit in one device call.
 
-        Returns ``(hit, layer, value, new_state, (set_idx, wrote, way))``.
-        ``hit``/``layer``/``value`` are identical to :meth:`probe` against
-        the pre-commit state (atomic batch probe); the commit replays the
-        batch in arrival order like :meth:`commit` with one twist forced
-        by causality: an admitted miss's value does not exist yet (the
-        backend produces it after the probe), so inserts land keys and
-        stamps now and the caller scatters values afterwards via
-        :meth:`fill_values` with the returned ``(set_idx, wrote, way)``.
+        Returns ``(hit, layer, value, stale, new_state, (set_idx, wrote,
+        way))``.  ``hit``/``layer``/``value``/``stale`` are identical to
+        :meth:`probe` against the pre-commit state (atomic batch probe);
+        the commit replays the batch in arrival order like :meth:`commit`
+        with one twist forced by causality: an admitted miss's (or stale
+        refresh's) value does not exist yet (the backend produces it
+        after the probe), so inserts land keys and stamps now and the
+        caller scatters values afterwards via :meth:`fill_values` with
+        the returned ``(set_idx, wrote, way)``.  The freshness check
+        rides the op's existing single gather -- no extra device work.
         """
         b = h_hi.shape[0]
         pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
@@ -523,6 +589,7 @@ class STDDeviceCache:
         set_idx = self._set_index(h_lo, part)
         out = probe_and_commit_op(
             state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
+            epochs=epochs, min_epoch=min_epoch,
             use_kernel=use_kernel, interpret=interpret,
         )
         value = state["value"][set_idx, out["pre_way"]]
@@ -534,10 +601,14 @@ class STDDeviceCache:
         layer = jnp.where(static_hit, 0, jnp.where(out["pre_hit"], 1, -1))
         new = dict(state)
         new.update(ks=out["ks"], clock=state["clock"] + b)
-        return hit, layer, value, new, (set_idx, out["wrote"], out["way"])
+        return (
+            hit, layer, value, out["pre_stale"], new,
+            (set_idx, out["wrote"], out["way"]),
+        )
 
     def fill_probe_and_commit(
         self, state, f_set_idx, f_wrote, f_way, f_values, h_hi, h_lo, part, admit,
+        epochs=None, min_epoch=None,
         use_kernel: bool = False, interpret: bool = True,
     ):
         """Double-buffered serve step: apply the *previous* batch's
@@ -545,16 +616,16 @@ class STDDeviceCache:
         one device call.
 
         The fill lands before the probe reads ``value``, so a query
-        hitting a key the previous batch inserted sees its backend result
-        -- semantics identical to :meth:`fill_values` followed by
-        :meth:`probe_and_commit`, minus one dispatch, and XLA overlaps
-        the value scatter with the next bucket's key/stamp gather.  The
-        fill plan must be padded to the current bucket's length (pad
-        entries carry ``f_wrote == False``).
+        hitting a key the previous batch inserted (or revalidated) sees
+        its backend result -- semantics identical to :meth:`fill_values`
+        followed by :meth:`probe_and_commit`, minus one dispatch, and XLA
+        overlaps the value scatter with the next bucket's key/stamp
+        gather.  The fill plan must be padded to the current bucket's
+        length (pad entries carry ``f_wrote == False``).
         """
         state = self.fill_values(state, f_set_idx, f_wrote, f_way, f_values)
         return self.probe_and_commit(
-            state, h_hi, h_lo, part, admit,
+            state, h_hi, h_lo, part, admit, epochs=epochs, min_epoch=min_epoch,
             use_kernel=use_kernel, interpret=interpret,
         )
 
@@ -616,10 +687,11 @@ class STDDeviceCache:
         return table[idx] == q, idx
 
     def _resolve_host(
-        self, key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit,
-        clock, depth_limit: Optional[int] = None,
+        self, key_hi, key_lo, stamp, epoch, h_hi, h_lo, set_idx, admit, static_hit,
+        clock, epochs=None, min_epoch=None, depth_limit: Optional[int] = None,
     ):
-        """Segmented replay on host arrays; mutates key/stamp arrays in place.
+        """Segmented replay on host arrays; mutates key/stamp/epoch arrays
+        in place.
 
         Round j applies every set's j-th request, narrowed to the items
         still active -- total work is O(B * W), and the sort is numpy's.
@@ -630,6 +702,10 @@ class STDDeviceCache:
         b = len(h_hi)
         if b == 0:
             return np.zeros(0, bool), np.zeros(0, np.int32)
+        if epochs is None:
+            epochs = np.zeros(b, np.uint32)
+        if min_epoch is None:
+            min_epoch = np.zeros(b, np.uint32)
         pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         s_max = key_hi.shape[0] - 1
         sc = np.minimum(set_idx, s_max)  # jnp gathers clamp ...
@@ -649,6 +725,15 @@ class STDDeviceCache:
             return None
         wrote = np.zeros(b, bool)
         way_out = np.zeros(b, np.int32)
+        # effective write epoch (mirrors probe_and_commit_op), computed
+        # against the still-pristine arrays before any round mutates them
+        pm0 = (key_hi[sc] == h_hi[:, None]) & (key_lo[sc] == h_lo[:, None]) \
+            & (key_hi[sc] != 0)
+        pm0 &= ~pad[:, None]
+        pm0_ep = np.where(pm0, epoch[sc], 0).max(axis=1)
+        epochs = np.where(
+            pm0.any(axis=1) & (pm0_ep >= min_epoch), pm0_ep, epochs
+        ).astype(np.uint32)
         clock = np.int32(clock)
         for j in range(depth):
             i = order[np.flatnonzero(rank == j)]  # round j, arrival order kept
@@ -662,12 +747,16 @@ class STDDeviceCache:
             prio = np.where(m, np.int32(-1), rst)
             way = prio.argmin(axis=1).astype(np.int32)
             is_hit = prio[np.arange(len(i)), way] == -1
+            stale = is_hit & (epoch[s, way] < min_epoch[i])
             do_write = ~static_hit[i] & ~pad[i] & (is_hit | admit[i]) & ~oob[i]
+            refresh = do_write & (~is_hit | stale)
             w = np.flatnonzero(do_write)
             key_hi[s[w], way[w]] = h_hi[i[w]]
             key_lo[s[w], way[w]] = h_lo[i[w]]
             stamp[s[w], way[w]] = (clock + 1 + i[w]).astype(np.int32)
-            wrote[i] = do_write & ~is_hit
+            r = np.flatnonzero(refresh)
+            epoch[s[r], way[r]] = np.asarray(epochs)[i[r]]
+            wrote[i] = refresh
             way_out[i] = way
         return wrote, way_out
 
@@ -686,7 +775,10 @@ class STDDeviceCache:
     #: loop beats b python-level rounds
     HOST_DEPTH_LIMIT = 64
 
-    def commit_host(self, state, h_hi, h_lo, part, values, admit, inplace: bool = False):
+    def commit_host(
+        self, state, h_hi, h_lo, part, values, admit, epochs=None, min_epoch=None,
+        inplace: bool = False,
+    ):
         """Numpy engine for :meth:`commit_vectorized`; bit-exact with both.
 
         Batches whose deepest set conflict exceeds ``HOST_DEPTH_LIMIT``
@@ -699,13 +791,20 @@ class STDDeviceCache:
         out["clock"] = np.int32(state["clock"]) + np.int32(b)
         if b == 0:
             return out
+        if epochs is None:
+            epochs = np.zeros(b, np.uint32)
+        if min_epoch is None:
+            min_epoch = np.zeros(b, np.uint32)
         static_hit, _ = self.static_lookup_host(state, h_hi, h_lo)
         set_idx = self._set_index_host(h_lo, np.asarray(part))
         ks = self._own(state["ks"], np.uint32, inplace)
         key_hi, key_lo, stamp = unpack_words(ks)  # in-place views
+        epoch = unpack_epoch(ks)
         plan = self._resolve_host(
-            key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
-            static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
+            key_hi, key_lo, stamp, epoch, h_hi, h_lo, set_idx, np.asarray(admit),
+            static_hit, state["clock"], epochs=np.asarray(epochs, np.uint32),
+            min_epoch=np.asarray(min_epoch, np.uint32),
+            depth_limit=self.HOST_DEPTH_LIMIT,
         )
         if plan is None:  # pathological depth: sequential oracle
             if not hasattr(self, "_oracle_jit"):
@@ -714,6 +813,7 @@ class STDDeviceCache:
                 {k: jnp.asarray(v) for k, v in state.items()},
                 jnp.asarray(h_hi), jnp.asarray(h_lo), jnp.asarray(part),
                 jnp.asarray(values), jnp.asarray(admit),
+                jnp.asarray(epochs, jnp.uint32), jnp.asarray(min_epoch, jnp.uint32),
             )
         wrote, way = plan
         value = self._own(state["value"], np.int32, inplace)
@@ -722,7 +822,10 @@ class STDDeviceCache:
         out.update(ks=ks, value=value)
         return out
 
-    def probe_and_commit_host(self, state, h_hi, h_lo, part, admit, inplace: bool = False):
+    def probe_and_commit_host(
+        self, state, h_hi, h_lo, part, admit, epochs=None, min_epoch=None,
+        inplace: bool = False,
+    ):
         """Numpy engine for :meth:`probe_and_commit`: same contract, no jit.
 
         Everything runs on host arrays -- the CPU serving fast path.  The
@@ -731,6 +834,12 @@ class STDDeviceCache:
         """
         h_hi, h_lo = np.asarray(h_hi), np.asarray(h_lo)
         b = len(h_hi)
+        if epochs is None:
+            epochs = np.zeros(b, np.uint32)
+        if min_epoch is None:
+            min_epoch = np.zeros(b, np.uint32)
+        epochs = np.asarray(epochs, np.uint32)
+        min_epoch = np.asarray(min_epoch, np.uint32)
         pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
         static_hit, static_idx = self.static_lookup_host(state, h_hi, h_lo)
         static_hit = static_hit & ~pad
@@ -739,13 +848,15 @@ class STDDeviceCache:
         w = self.cfg.ways
         s_max = ks_pre.shape[0] - 1
         sc = np.minimum(set_idx, s_max)
-        rows = ks_pre[sc]  # (B, 3W): one gather for keys and stamps
+        rows = ks_pre[sc]  # (B, 4W): one gather for keys, stamps and epochs
         pre_rh = rows[:, :w]
         pre_rl = rows[:, w : 2 * w]
         pm = (pre_rh == h_hi[:, None]) & (pre_rl == h_lo[:, None]) & (pre_rh != 0)
         pm &= ~pad[:, None]
         pre_hit = pm.any(axis=1)
         pre_way = pm.argmax(axis=1).astype(np.int32)
+        pre_ep = np.where(pm, rows[:, 3 * w :], 0).max(axis=1)
+        pre_stale = pre_hit & (pre_ep < min_epoch)
         value = np.asarray(state["value"])[sc, pre_way]
         if np.asarray(state["static_value"]).shape[0]:
             value = np.where(
@@ -753,9 +864,11 @@ class STDDeviceCache:
             )
         ks = self._own(state["ks"], np.uint32, inplace)
         key_hi, key_lo, stamp = unpack_words(ks)  # in-place views
+        epoch = unpack_epoch(ks)
         plan = self._resolve_host(
-            key_hi, key_lo, stamp, h_hi, h_lo, set_idx, np.asarray(admit),
-            static_hit, state["clock"], depth_limit=self.HOST_DEPTH_LIMIT,
+            key_hi, key_lo, stamp, epoch, h_hi, h_lo, set_idx, np.asarray(admit),
+            static_hit, state["clock"], epochs=epochs, min_epoch=min_epoch,
+            depth_limit=self.HOST_DEPTH_LIMIT,
         )
         if plan is None:
             # pathological conflict depth (skewed traffic flooding one
@@ -763,15 +876,18 @@ class STDDeviceCache:
             # the compiled per-request loop, which also emits the plan
             if not hasattr(self, "_fused_seq_jit"):
                 self._fused_seq_jit = jax.jit(_sequential_replay)
-            r_hi, r_lo, r_st, wrote, way = self._fused_seq_jit(
+            r_hi, r_lo, r_st, r_ep, wrote, way = self._fused_seq_jit(
                 jnp.asarray(key_hi), jnp.asarray(key_lo),
-                jnp.asarray(stamp), jnp.asarray(h_hi), jnp.asarray(h_lo),
+                jnp.asarray(stamp), jnp.asarray(epoch),
+                jnp.asarray(h_hi), jnp.asarray(h_lo),
                 jnp.asarray(set_idx), jnp.asarray(admit), jnp.asarray(static_hit),
                 jnp.asarray(state["clock"]),
+                jnp.asarray(epochs), jnp.asarray(min_epoch),
             )
             key_hi[...] = np.asarray(r_hi)  # write back through the ks views
             key_lo[...] = np.asarray(r_lo)
             stamp[...] = np.asarray(r_st)
+            epoch[...] = np.asarray(r_ep)
             wrote, way = np.asarray(wrote), np.asarray(way)
         else:
             wrote, way = plan
@@ -779,7 +895,7 @@ class STDDeviceCache:
         layer = np.where(static_hit, 0, np.where(pre_hit, 1, -1)).astype(np.int32)
         new = dict(state)
         new.update(ks=ks, clock=np.int32(state["clock"]) + np.int32(b))
-        return hit, layer, value, new, (set_idx, wrote, way)
+        return hit, layer, value, pre_stale, new, (set_idx, wrote, way)
 
     def fill_values_host(self, state, set_idx, wrote, way, values, inplace: bool = False):
         value = self._own(state["value"], np.int32, inplace)
@@ -829,6 +945,7 @@ class STDDeviceCache:
         new_state["static_value"] = state["static_value"]
         ks_np = np.asarray(state["ks"])
         key_hi, key_lo, stamp = unpack_words(ks_np)
+        epoch = np.asarray(unpack_epoch(ks_np))
         value = np.asarray(state["value"])
         # partition of each old set
         old_part = np.searchsorted(self.part_offset[1:], np.arange(self.n_sets), side="right")
@@ -847,24 +964,64 @@ class STDDeviceCache:
         hi = (h64 >> np.uint64(32)).astype(np.uint32)
         lo = (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
         vals = value[sets_l, ways_l]
+        # migrated entries keep their original insertion epochs: a
+        # rebalance moves capacity, it does not renew TTLs (entries that
+        # were nearly stale stay nearly stale -- see docs/freshness.md)
+        eps = epoch[sets_l, ways_l].astype(np.uint32)
         admit = np.ones(len(parts), bool)
         # static-shape contract: pad the migration batch to its bucket
         bp = bucket.padded_len(len(hi)) if bucket is not None else len(hi)
+        n_real = len(hi)
         hi, lo, new_parts, vals, admit = pad_batch(
             hi, lo, new_parts, new_cache.k, bp, values=vals, admit=admit
         )
+        if bp > n_real:
+            eps = np.concatenate([eps, np.zeros(bp - n_real, np.uint32)])
         if engine == "host":
             new_state = new_cache.commit_host(
-                new_state, hi, lo, new_parts, vals, admit, inplace=True
+                new_state, hi, lo, new_parts, vals, admit, epochs=eps, inplace=True
             )
         elif engine == "oracle":
             new_state = new_cache.commit(
                 new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
-                jnp.asarray(vals), jnp.asarray(admit),
+                jnp.asarray(vals), jnp.asarray(admit), epochs=jnp.asarray(eps),
             )
         else:
             new_state = new_cache.commit_vectorized(
                 new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
-                jnp.asarray(vals), jnp.asarray(admit),
+                jnp.asarray(vals), jnp.asarray(admit), epochs=jnp.asarray(eps),
             )
         return new_cache, new_state
+
+    # -- control-plane invalidation ----------------------------------------
+
+    def invalidate_keys(self, state, h_hi, h_lo, part) -> Tuple[Dict[str, Any], int]:
+        """Point invalidation: zero the key words of matching resident
+        slots (key 0 = empty), leaving stamps/epochs/values to be
+        overwritten by the next insert.
+
+        Runs host-side by design -- invalidation events are control-plane
+        traffic, orders of magnitude rarer than serves, so a device
+        round-trip here is cheaper than widening the hot-path kernel.
+        Duplicated keys in the batch are idempotent.  Returns
+        ``(new_state, n_slots_zeroed)``; the returned ``ks`` stays numpy
+        (host engine zero-copy; jit consumers convert on entry).
+        """
+        h_hi, h_lo = np.asarray(h_hi, np.uint32), np.asarray(h_lo, np.uint32)
+        ks = np.array(np.asarray(state["ks"]), np.uint32)  # owned host copy
+        key_hi, key_lo, _ = unpack_words(ks)
+        set_idx = self._set_index_host(h_lo, np.asarray(part))
+        s_max = ks.shape[0] - 1
+        sc = np.minimum(set_idx, s_max)
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
+        rows_hi = key_hi[sc]
+        rows_lo = key_lo[sc]
+        m = (rows_hi == h_hi[:, None]) & (rows_lo == h_lo[:, None]) & (rows_hi != 0)
+        m &= ~(pad | (set_idx > s_max))[:, None]
+        req, way = np.nonzero(m)
+        n = len(np.unique(sc[req].astype(np.int64) * self.cfg.ways + way))
+        key_hi[sc[req], way] = 0
+        key_lo[sc[req], way] = 0
+        out = dict(state)
+        out["ks"] = ks
+        return out, int(n)

@@ -47,6 +47,7 @@ from typing import List, Mapping, Optional, Tuple
 import numpy as np
 
 from ..core.spec import CacheSpec
+from ..freshness import FreshnessSpec
 from .device_cache import DeviceCacheConfig, splitmix64
 from .rebalance import RebalanceSpec
 from .resilience import ResilienceSpec
@@ -272,6 +273,10 @@ class ServingSpec:
     #: docs/resilience.md).  None = the pre-resilience behaviour: any
     #: shard failure propagates to the caller.
     resilience: Optional[ResilienceSpec] = None
+    #: freshness policy: default + per-topic TTLs, stale-hit handling,
+    #: epoch granularity (see docs/freshness.md).  None = entries never
+    #: expire (the pre-freshness behaviour, bit-exact on every engine).
+    freshness: Optional[FreshnessSpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -311,6 +316,7 @@ class ServingSpec:
         bucket = d.pop("bucket", None)
         policy = d.pop("batch_policy", None)
         resilience = d.pop("resilience", None)
+        freshness = d.pop("freshness", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
@@ -319,6 +325,9 @@ class ServingSpec:
             batch_policy=BatchPolicySpec(**policy) if policy is not None else None,
             resilience=(
                 ResilienceSpec(**resilience) if resilience is not None else None
+            ),
+            freshness=(
+                FreshnessSpec.from_dict(freshness) if freshness is not None else None
             ),
             **d,
         )
@@ -443,6 +452,7 @@ __all__ = [
     "SERVING_SPEC_VERSION",
     "BatchPolicySpec",
     "BucketSpec",
+    "FreshnessSpec",
     "HedgeSpec",
     "RebalanceSpec",
     "ResilienceSpec",

@@ -77,17 +77,19 @@ def _drive_all_paths(cache, state, batches):
         _assert_states_equal(s_seq, s_ker, f"batch{i}/pallas")
         _assert_states_equal(s_seq, s_host, f"batch{i}/host")
         # fused probe-and-commit: probe parity + deferred fill parity
-        hit0, lay0, val0 = cache.probe(state, hi, lo, parts)
+        hit0, lay0, val0, stale0 = cache.probe(state, hi, lo, parts)
+        assert not np.asarray(stale0).any()  # no min_epoch: nothing expires
         for label, fused, fill in (
             ("fused", cache.probe_and_commit, cache.fill_values),
             ("fused_host", cache.probe_and_commit_host, cache.fill_values_host),
         ):
-            hit1, lay1, val1, s_fused, (set_idx, wrote, way) = fused(
+            hit1, lay1, val1, stale1, s_fused, (set_idx, wrote, way) = fused(
                 state, hi, lo, np.asarray(parts) if "host" in label else parts, admit
             )
             assert (np.asarray(hit0) == np.asarray(hit1)).all(), label
             assert (np.asarray(lay0) == np.asarray(lay1)).all(), label
             assert (np.asarray(val0) == np.asarray(val1)).all(), label
+            assert not np.asarray(stale1).any(), label
             s_fused = fill(s_fused, set_idx, wrote, way, vals)
             _assert_states_equal(s_seq, s_fused, f"batch{i}/{label}")
         state = s_seq

@@ -175,7 +175,9 @@ def test_pad_key_inert_in_every_engine():
         hi, lo, parts, vals, admit,
     )
     assert (np.asarray(s_host["ks"]) == ref_ks).all()
-    hit, _, _ = cache.probe(s_seq, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts))
+    hit, _, _, _ = cache.probe(
+        s_seq, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts)
+    )
     assert not np.asarray(hit)[pad_at].any()
     # an all-pad batch leaves keys, stamps and values bit-identical
     ph = np.full(16, PAD_HI, np.uint32)

@@ -31,7 +31,7 @@ def _drive(cache, state, keys, probe, commit):
         h = splitmix64(np.array([k]))
         hi, lo = pack_hashes(h)
         part = np.zeros(1, np.int32)
-        hit, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part))
+        hit, _, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part))
         state = commit(
             state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(part),
             jnp.zeros((1, cache.cfg.value_dim), jnp.int32), jnp.ones(1, bool),
@@ -112,7 +112,7 @@ def test_static_layer_and_values():
     probe = jax.jit(cache.probe)
     h = splitmix64(np.array([5, 9, 7]))
     hi, lo = pack_hashes(h)
-    hit, layer, val = probe(
+    hit, layer, val, _ = probe(
         dict(cache.init_state), jnp.asarray(hi), jnp.asarray(lo), jnp.zeros(3, jnp.int32)
     )
     assert list(np.asarray(hit)) == [True, True, False]
@@ -134,7 +134,7 @@ def test_topic_partition_isolation():
         h = splitmix64(np.array([qid]))
         hi, lo = pack_hashes(h)
         part = jnp.asarray(cache.parts_for(np.array([topic])))
-        hit, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), part)
+        hit, _, _, _ = probe(state, jnp.asarray(hi), jnp.asarray(lo), part)
         state = commit(state, jnp.asarray(hi), jnp.asarray(lo), part,
                        jnp.zeros((1, 1), jnp.int32), jnp.ones(1, bool))
         return bool(hit[0]), state
@@ -223,7 +223,7 @@ def test_repartition_preserves_entries():
     )
     new_cache, new_state = cache.repartition(state, new_cfg)
     probe = jax.jit(new_cache.probe)
-    hit, _, val = probe(new_state, jnp.asarray(hi), jnp.asarray(lo),
+    hit, _, val, _ = probe(new_state, jnp.asarray(hi), jnp.asarray(lo),
                         jnp.asarray(new_cache.parts_for(np.zeros(10, np.int64))))
     assert np.asarray(hit).all()
     assert (np.asarray(val)[:, 0] == np.arange(10)).all()

@@ -1,0 +1,737 @@
+"""Freshness-aware caching: TTL expiry, stale policies, invalidation.
+
+Conformance bar for the subsystem (see docs/freshness.md):
+
+* ``FreshnessSpec`` JSON round-trips losslessly through ``ServingSpec``;
+* the four fused engines (vec / Pallas-interpret / host / sequential
+  replay) stay bit-exact under nonzero epochs and freshness floors,
+  and match the numpy per-request oracle;
+* ``ttl_s=inf`` is request-for-request identical to no spec at all --
+  and compiles zero extra traces (the arrays exist either way);
+* under ``stale_policy="miss"`` no expired value is ever served: a
+  value-age oracle (the backend stamps production time) re-derives
+  staleness from the answers alone, independent of broker stats;
+* ``serve_stale_while_revalidate`` serves the old value once and the
+  refresh lands before the next probe;
+* epochs and invalidation floors survive checkpoints and live
+  rebalances (a rebalance moves capacity, it does not renew TTLs);
+* a ``shards=1`` cluster with freshness matches the bare broker
+  stat-for-stat, and invalidations for a DOWN shard replay on recovery.
+"""
+import dataclasses
+import math
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, CacheSpec, VecLog, VecStats
+from repro.freshness import TTL_EP_INF, FreshnessRuntime, FreshnessSpec
+from repro.kernels.cache_ops import pack_words, unpack_epoch, unpack_words
+from repro.kernels.cache_ops.ref import probe_and_commit_ref
+from repro.querylog import (
+    INVAL_KEY,
+    INVAL_TOPIC,
+    InvalidationConfig,
+    SynthConfig,
+    generate,
+    generate_invalidations,
+)
+from repro.serving import (
+    DOWN,
+    Broker,
+    BucketSpec,
+    Cluster,
+    DeviceCacheConfig,
+    RebalanceSpec,
+    ResilienceSpec,
+    ServingSpec,
+    STDDeviceCache,
+    pack_hashes,
+    splitmix64,
+)
+
+# -- shared fixtures ---------------------------------------------------------
+
+
+def _stats(seed=0, nq=300, n=3000, n_topics=6):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    return log, VecStats.from_log(log)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _spec(n=256, value_dim=2, **kw):
+    cache = CacheSpec.from_strategy("STDv_LRU", n, f_s=0.3, f_t=0.5)
+    return ServingSpec(cache=cache, value_dim=value_dim, microbatch=64, **kw)
+
+
+def _clock_backend():
+    """Backend stamping each value with its production time: the served
+    payload carries its true age, so tests measure staleness from the
+    answers alone (no trust in broker bookkeeping)."""
+    clock = {"t": 0.0}
+
+    def backend(qids):
+        out = np.empty((len(qids), 2), np.int32)
+        out[:, 0] = np.asarray(qids).astype(np.int64) & 0x7FFFFFFF
+        out[:, 1] = int(clock["t"])
+        return out
+
+    return clock, backend
+
+
+def _topic_broker(freshness, n_keys=64, n_topics=2, **kw):
+    """Broker over a small cache where key k belongs to topic k % n_topics
+    (every key topical: static layer empty, nothing expiry-exempt)."""
+    cfg = DeviceCacheConfig.build(
+        128, f_s=0.0, f_t=0.8,
+        topic_distinct={t: 10 for t in range(n_topics)}, ways=4, value_dim=2,
+    )
+    clock, backend = _clock_backend()
+    broker = Broker(
+        STDDeviceCache(cfg),
+        [backend],
+        topic_of=lambda q: np.asarray(q) % n_topics,
+        freshness=freshness,
+        **kw,
+    )
+    return clock, broker
+
+
+# -- FreshnessSpec: serialization + validation -------------------------------
+
+
+@pytest.mark.parametrize(
+    "fs",
+    [
+        FreshnessSpec(),  # inf TTL, the do-nothing default
+        FreshnessSpec(ttl_s=3600.0),
+        FreshnessSpec(
+            ttl_s=900.0,
+            topic_ttl_s={0: 60.0, 7: math.inf},
+            stale_policy="serve_stale_while_revalidate",
+            tick_s=0.5,
+        ),
+    ],
+)
+def test_freshness_spec_round_trips_through_serving_spec(fs):
+    spec = _spec(freshness=fs)
+    again = ServingSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.freshness == fs
+    assert again.to_json() == spec.to_json()
+
+
+def test_freshness_spec_validates():
+    with pytest.raises(ValueError, match="ttl_s"):
+        FreshnessSpec(ttl_s=0.0)
+    with pytest.raises(ValueError, match="tick_s"):
+        FreshnessSpec(tick_s=0.0)
+    with pytest.raises(ValueError, match="tick_s"):
+        FreshnessSpec(tick_s=math.inf)
+    with pytest.raises(ValueError, match="stale_policy"):
+        FreshnessSpec(stale_policy="lie")
+    with pytest.raises(ValueError, match="keys"):
+        FreshnessSpec(topic_ttl_s={-1: 10.0})
+    with pytest.raises(ValueError, match="topic_ttl_s"):
+        FreshnessSpec(topic_ttl_s={3: 0.0})
+    with pytest.raises(ValueError, match="newer"):
+        FreshnessSpec.from_dict({"version": 99, "ttl_s": 10.0})
+
+
+def test_freshness_spec_enabled_and_ttl_for():
+    assert not FreshnessSpec().enabled
+    assert not FreshnessSpec(topic_ttl_s={3: math.inf}).enabled
+    assert FreshnessSpec(ttl_s=10.0).enabled
+    assert FreshnessSpec(topic_ttl_s={3: 10.0}).enabled  # default stays inf
+    fs = FreshnessSpec(ttl_s=100.0, topic_ttl_s={2: 5.0})
+    assert fs.ttl_for(2) == 5.0
+    assert fs.ttl_for(3) == 100.0
+
+
+# -- FreshnessRuntime: epochs, floors, flushes -------------------------------
+
+
+def test_runtime_epochs_and_ttl_floors():
+    rt = FreshnessRuntime(
+        FreshnessSpec(ttl_s=10.0, topic_ttl_s={1: 3.0}), topic_ids=[0, 1]
+    )
+    assert rt.ttl_ep[0] == 10 and rt.ttl_ep[1] == 3 and rt.ttl_ep[2] == 10
+    rt.advance(25.0)
+    assert rt.now_epoch == 25
+    assert (rt.epochs(3) == 25).all()
+    # parts: [topic0, topic1, dynamic]
+    assert rt.min_epoch(np.array([0, 1, 2])).tolist() == [15, 22, 15]
+    rt.advance(5.0)  # stale clock: monotonicity holds
+    assert rt.now_epoch == 25
+
+
+def test_runtime_infinite_ttl_floor_is_zero():
+    rt = FreshnessRuntime(FreshnessSpec(), topic_ids=[0, 1])
+    rt.advance(1e9)
+    assert (rt.min_epoch(np.array([0, 1, 2])) == 0).all()
+    assert (rt.ttl_ep == TTL_EP_INF).all()
+
+
+def test_runtime_flush_topic_expires_past_admits_future():
+    rt = FreshnessRuntime(FreshnessSpec(ttl_s=100.0), topic_ids=[0, 1])
+    rt.advance(7.0)
+    rt.flush_topic(1)
+    floors = rt.min_epoch(np.array([0, 1, 2]))
+    # partition 1's floor jumped above every epoch written so far ...
+    assert floors[1] == 8 and floors[1] > 7
+    assert floors[0] == 0 and floors[2] == 0
+    # ... while writes from now on stamp at-or-above the floor (fresh)
+    assert (rt.epochs(2) >= floors[1]).all()
+    rt.flush_all()
+    assert (rt.min_epoch(np.array([0, 1, 2])) == 9).all()
+
+
+def test_runtime_checkpoint_tree_round_trip():
+    rt = FreshnessRuntime(FreshnessSpec(ttl_s=50.0), topic_ids=[0, 1])
+    rt.advance(42.5)
+    rt.flush_topic(0)
+    tree = rt.tree()
+    other = FreshnessRuntime(FreshnessSpec(ttl_s=50.0), topic_ids=[0, 1])
+    other.load(tree)
+    assert other.now_s == rt.now_s and other.now_epoch == rt.now_epoch
+    assert (other.floors == rt.floors).all()
+    assert np.array_equal(
+        other.min_epoch(np.arange(3)), rt.min_epoch(np.arange(3))
+    )
+    bad = FreshnessRuntime(FreshnessSpec(ttl_s=50.0), topic_ids=[0, 1, 2])
+    with pytest.raises(ValueError, match="floors shape"):
+        bad.load(tree)
+
+
+# -- four-engine conformance under expiry ------------------------------------
+
+
+def _conf_cache():
+    cfg = DeviceCacheConfig.build(
+        256, f_s=0.0, f_t=0.5,
+        topic_distinct={0: 30, 1: 30, 2: 20, 3: 20}, ways=4, value_dim=2,
+    )
+    return STDDeviceCache(cfg)
+
+
+def _conf_states_equal(ref, got, label):
+    for k in ("ks", "value", "clock"):
+        a, b = np.asarray(ref[k]), np.asarray(got[k])
+        assert (a == b).all(), f"{label}: state[{k}] diverged"
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_four_engines_bit_exact_with_expiry(seed):
+    """vec / Pallas(interpret) / host / sequential-replay fused engines --
+    and the numpy per-request oracle -- agree bit-for-bit on evolving
+    state with advancing epochs and per-partition freshness floors."""
+    rng = np.random.default_rng(seed)
+    cache = _conf_cache()
+    state = dict(cache.init_state)
+    # per-partition TTLs in epoch units (last = dynamic); finite + inf mix
+    ttl_ep = np.array([2, 4, 6, TTL_EP_INF, 5], np.int64)
+    for step in range(6):
+        b = 96
+        qids = rng.integers(0, 60, size=b)
+        topics = rng.integers(-1, 4, size=b)
+        parts = np.asarray(cache.parts_for(topics), np.int32)
+        hi, lo = pack_hashes(splitmix64(qids))
+        admit = rng.random(b) < 0.7
+        vals = rng.integers(0, 1000, size=(b, 2)).astype(np.int32)
+        now_ep = 3 + step * 2
+        eps = np.full(b, now_ep, np.uint32)
+        minep = np.maximum(now_ep - ttl_ep[parts], 0).astype(np.uint32)
+
+        outs = {}
+        for label, use_kernel in (("vec", False), ("kernel", True)):
+            outs[label] = cache.probe_and_commit(
+                state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
+                jnp.asarray(admit), epochs=jnp.asarray(eps),
+                min_epoch=jnp.asarray(minep),
+                use_kernel=use_kernel, interpret=True,
+            )
+        outs["host"] = cache.probe_and_commit_host(
+            state, hi, lo, parts, admit, epochs=eps, min_epoch=minep
+        )
+        # depth limit 0 forces the host engine onto the compiled
+        # sequential replay -- the fourth engine
+        old_limit = STDDeviceCache.HOST_DEPTH_LIMIT
+        STDDeviceCache.HOST_DEPTH_LIMIT = 0
+        try:
+            outs["replay"] = cache.probe_and_commit_host(
+                state, hi, lo, parts, admit, epochs=eps, min_epoch=minep
+            )
+        finally:
+            STDDeviceCache.HOST_DEPTH_LIMIT = old_limit
+
+        # numpy per-request oracle over the same pristine state
+        key_hi, key_lo, stamp = unpack_words(np.asarray(state["ks"]))
+        epoch0 = np.asarray(unpack_epoch(np.asarray(state["ks"])))
+        static_hit, _ = cache.static_lookup(state, hi, lo)
+        set_idx = np.asarray(cache._set_index(jnp.asarray(lo), jnp.asarray(parts)))
+        ref = probe_and_commit_ref(
+            key_hi, key_lo, stamp, hi, lo, set_idx,
+            admit, np.asarray(static_hit), int(state["clock"]),
+            epoch=epoch0, epochs=eps, min_epoch=minep,
+        )
+        ref_ks = pack_words(ref["key_hi"], ref["key_lo"], ref["stamp"], ref["epoch"])
+
+        base = outs["vec"]
+        hit_b, lay_b, val_b, stale_b, s_b, (si_b, wr_b, way_b) = base
+        assert (np.asarray(s_b["ks"]) == ref_ks).all(), f"step{step}: vec vs oracle"
+        assert (np.asarray(hit_b) == (ref["pre_hit"] | np.asarray(static_hit))).all()
+        assert (np.asarray(stale_b) == ref["pre_stale"]).all()
+        assert (np.asarray(wr_b) == ref["wrote"]).all()
+        for label in ("kernel", "host", "replay"):
+            hit, lay, val, stale, s_new, (si, wr, way) = outs[label]
+            assert (np.asarray(hit) == np.asarray(hit_b)).all(), (step, label)
+            assert (np.asarray(lay) == np.asarray(lay_b)).all(), (step, label)
+            assert (np.asarray(val) == np.asarray(val_b)).all(), (step, label)
+            assert (np.asarray(stale) == np.asarray(stale_b)).all(), (step, label)
+            assert (np.asarray(wr) == np.asarray(wr_b)).all(), (step, label)
+            assert (np.asarray(way) == np.asarray(way_b)).all(), (step, label)
+            _conf_states_equal(s_b, s_new, f"step{step}/{label}")
+
+        # deferred fills agree too; carry the filled state forward
+        filled = cache.fill_values(
+            s_b, jnp.asarray(si_b), jnp.asarray(wr_b), jnp.asarray(way_b),
+            jnp.asarray(vals),
+        )
+        hit_h, _, _, _, s_h, (si_h, wr_h, way_h) = outs["host"]
+        filled_h = cache.fill_values_host(s_h, si_h, wr_h, way_h, vals)
+        _conf_states_equal(filled, filled_h, f"step{step}/fill")
+        state = filled
+        # some expiry actually happened once the clock outran the TTLs
+        if step >= 3:
+            assert np.asarray(stale_b).any(), f"step{step}: no expiry exercised"
+
+
+def test_zero_epochs_reproduce_pre_freshness_state():
+    """epochs/min_epoch all-zero (what a freshness-less broker passes)
+    leaves the packed state with a zero fourth word and bit-identical
+    key/stamp words to an epoch-free call."""
+    rng = np.random.default_rng(2)
+    cache = _conf_cache()
+    state = dict(cache.init_state)
+    qids = rng.integers(0, 40, size=64)
+    topics = rng.integers(-1, 4, size=64)
+    parts = np.asarray(cache.parts_for(topics), np.int32)
+    hi, lo = pack_hashes(splitmix64(qids))
+    admit = np.ones(64, bool)
+    zeros = np.zeros(64, np.uint32)
+    *_, s_plain, plan_plain = cache.probe_and_commit(
+        state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
+        jnp.asarray(admit),
+    )
+    *_, s_zero, plan_zero = cache.probe_and_commit(
+        state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
+        jnp.asarray(admit), epochs=jnp.asarray(zeros), min_epoch=jnp.asarray(zeros),
+    )
+    assert (np.asarray(s_plain["ks"]) == np.asarray(s_zero["ks"])).all()
+    assert (np.asarray(unpack_epoch(np.asarray(s_zero["ks"]))) == 0).all()
+
+
+# -- TTL=inf == freshness off ------------------------------------------------
+
+
+def test_ttl_inf_request_identical_to_no_spec():
+    log, stats = _stats(seed=5)
+    backend = _backend(2)
+    base = Broker.from_spec(_spec(), stats, [backend], value_fn=backend)
+    inf = Broker.from_spec(
+        _spec(freshness=FreshnessSpec()), stats, [backend], value_fn=backend
+    )
+    stream = log.test_keys
+    t = 0.0
+    for lo in range(0, len(stream), 64):
+        batch = stream[lo : lo + 64]
+        t += 100.0  # a running clock must change nothing under inf TTL
+        inf.advance_time(t)
+        v0, h0 = base.serve(batch)
+        v1, h1 = inf.serve(batch)
+        assert np.array_equal(h0, h1)
+        assert np.array_equal(v0, v1)
+    assert base.stats.hits == inf.stats.hits > 0
+    for f in ("expired", "stale_served", "revalidations", "freshness_violations"):
+        assert getattr(inf.stats, f) == 0, f
+
+
+# -- stale policies against the value-age oracle -----------------------------
+
+
+def test_policy_miss_never_serves_expired():
+    fs = FreshnessSpec(ttl_s=50.0)
+    clock, broker = _topic_broker(fs)
+    keys = np.arange(24, dtype=np.int64)
+    ages = []
+    for t in (0.0, 30.0, 45.0, 120.0, 130.0, 400.0):
+        clock["t"] = t
+        broker.advance_time(t)
+        values, hit = broker.serve(keys)
+        ages.append((t, np.asarray(values)[:, 1].copy(), hit.copy()))
+        # every answer's true age stays within the TTL (plus tick slack)
+        age = t - np.asarray(values)[:, 1]
+        assert (age <= fs.ttl_s + 3.0).all(), (t, age.max())
+    # warm re-serve inside the TTL hit from cache with the old stamp ...
+    t1, stamps1, hit1 = ages[1]
+    assert hit1.all() and (stamps1 == 0).all()
+    # ... and past the TTL the expired entries re-fetched as misses
+    t3, stamps3, hit3 = ages[3]
+    assert not hit3.any() and (stamps3 == 120).all()
+    assert broker.stats.expired > 0
+    assert broker.stats.stale_served == 0
+    assert broker.stats.freshness_violations == 0
+
+
+def test_policy_swr_serves_stale_once_then_fresh():
+    fs = FreshnessSpec(ttl_s=50.0, stale_policy="serve_stale_while_revalidate")
+    clock, broker = _topic_broker(fs)
+    keys = np.arange(16, dtype=np.int64)
+    clock["t"] = 0.0
+    broker.serve(keys)
+    # expired: the stale value is served immediately (still a hit) ...
+    clock["t"] = 100.0
+    broker.advance_time(100.0)
+    values, hit = broker.serve(keys)
+    assert hit.all()
+    assert (np.asarray(values)[:, 1] == 0).all()  # the old payload, by design
+    assert broker.stats.stale_served == len(keys)
+    assert broker.stats.revalidations == len(keys)
+    # ... while the revalidation refreshed the entry for the next probe
+    clock["t"] = 101.0
+    broker.advance_time(101.0)
+    values2, hit2 = broker.serve(keys)
+    assert hit2.all()
+    assert (np.asarray(values2)[:, 1] == 100).all()
+    assert broker.stats.stale_served == len(keys)  # no second stale serve
+    assert broker.stats.freshness_violations == 0
+
+
+def test_per_topic_ttl_override():
+    """Topic 0 expires on its short override while topic 1 (default TTL)
+    still serves from cache at the same instant."""
+    fs = FreshnessSpec(ttl_s=1000.0, topic_ttl_s={0: 30.0})
+    clock, broker = _topic_broker(fs)
+    keys = np.arange(20, dtype=np.int64)  # key k -> topic k % 2
+    clock["t"] = 0.0
+    broker.serve(keys)
+    clock["t"] = 60.0  # past topic 0's TTL, well inside the default
+    broker.advance_time(60.0)
+    values, hit = broker.serve(keys)
+    topic = keys % 2
+    assert not hit[topic == 0].any()
+    assert hit[topic == 1].all()
+    assert (np.asarray(values)[topic == 0, 1] == 60).all()
+    assert (np.asarray(values)[topic == 1, 1] == 0).all()
+
+
+# -- invalidation ------------------------------------------------------------
+
+
+def test_broker_invalidate_argument_contract():
+    _, broker = _topic_broker(FreshnessSpec(ttl_s=100.0))
+    with pytest.raises(ValueError, match="exactly one"):
+        broker.invalidate()
+    with pytest.raises(ValueError, match="exactly one"):
+        broker.invalidate(keys=np.array([1]), topic=0)
+    _, plain = _topic_broker(None)
+    with pytest.raises(ValueError, match="FreshnessSpec"):
+        plain.invalidate(topic=0)
+
+
+def test_key_invalidation_works_without_freshness():
+    _, broker = _topic_broker(None)
+    keys = np.arange(8, dtype=np.int64)
+    broker.serve(keys)
+    _, hit = broker.serve(keys)
+    assert hit.all()
+    n = broker.invalidate(keys=keys[:4])
+    assert n == 4 and broker.stats.invalidations == 4
+    _, hit2 = broker.serve(keys)
+    assert not hit2[:4].any() and hit2[4:].all()
+    assert broker.invalidate(keys=np.zeros(0, np.int64)) == 0
+
+
+def test_topic_invalidation_is_epoch_bump():
+    clock, broker = _topic_broker(FreshnessSpec(ttl_s=10_000.0))
+    keys = np.arange(20, dtype=np.int64)
+    clock["t"] = 5.0
+    broker.advance_time(5.0)
+    broker.serve(keys)
+    ks_before = np.asarray(broker.state["ks"]).copy()
+    broker.invalidate(topic=0)
+    # O(1): not a single cache word moved ...
+    assert (np.asarray(broker.state["ks"]) == ks_before).all()
+    # ... yet topic 0 expired wholesale and refreshes fresh
+    clock["t"] = 6.0
+    broker.advance_time(6.0)
+    _, hit = broker.serve(keys)
+    topic = keys % 2
+    assert not hit[topic == 0].any() and hit[topic == 1].all()
+    _, hit2 = broker.serve(keys)
+    assert hit2.all()  # re-filled entries are fresh again
+    broker.invalidate(topic=-1)  # flush everything
+    _, hit3 = broker.serve(keys)
+    assert not hit3.any()
+    assert broker.stats.invalidations == 2
+
+
+def test_generate_invalidations_deterministic_sorted_replayable():
+    cfg = SynthConfig(
+        n_requests=4000, n_topics=6, n_topical_queries=600,
+        n_notopic_queries=200, n_days=2.0, seed=3,
+    )
+    log = generate(cfg)
+    icfg = InvalidationConfig(topic_rate=2.0, key_rate=30.0, seed=5, topics=(1, 4))
+    a = generate_invalidations(icfg, log)
+    b = generate_invalidations(icfg, log)
+    assert len(a) > 0
+    assert np.array_equal(a.times, b.times)
+    assert np.array_equal(a.kinds, b.kinds)
+    assert np.array_equal(a.targets, b.targets)
+    assert (np.diff(a.times) >= 0).all()
+    topic_targets = a.targets[a.kinds == INVAL_TOPIC]
+    assert set(np.unique(topic_targets)) <= {1, 4}
+    key_targets = a.targets[a.kinds == INVAL_KEY]
+    assert len(key_targets) > 0
+    # the replay cursor consumes each event exactly once, reset replays
+    half = a.take_until(float(a.times[len(a) // 2]))
+    rest = a.take_until(float(a.times[-1]) + 1.0)
+    assert len(half) + len(rest) == len(a)
+    assert a.take_until(1e18) == []
+    a.reset()
+    assert len(a.take_until(1e18)) == len(a)
+
+
+def test_invalidation_stream_applies_to_broker():
+    clock, broker = _topic_broker(FreshnessSpec(ttl_s=10_000.0))
+    from repro.querylog import InvalidationStream
+
+    stream = InvalidationStream(
+        times=np.array([1.0, 2.0]),
+        kinds=np.array([INVAL_TOPIC, INVAL_KEY], np.int8),
+        targets=np.array([0, 3], np.int64),
+    )
+    keys = np.arange(8, dtype=np.int64)
+    broker.serve(keys)
+    assert stream.apply(broker, t=0.5) == 0
+    assert stream.apply(broker, t=5.0) == 2
+    assert broker.stats.invalidations >= 2
+
+
+# -- checkpoints, rebalance, epochs survive ----------------------------------
+
+
+def test_checkpoint_round_trips_freshness_state():
+    fs = FreshnessSpec(ttl_s=500.0)
+    log, stats = _stats(seed=9)
+    backend = _backend(2)
+    spec = _spec(freshness=fs)
+    broker = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    stream = log.test_keys
+    broker.advance_time(123.0)
+    broker.serve(stream[:128])
+    broker.invalidate(topic=2)
+    broker.serve(stream[128:256])
+    with tempfile.TemporaryDirectory() as d:
+        broker.save(d, step=7)
+        again = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+        assert again.restore(d) == 7
+        assert again.freshness.now_s == broker.freshness.now_s
+        assert (again.freshness.floors == broker.freshness.floors).all()
+        assert again.freshness.now_epoch == broker.freshness.now_epoch
+        # the epoch words came back with the packed state
+        assert np.array_equal(
+            np.asarray(unpack_epoch(np.asarray(again.state["ks"]))),
+            np.asarray(unpack_epoch(np.asarray(broker.state["ks"]))),
+        )
+        # and the restored broker continues request-for-request identical
+        for t, lo in ((400.0, 256), (700.0, 320)):
+            broker.advance_time(t)
+            again.advance_time(t)
+            v0, h0 = broker.serve(stream[lo : lo + 64])
+            v1, h1 = again.serve(stream[lo : lo + 64])
+            assert np.array_equal(h0, h1) and np.array_equal(v0, v1)
+        assert broker.stats.expired > 0  # the continuation exercised expiry
+
+
+def test_repartition_migrates_epochs():
+    cache = _conf_cache()
+    state = dict(cache.init_state)
+    rng = np.random.default_rng(4)
+    qids = rng.permutation(100)[:48]
+    topics = qids % 4
+    parts = np.asarray(cache.parts_for(topics), np.int32)
+    hi, lo = pack_hashes(splitmix64(qids))
+    eps = np.full(48, 77, np.uint32)
+    state = cache.commit_host(
+        state, hi, lo, parts,
+        np.ones((48, 2), np.int32), np.ones(48, bool), epochs=eps,
+    )
+    new_cfg = DeviceCacheConfig.build(
+        256, f_s=0.0, f_t=0.5,
+        topic_distinct={0: 50, 1: 20, 2: 20, 3: 10}, ways=4, value_dim=2,
+    )
+    _, new_state = cache.repartition(state, new_cfg, engine="host")
+    key_hi, _, _ = unpack_words(np.asarray(new_state["ks"]))
+    epoch = np.asarray(unpack_epoch(np.asarray(new_state["ks"])))
+    live = key_hi != 0
+    assert live.any()
+    # a rebalance moves capacity, it does not renew TTLs
+    assert (epoch[live] == 77).all()
+
+
+def test_live_rebalance_does_not_renew_ttls():
+    fs = FreshnessSpec(ttl_s=50.0)
+    clock, broker = _topic_broker(
+        fs, rebalance=RebalanceSpec(every=10_000, decay=1.0, min_count=0.0)
+    )
+    keys = np.arange(24, dtype=np.int64)
+    clock["t"] = 0.0
+    broker.serve(keys)
+    clock["t"] = 40.0
+    broker.advance_time(40.0)
+    broker.serve(keys)  # still fresh, and feeds the popularity tracker
+    broker.rebalance(force=True)
+    clock["t"] = 60.0  # past the TTL measured from *insertion*, not migration
+    broker.advance_time(60.0)
+    values, hit = broker.serve(keys)
+    assert not hit.any()
+    assert (np.asarray(values)[:, 1] == 60).all()
+    assert broker.stats.freshness_violations == 0
+
+
+# -- cluster conformance + degraded invalidation -----------------------------
+
+
+@pytest.mark.parametrize("policy", ["miss", "serve_stale_while_revalidate"])
+def test_single_shard_cluster_matches_bare_broker(policy):
+    fs = FreshnessSpec(ttl_s=40.0, stale_policy=policy)
+    log, stats = _stats(seed=13)
+    backend = _backend(2)
+    spec = _spec(freshness=fs)
+    bare = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    cluster = Cluster.from_spec(spec, stats, [backend], value_fn=backend)
+    stream = log.test_keys
+    t = 0.0
+    for lo in range(0, min(len(stream), 640), 64):
+        batch = stream[lo : lo + 64]
+        t += 15.0
+        bare.advance_time(t)
+        cluster.advance_time(t)
+        v0, h0 = bare.serve(batch)
+        v1, h1 = cluster.serve(batch)
+        assert np.array_equal(h0, h1)
+        assert np.array_equal(v0, v1)
+    assert dataclasses.asdict(cluster.stats) == dataclasses.asdict(bare.stats)
+    assert cluster.stats.expired > 0
+    if policy == "serve_stale_while_revalidate":
+        assert cluster.stats.stale_served > 0
+    assert cluster.stats.freshness_violations == 0
+
+
+def test_cluster_invalidation_routes_and_replays_on_recovery():
+    fs = FreshnessSpec(ttl_s=10_000.0)
+    log, stats = _stats(seed=17)
+    backend = _backend(2)
+    spec = _spec(
+        shards=2, routing="topic", freshness=fs,
+        resilience=ResilienceSpec(
+            max_retries=1, backoff_base_us=1.0, suspect_after=1, down_after=1,
+            probe_interval_s=0.01, recover_after=1,
+        ),
+    )
+    cluster = Cluster.from_spec(spec, stats, [backend], value_fn=backend)
+    with pytest.raises(ValueError, match="exactly one"):
+        cluster.invalidate()
+    cluster.serve(log.test_keys[:256])
+    # key invalidation drops resident slots, grouped shard-locally
+    served = np.unique(log.test_keys[:256])[:16]
+    n = cluster.invalidate(keys=served)
+    assert n > 0
+    assert cluster.invalidate(keys=np.zeros(0, np.int64)) == 0
+    # topic routing: tau goes to shard tau % 2 and only there
+    tau = 3
+    owner = tau % 2
+    floors_other = cluster.brokers[1 - owner].freshness.floors.copy()
+    cluster.invalidate(topic=tau)
+    assert cluster.brokers[owner].stats.invalidations >= 1
+    assert (cluster.brokers[1 - owner].freshness.floors == floors_other).all()
+    # an event for a DOWN shard queues, then replays after recovery --
+    # on top of the restored checkpoint, which predates the event
+    with tempfile.TemporaryDirectory() as d:
+        cluster.save(d, step=1)
+        down = owner
+        cluster._health[down].mark_down(0.0)
+        floors_before = cluster.brokers[down].freshness.floors.copy()
+        cluster.invalidate(topic=tau)
+        assert len(cluster._pending_inval[down]) == 1
+        assert (cluster.brokers[down].freshness.floors == floors_before).all()
+        assert cluster.recover_shard(down) == 1
+        assert cluster._pending_inval[down] == []
+        assert (cluster.brokers[down].freshness.floors != floors_before).any()
+
+
+# -- serving-layer regressions -----------------------------------------------
+
+
+def test_flush_twice_is_noop():
+    """A deferred fill plan is consumed exactly once: the second flush()
+    neither re-issues the fill nor perturbs the state."""
+    log, stats = _stats(seed=21)
+    backend = _backend(2)
+    spec = _spec(engine="device", freshness=FreshnessSpec(ttl_s=1000.0))
+    broker = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    assert broker.defer_fill
+    broker.serve(log.test_keys[:64])
+    assert broker._pending_fill is not None
+    broker.flush()
+    assert broker._pending_fill is None
+    snap = {k: np.asarray(v).copy() for k, v in broker.state.items()}
+    broker.flush()
+    for k, v in snap.items():
+        assert (np.asarray(broker.state[k]) == v).all(), k
+
+
+def test_freshness_compiles_zero_new_traces():
+    """Enabling freshness reuses every trace: the jit signatures carry
+    the epoch arrays whether a spec is configured or not."""
+    log, stats = _stats(seed=23)
+    backend = _backend(2)
+    bucket = BucketSpec(min_size=8)
+
+    def drive(freshness):
+        spec = _spec(engine="device", bucket=bucket, freshness=freshness)
+        broker = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+        t = 0.0
+        stream = log.test_keys
+        for size in (64, 64, 17, 33, 64, 5):
+            t += 50.0
+            broker.advance_time(t)
+            broker.serve(stream[:size])
+            stream = stream[size:]
+        broker.flush()
+        return dict(broker.trace_counts)
+
+    off = drive(None)
+    # finite TTL, long enough that nothing expires inside the run: the
+    # serve pattern is then identical and so must be every trace count
+    # (the epoch arrays ride the same jit signatures either way)
+    on = drive(FreshnessSpec(ttl_s=10_000.0))
+    assert on == off
+    assert sum(off.values()) > 0

@@ -185,7 +185,7 @@ def test_repartition_carries_static_layer_values():
         assert np.array_equal(np.asarray(new_state[k]), np.asarray(state[k])), k
     # a static key still answers with its preloaded value through the new cache
     hi, lo = pack_hashes(splitmix64(np.asarray(static)))
-    hit, layer, value = new_cache.probe(
+    hit, layer, value, _ = new_cache.probe(
         new_state, hi, lo, np.zeros(len(static), np.int32)
     )
     assert np.asarray(hit).all() and (np.asarray(layer) == 0).all()

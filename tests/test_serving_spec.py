@@ -44,7 +44,7 @@ def test_from_spec_builds_consistent_device_cache():
     probe = jax.jit(cache.probe)
     h_hi, h_lo = pack_hashes(splitmix64(static_keys))
     parts = cache.parts_for(np.asarray(stats.key_topic[static_keys]))
-    hit, layer, value = probe(dict(cache.init_state), h_hi, h_lo, parts)
+    hit, layer, value, _ = probe(dict(cache.init_state), h_hi, h_lo, parts)
     assert np.asarray(hit).all()
     assert (np.asarray(layer) == 0).all()
     assert (np.asarray(value)[:, 0] == static_keys).all()

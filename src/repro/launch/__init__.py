@@ -3,7 +3,13 @@
 NOTE: ``dryrun`` must be the process entrypoint (it sets XLA_FLAGS before
 any jax import) -- do not import it from here.
 """
-from .mesh import batch_axes, make_production_mesh, make_smoke_mesh, mesh_device_count
+from .mesh import (
+    batch_axes,
+    make_production_mesh,
+    make_smoke_mesh,
+    mesh_device_count,
+    shard_devices,
+)
 from .steps import StepBundle, build_step, input_specs
 
 __all__ = [
@@ -14,4 +20,5 @@ __all__ = [
     "make_production_mesh",
     "make_smoke_mesh",
     "mesh_device_count",
+    "shard_devices",
 ]

@@ -16,7 +16,7 @@ the dry-run exercises P=2 (512 chips).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -56,3 +56,22 @@ def model_axis(mesh: Mesh) -> Optional[str]:
 
 def mesh_device_count(mesh: Mesh) -> int:
     return int(np.prod(list(mesh.shape.values())))
+
+
+def shard_devices(n_shards: int, devices: Optional[Sequence] = None) -> list:
+    """Round-robin shard -> device placement for cluster serving.
+
+    Shard broker ``i`` of a :class:`repro.serving.cluster.Cluster` pins
+    its cache state to ``devices[i % len(devices)]`` so shard serves
+    overlap on hardware when the backend has more than one device.  With
+    fewer devices than shards, shards wrap (several brokers share a
+    device); with one device this degenerates to today's single-device
+    placement.  ``devices`` defaults to ``jax.devices()``.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if not devs:
+        raise ValueError("no devices available for shard placement")
+    n = int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return [devs[i % len(devs)] for i in range(n)]

@@ -12,6 +12,7 @@ runnable code, scaled out with ``--shards``/``--routing``.
   PYTHONPATH=src python -m repro.launch.serve --open-loop --rate 100000 --burst 4
   PYTHONPATH=src python -m repro.launch.serve --open-loop --shards 4 \
       --fault-shard 2@0.1 --min-availability 1.0
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --pipeline 8
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ from ..loadgen import (
 from ..serving import (
     BucketSpec,
     Cluster,
+    DispatchSpec,
     FreshnessSpec,
     HedgeSpec,
     RebalanceSpec,
@@ -111,6 +113,19 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--routing", default="hash", choices=("hash", "topic"),
         help="query -> shard routing (topic routing moves whole partitions)",
+    )
+    ap.add_argument(
+        "--pipeline", type=int, default=0, metavar="K",
+        help="pipelined async dispatch: submit up to K batches through "
+        "serve_async before draining, so per-shard work fuses across "
+        "consecutive batches (0 = synchronous scatter-gather). Fused "
+        "serves return identical values; cross-batch duplicate hits are "
+        "accounted approximately (docs/serving.md)",
+    )
+    ap.add_argument(
+        "--max-fuse", type=int, default=8,
+        help="max queued batch segments one shard fuses into a single "
+        "broker call when --pipeline is on",
     )
     ap.add_argument(
         "--bucket", default="auto", choices=("auto", "pow2", "off"),
@@ -240,6 +255,11 @@ def main(argv=None) -> int:
             "off": BucketSpec(mode="none"),
         }[args.bucket],
         hedge=HedgeSpec(deadline_s=2.0),
+        dispatch=(
+            DispatchSpec(max_fuse=args.max_fuse)
+            if args.pipeline > 0
+            else None
+        ),
         rebalance=(
             RebalanceSpec(
                 every=args.rebalance,
@@ -352,7 +372,8 @@ def main(argv=None) -> int:
                     cluster.inject_shard_faults(shard, fspec)
                     print(f"fault injected on shard {shard}: {fspec.to_json()}")
             res = run_open_loop(
-                workload, cluster, policy, collect=bool(faults)
+                workload, cluster, policy, collect=bool(faults),
+                pipeline=args.pipeline or None,
             )
             rep = res.report()
             print(
@@ -426,10 +447,27 @@ def main(argv=None) -> int:
         )
         # serve every batch including the ragged tail, so the reported hit
         # rate covers the whole test stream
-        for lo in range(0, len(test), args.batch):
-            if ts_test is not None:
-                cluster.advance_time(float(ts_test[lo]))
-            cluster.serve(test[lo : lo + args.batch])
+        starts = list(range(0, len(test), args.batch))
+        if args.pipeline > 1:
+            # pipelined drive: submit a group before draining so per-shard
+            # work fuses across batches; the freshness clock (if any)
+            # advances to the group's last batch up front, since queued
+            # batches serve at submission time
+            for g in range(0, len(starts), args.pipeline):
+                grp = starts[g : g + args.pipeline]
+                if ts_test is not None:
+                    cluster.advance_time(float(ts_test[grp[-1]]))
+                futs = [
+                    cluster.serve_async(test[lo : lo + args.batch])
+                    for lo in grp
+                ]
+                for f in futs:
+                    f.result()
+        else:
+            for lo in starts:
+                if ts_test is not None:
+                    cluster.advance_time(float(ts_test[lo]))
+                cluster.serve(test[lo : lo + args.batch])
         dt = time.time() - t0
         s = cluster.stats
         assert s.requests == len(test)

@@ -424,6 +424,7 @@ def run_open_loop(
     clock: Callable[[], float] = time.perf_counter,
     collect: bool = False,
     invalidations=None,
+    pipeline: Optional[int] = None,
 ) -> LoadResult:
     """Plan batches in virtual time, then serve them for real.
 
@@ -449,6 +450,23 @@ def run_open_loop(
     same virtual time: events due at or before a batch's dispatch time
     land before it serves, so freshness episodes -- like fault
     episodes -- are a deterministic function of the plan and the seeds.
+
+    ``pipeline`` (default off) drives servers exposing ``serve_async``
+    -- a :class:`repro.serving.Cluster` with a ``DispatchSpec`` -- in
+    groups of up to that many consecutive same-tenant batches: the
+    whole group is submitted before any result is drained, so shard
+    work fuses across batches.  The group is the measurement unit of a
+    steady-state pipeline (like ``reps`` in a throughput bench), so its
+    measured wall time is amortized over the group's requests and each
+    batch's service time is its request-weighted share -- the
+    steady-state residence time of a batch inside the pipeline.
+    ``wall_serve_s`` still accumulates each group's wall time once, so
+    throughput numbers stay unamortized.  The virtual clock and
+    invalidation streams advance to the *last* batch's ``t_dispatch``
+    before the group serves: queued batches serve at submission time,
+    so events up to the flush land first, exactly like a deadline-held
+    batch.  Servers without ``serve_async`` fall back to the per-batch
+    synchronous loop.
     """
     srv = _as_list(servers, workload.n_tenants, "servers")
     buckets = (
@@ -473,26 +491,49 @@ def run_open_loop(
     wall = 0.0
     values: Optional[np.ndarray] = None
     hit: Optional[np.ndarray] = None
-    for batch in plan.batches:
-        keys = workload.keys[batch.idx]
+    pipe = max(1, int(pipeline)) if pipeline else 1
+    batches = plan.batches
+    i = 0
+    while i < len(batches):
+        batch = batches[i]
         server = srv[batch.tenant]
+        group = [batch]
+        if pipe > 1 and hasattr(server, "serve_async"):
+            while (
+                len(group) < pipe
+                and i + len(group) < len(batches)
+                and batches[i + len(group)].tenant == batch.tenant
+            ):
+                group.append(batches[i + len(group)])
+        i += len(group)
+        t_dispatch = group[-1].t_dispatch
         advance = getattr(server, "advance_time", None)
         if advance is not None:
-            advance(batch.t_dispatch)
+            advance(t_dispatch)
         stream = invals[batch.tenant]
         if stream is not None:
-            stream.apply(server, batch.t_dispatch)
-        t0 = clock()
-        v, h = server.serve(keys)
-        dt = clock() - t0
-        service[batch.idx] = dt
+            stream.apply(server, t_dispatch)
+        if len(group) == 1:
+            t0 = clock()
+            outs = [server.serve(workload.keys[batch.idx])]
+            dt = clock() - t0
+        else:
+            t0 = clock()
+            futs = [server.serve_async(workload.keys[b.idx]) for b in group]
+            outs = [f.result() for f in futs]
+            dt = clock() - t0
         wall += dt
-        if collect:
-            if values is None:
-                values = np.zeros((n, np.asarray(v).shape[1]), np.int32)
-                hit = np.zeros(n, bool)
-            values[batch.idx] = v
-            hit[batch.idx] = h
+        n_served = sum(len(b.idx) for b in group)
+        for b, (v, h) in zip(group, outs):
+            service[b.idx] = (
+                dt * (len(b.idx) / n_served) if len(group) > 1 else dt
+            )
+            if collect:
+                if values is None:
+                    values = np.zeros((n, np.asarray(v).shape[1]), np.int32)
+                    hit = np.zeros(n, bool)
+                values[b.idx] = v
+                hit[b.idx] = h
     stats = [s.stats for s in srv]
     return LoadResult(
         workload=workload,

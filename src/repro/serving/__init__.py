@@ -6,7 +6,7 @@ single ``Broker`` (``Broker.from_spec``) or a sharded ``Cluster``
 (``Cluster.from_spec``).  See docs/serving.md.
 """
 from .broker import Backend, Broker, BrokerStats, HedgePolicy
-from .cluster import Cluster
+from .cluster import Cluster, ClusterFuture
 from .device_cache import (
     DYNAMIC,
     PAD_H64,
@@ -29,7 +29,14 @@ from .resilience import (
     ResilienceSpec,
     ShardHealth,
 )
-from .spec import BatchPolicySpec, BucketSpec, FreshnessSpec, HedgeSpec, ServingSpec
+from .spec import (
+    BatchPolicySpec,
+    BucketSpec,
+    DispatchSpec,
+    FreshnessSpec,
+    HedgeSpec,
+    ServingSpec,
+)
 
 __all__ = [
     "Backend",
@@ -38,6 +45,8 @@ __all__ = [
     "BrokerStats",
     "BucketSpec",
     "Cluster",
+    "ClusterFuture",
+    "DispatchSpec",
     "DOWN",
     "DYNAMIC",
     "DeviceCacheConfig",

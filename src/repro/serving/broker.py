@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -197,6 +198,12 @@ class Broker:
         #: last batch's inserts, applied inside the next fused call or by
         #: :meth:`flush`
         self._pending_fill: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        #: guards the pending-fill handoff: the pipelined cluster front
+        #: end may overlap a shard's serve (pool thread) with a
+        #: cluster-level flush/checkpoint from the caller thread, and the
+        #: plan must be consumed exactly once whichever side lands it.
+        #: Reentrant because _serve_fused calls flush() under the lock.
+        self._fill_lock = threading.RLock()
         #: traces per jitted entry point (the wrapped python body only
         #: runs when jax traces a new shape) -- the compile-count
         #: regression tests pin this at O(#buckets)
@@ -372,12 +379,19 @@ class Broker:
         return self.freshness.min_epoch(parts), self.freshness.epochs(len(parts))
 
     def serve(
-        self, query_ids: np.ndarray, topics: Optional[np.ndarray] = None
+        self,
+        query_ids: np.ndarray,
+        topics: Optional[np.ndarray] = None,
+        h64: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Serve one batch of query ids -> (values (B, V), hit mask).
 
         ``topics`` short-circuits ``topic_of`` when the caller already
-        routed the batch (the cluster's topic routing computes them once).
+        routed the batch (the cluster's topic routing computes them
+        once); ``h64`` likewise short-circuits ``splitmix64`` with the
+        exact hash words the cluster routed on (bit-identical by
+        construction -- the high word picks the shard, the low word the
+        set).
 
         Probes are atomic per batch: a duplicate key inside one batch is
         probed before its first occurrence commits, so it counts as a miss
@@ -409,7 +423,8 @@ class Broker:
         if topics is None:
             topics = self.topic_of(query_ids)
         parts = np.asarray(self.cache.parts_for(np.asarray(topics)), np.int32)
-        h64 = splitmix64(query_ids)
+        if h64 is None:
+            h64 = splitmix64(query_ids)
         h_hi, h_lo = pack_hashes(h64)
         h_hi, h_lo, parts = self._pad_to_bucket(h_hi, h_lo, parts)
         min_ep, eps = self._freshness_arrays(parts)
@@ -573,41 +588,44 @@ class Broker:
                 )
             )
         else:
-            pending = self._pending_fill
-            if pending is not None and 0 < len(pending[0]) <= bp:
-                # double-buffered fill: the previous batch's value scatter
-                # rides inside this fused call (applied before its probe),
-                # with the plan padded to this batch's bucket
-                hit, layer, value, stale, new_state, (set_idx, wrote, way) = (
-                    self._fused_fill_step(
-                        self.state,
-                        *self._pad_plan(pending, bp),
-                        jnp.asarray(h_hi),
-                        jnp.asarray(h_lo),
-                        jnp.asarray(parts),
-                        jnp.asarray(admit),
-                        jnp.asarray(eps),
-                        jnp.asarray(min_ep),
+            with self._fill_lock:
+                pending = self._pending_fill
+                if pending is not None and 0 < len(pending[0]) <= bp:
+                    # double-buffered fill: the previous batch's value
+                    # scatter rides inside this fused call (applied before
+                    # its probe), with the plan padded to this batch's
+                    # bucket
+                    hit, layer, value, stale, new_state, (set_idx, wrote, way) = (
+                        self._fused_fill_step(
+                            self.state,
+                            *self._pad_plan(pending, bp),
+                            jnp.asarray(h_hi),
+                            jnp.asarray(h_lo),
+                            jnp.asarray(parts),
+                            jnp.asarray(admit),
+                            jnp.asarray(eps),
+                            jnp.asarray(min_ep),
+                        )
                     )
-                )
-                # the plan is consumed only once the call was issued
-                # against it: a raise above leaves it pending, so a retry
-                # or flush() still lands the values instead of losing them
-                self._pending_fill = None
-                self.state = new_state
-            else:
-                self.flush()  # plan larger than this bucket: standalone fill
-                hit, layer, value, stale, self.state, (set_idx, wrote, way) = (
-                    self._fused_step(
-                        self.state,
-                        jnp.asarray(h_hi),
-                        jnp.asarray(h_lo),
-                        jnp.asarray(parts),
-                        jnp.asarray(admit),
-                        jnp.asarray(eps),
-                        jnp.asarray(min_ep),
+                    # the plan is consumed only once the call was issued
+                    # against it: a raise above leaves it pending, so a
+                    # retry or flush() still lands the values instead of
+                    # losing them
+                    self._pending_fill = None
+                    self.state = new_state
+                else:
+                    self.flush()  # plan larger than this bucket: standalone fill
+                    hit, layer, value, stale, self.state, (set_idx, wrote, way) = (
+                        self._fused_step(
+                            self.state,
+                            jnp.asarray(h_hi),
+                            jnp.asarray(h_lo),
+                            jnp.asarray(parts),
+                            jnp.asarray(admit),
+                            jnp.asarray(eps),
+                            jnp.asarray(min_ep),
+                        )
                     )
-                )
         hit = np.asarray(hit)[:b]
         layer = np.asarray(layer)[:b]
         stale = np.asarray(stale)[:b]
@@ -665,11 +683,12 @@ class Broker:
                 # already committed, only values lag, and the next probe
                 # reads them post-fill by construction
                 sel = np.flatnonzero(wrote_np)
-                self._pending_fill = (
-                    np.asarray(set_idx)[sel],
-                    np.asarray(way)[sel],
-                    fill_vals[sel],
-                )
+                with self._fill_lock:
+                    self._pending_fill = (
+                        np.asarray(set_idx)[sel],
+                        np.asarray(way)[sel],
+                        fill_vals[sel],
+                    )
             else:
                 self.state = self._fill(
                     self.state, set_idx, wrote, way, jnp.asarray(fill_vals)
@@ -706,18 +725,21 @@ class Broker:
 
         Serving calls this automatically when a plan cannot ride the next
         fused call; checkpoints, rebalances and ``close()`` flush so the
-        externally visible state is always complete.  Idempotent.
+        externally visible state is always complete.  Idempotent, and
+        safe to overlap with a fused serve (the handoff lock makes the
+        plan land exactly once whichever side consumes it).
         """
-        pending = self._pending_fill
-        if pending is None:
-            return
-        n = len(pending[0])
-        bp = self.bucket.padded_len(n) if self.bucket is not None else n
-        self.state = self._fill(self.state, *self._pad_plan(pending, bp))
-        # consumed only after the fill was issued: a raise above keeps the
-        # plan pending, so a retrying caller (resilient dispatch) flushes
-        # again instead of silently losing the values
-        self._pending_fill = None
+        with self._fill_lock:
+            pending = self._pending_fill
+            if pending is None:
+                return
+            n = len(pending[0])
+            bp = self.bucket.padded_len(n) if self.bucket is not None else n
+            self.state = self._fill(self.state, *self._pad_plan(pending, bp))
+            # consumed only after the fill was issued: a raise above keeps
+            # the plan pending, so a retrying caller (resilient dispatch)
+            # flushes again instead of silently losing the values
+            self._pending_fill = None
 
     # -- invalidation --------------------------------------------------------
 

@@ -710,21 +710,33 @@ class STDDeviceCache:
         s_max = key_hi.shape[0] - 1
         sc = np.minimum(set_idx, s_max)  # jnp gathers clamp ...
         oob = set_idx > s_max  # ... and scatters drop
-        # 16-bit radix argsort when set indices fit (they do until the
-        # cache crosses 65k sets / ~0.5M entries per host)
-        sort_key = sc.astype(np.uint16) if s_max < 0xFFFF else sc
-        order = np.argsort(sort_key, kind="stable")
-        ss_c = sc[order]
-        start = np.empty(b, bool)
-        start[0] = True
-        start[1:] = ss_c[1:] != ss_c[:-1]
-        ar = np.arange(b)
-        rank = ar - np.maximum.accumulate(np.where(start, ar, 0))
-        depth = int(rank.max()) + 1 if b else 0
-        if depth_limit is not None and depth > depth_limit:
-            return None
         wrote = np.zeros(b, bool)
         way_out = np.zeros(b, np.int32)
+        # pads, static hits and out-of-range sets never write and never
+        # affect any other request's replay (``do_write`` masks all
+        # three), so they leave the conflict ranking entirely: a bucketed
+        # slice can be half pad, and every pad shares one set index, so
+        # each would otherwise cost a full python round -- and an all-pad
+        # warmup batch would trip the depth cutoff into the compiled
+        # oracle for nothing
+        act = np.flatnonzero(~(pad | static_hit | oob))
+        if len(act) == 0:
+            return wrote, way_out
+        # 16-bit radix argsort when set indices fit (they do until the
+        # cache crosses 65k sets / ~0.5M entries per host)
+        sc_a = sc[act]
+        sort_key = sc_a.astype(np.uint16) if s_max < 0xFFFF else sc_a
+        order = act[np.argsort(sort_key, kind="stable")]
+        ss_c = sc[order]
+        n_act = len(act)
+        start = np.empty(n_act, bool)
+        start[0] = True
+        start[1:] = ss_c[1:] != ss_c[:-1]
+        ar = np.arange(n_act)
+        rank = ar - np.maximum.accumulate(np.where(start, ar, 0))
+        depth = int(rank.max()) + 1
+        if depth_limit is not None and depth > depth_limit:
+            return None
         # effective write epoch (mirrors probe_and_commit_op), computed
         # against the still-pristine arrays before any round mutates them
         pm0 = (key_hi[sc] == h_hi[:, None]) & (key_lo[sc] == h_lo[:, None]) \
@@ -943,6 +955,27 @@ class STDDeviceCache:
         new_state["static_hi"] = state["static_hi"]
         new_state["static_lo"] = state["static_lo"]
         new_state["static_value"] = state["static_value"]
+        h64, topics, vals, eps, _ = self.extract_live(state)
+        new_state = new_cache.bulk_insert(
+            new_state, h64, topics, vals, epochs=eps, engine=engine, bucket=bucket
+        )
+        return new_cache, new_state
+
+    def extract_live(self, state):
+        """Live dynamic/topic-layer entries of ``state``, oldest-first.
+
+        Returns ``(h64, topics, values, epochs, stamps)``: the 64-bit
+        hashes reassembled from the stored key words, the recovered
+        topics (:data:`DYNAMIC` for dynamic-partition entries), the
+        cached values, the insertion epochs, and the recency stamps,
+        sorted by stamp ascending -- the replay order a bulk insert
+        needs so the newest entries survive a shrinking target.  The
+        static layer is excluded: it is read-only and rebuilt at deploy
+        time, not migrated.  This is the extraction half of
+        :meth:`repartition`; cross-shard resharding calls it per shard,
+        merges on the stamps, and re-routes on the hash words (no
+        original query ids needed).
+        """
         ks_np = np.asarray(state["ks"])
         key_hi, key_lo, stamp = unpack_words(ks_np)
         epoch = np.asarray(unpack_epoch(ks_np))
@@ -960,38 +993,64 @@ class STDDeviceCache:
         topics = np.full(len(parts), DYNAMIC, dtype=np.int64)
         for t, i in self.part_of_topic.items():
             topics[parts == i] = t
-        new_parts = new_cache.parts_for(topics)
+        return (
+            h64,
+            topics,
+            value[sets_l, ways_l],
+            epoch[sets_l, ways_l].astype(np.uint32),
+            stamp[sets_l, ways_l].astype(np.int64),
+        )
+
+    def bulk_insert(
+        self, state, h64, topics, values, epochs=None, engine: str = "vec",
+        bucket=None,
+    ):
+        """Insert pre-hashed entries through a commit engine, in order.
+
+        The insertion half of :meth:`repartition`: entries arrive as
+        ``(h64, topic, value[, epoch])`` tuples (typically from
+        :meth:`extract_live`, possibly merged across several source
+        caches) and land through the same bucket-padded commit path a
+        live migration uses, so a bulk insert is bit-exact with serving
+        the entries as admitted misses in that order.  Inserted entries
+        keep their given insertion epochs: a migration moves capacity,
+        it does not renew TTLs (entries that were nearly stale stay
+        nearly stale -- see docs/freshness.md).  Returns the new state.
+        """
+        if engine not in ("vec", "host", "oracle"):
+            raise ValueError(f"engine must be vec|host|oracle, got {engine!r}")
+        h64 = np.asarray(h64, np.uint64)
+        parts = self.parts_for(np.asarray(topics, np.int64))
         hi = (h64 >> np.uint64(32)).astype(np.uint32)
         lo = (h64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-        vals = value[sets_l, ways_l]
-        # migrated entries keep their original insertion epochs: a
-        # rebalance moves capacity, it does not renew TTLs (entries that
-        # were nearly stale stay nearly stale -- see docs/freshness.md)
-        eps = epoch[sets_l, ways_l].astype(np.uint32)
-        admit = np.ones(len(parts), bool)
+        vals = np.asarray(values, np.int32)
+        eps = (
+            np.asarray(epochs, np.uint32)
+            if epochs is not None
+            else np.zeros(len(hi), np.uint32)
+        )
+        admit = np.ones(len(hi), bool)
         # static-shape contract: pad the migration batch to its bucket
         bp = bucket.padded_len(len(hi)) if bucket is not None else len(hi)
         n_real = len(hi)
-        hi, lo, new_parts, vals, admit = pad_batch(
-            hi, lo, new_parts, new_cache.k, bp, values=vals, admit=admit
+        hi, lo, parts, vals, admit = pad_batch(
+            hi, lo, parts, self.k, bp, values=vals, admit=admit
         )
         if bp > n_real:
             eps = np.concatenate([eps, np.zeros(bp - n_real, np.uint32)])
         if engine == "host":
-            new_state = new_cache.commit_host(
-                new_state, hi, lo, new_parts, vals, admit, epochs=eps, inplace=True
+            return self.commit_host(
+                state, hi, lo, parts, vals, admit, epochs=eps, inplace=True
             )
-        elif engine == "oracle":
-            new_state = new_cache.commit(
-                new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
+        if engine == "oracle":
+            return self.commit(
+                state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
                 jnp.asarray(vals), jnp.asarray(admit), epochs=jnp.asarray(eps),
             )
-        else:
-            new_state = new_cache.commit_vectorized(
-                new_state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(new_parts),
-                jnp.asarray(vals), jnp.asarray(admit), epochs=jnp.asarray(eps),
-            )
-        return new_cache, new_state
+        return self.commit_vectorized(
+            state, jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(parts),
+            jnp.asarray(vals), jnp.asarray(admit), epochs=jnp.asarray(eps),
+        )
 
     # -- control-plane invalidation ----------------------------------------
 

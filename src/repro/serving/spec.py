@@ -218,6 +218,69 @@ class BatchPolicySpec:
 
 
 @dataclass(frozen=True)
+class DispatchSpec:
+    """Pipelined async cluster dispatch -- the front-end knobs.
+
+    With a ``DispatchSpec`` on the serving spec, :class:`Cluster` exposes
+    ``serve_async``: batches are *enqueued* onto per-shard work queues
+    and served lazily when a result is demanded (or the queue bound
+    forces a drain), letting consecutive batches' shard slices **fuse**
+    into one broker call per shard.  Fusion amortizes the fixed
+    per-call cost (padding, freshness arrays, dispatch overhead, the
+    double-buffered fill) across batches -- which is what makes a
+    sharded cluster on a small host *faster* than one broker, not just
+    not-slower.
+
+    Fused serving is always *value*-identical to serving the batches
+    back-to-back, and bit-deterministic (the same stream replays the
+    same episode).  A duplicate-free fused group is also
+    *state*-identical: the commit engines replay in arrival order
+    either way.  A key repeated **across** fused batches collapses to
+    one served request (cache and backend see it once, at its last
+    occurrence -- where sequential serving's final recency refresh
+    would land), so with cross-batch duplicates the hit mask and the
+    skipped occurrences' transient recency are approximate: a key first
+    seen in batch A and repeated in batch B counts as a miss in both
+    when fused, where sequential serving would count B's a hit.  The
+    conformance-pinned paths therefore never fuse implicitly:
+    ``Cluster.serve`` drains its batch immediately, and
+    ``dispatch=None`` (the default) keeps the cluster synchronous and
+    request-for-request identical to the pre-async front end.
+
+    ``pipeline``      -- enable cross-batch fusion on the async path
+                         (``False``: serve_async still works but every
+                         queued batch is served unfused, in order).
+    ``max_fuse``      -- at most this many queued batches fuse into one
+                         shard call.
+    ``fuse_requests`` -- stop fusing once a call holds this many
+                         requests (the engines' per-call sweet spot; on
+                         the host engine ~2k requests amortizes the
+                         fixed cost without outgrowing it).
+    ``max_queue``     -- per-shard queue bound; ``serve_async`` drains
+                         synchronously past it (backpressure, so an
+                         abandoned future can never pin unbounded work).
+    """
+
+    pipeline: bool = True
+    max_fuse: int = 8
+    fuse_requests: int = 2048
+    max_queue: int = 32
+
+    def __post_init__(self):
+        object.__setattr__(self, "pipeline", bool(self.pipeline))
+        for f in ("max_fuse", "fuse_requests", "max_queue"):
+            object.__setattr__(self, f, int(getattr(self, f)))
+        if self.max_fuse < 1:
+            raise ValueError(f"max_fuse must be >= 1, got {self.max_fuse}")
+        if self.fuse_requests < 1:
+            raise ValueError(
+                f"fuse_requests must be >= 1, got {self.fuse_requests}"
+            )
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+
+
+@dataclass(frozen=True)
 class HedgeSpec:
     """Declarative straggler mitigation (serializable analogue of
     :class:`repro.serving.broker.HedgePolicy`)."""
@@ -277,6 +340,11 @@ class ServingSpec:
     #: epoch granularity (see docs/freshness.md).  None = entries never
     #: expire (the pre-freshness behaviour, bit-exact on every engine).
     freshness: Optional[FreshnessSpec] = None
+    #: pipelined async cluster dispatch (per-shard work queues +
+    #: cross-batch fusion, see docs/serving.md).  None = the synchronous
+    #: scatter-gather front end, request-for-request identical to the
+    #: pre-async behaviour.
+    dispatch: Optional[DispatchSpec] = None
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
@@ -317,6 +385,7 @@ class ServingSpec:
         policy = d.pop("batch_policy", None)
         resilience = d.pop("resilience", None)
         freshness = d.pop("freshness", None)
+        dispatch = d.pop("dispatch", None)
         return cls(
             cache=CacheSpec.from_json(json.dumps(d.pop("cache"))),
             hedge=HedgeSpec(**hedge) if hedge is not None else None,
@@ -329,6 +398,7 @@ class ServingSpec:
             freshness=(
                 FreshnessSpec.from_dict(freshness) if freshness is not None else None
             ),
+            dispatch=DispatchSpec(**dispatch) if dispatch is not None else None,
             **d,
         )
 
@@ -369,13 +439,26 @@ class ServingSpec:
         query_ids = np.asarray(query_ids)
         if self.shards == 1:
             return np.zeros(len(query_ids), np.int32)
+        return self.shard_of_hashes(splitmix64(query_ids), topics=topics)
+
+    def shard_of_hashes(
+        self, h64: np.ndarray, topics: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """:meth:`shard_of` over pre-computed splitmix64 hashes.
+
+        The cluster front end hashes every batch exactly once (routing
+        here, set indexing inside the shard broker via the same words),
+        and elastic resharding re-routes resident entries from their
+        *stored* hash words without needing the original query ids.
+        """
+        h64 = np.asarray(h64, np.uint64)
+        if self.shards == 1:
+            return np.zeros(len(h64), np.int32)
         # route on the *high* hash word: the cache's set index consumes
         # the low word (h_lo % n_sets), so routing on the same bits would
         # leave each shard only 1/gcd(shards, n_sets) of its sets
         # reachable (e.g. half of every LRU partition dead at shards=2)
-        by_hash = (
-            (splitmix64(query_ids) >> np.uint64(32)) % np.uint64(self.shards)
-        ).astype(np.int32)
+        by_hash = ((h64 >> np.uint64(32)) % np.uint64(self.shards)).astype(np.int32)
         if self.routing == "hash":
             return by_hash
         if topics is None:
@@ -452,6 +535,7 @@ __all__ = [
     "SERVING_SPEC_VERSION",
     "BatchPolicySpec",
     "BucketSpec",
+    "DispatchSpec",
     "FreshnessSpec",
     "HedgeSpec",
     "RebalanceSpec",

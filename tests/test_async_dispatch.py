@@ -1,0 +1,458 @@
+"""Pipelined async cluster dispatch: per-shard work queues, cross-batch
+fusion, completion-order collection, elastic resharding.
+
+The contract under test (docs/serving.md):
+
+* ``serve_async`` + immediate ``result()`` never fuses, so a shards=1
+  cluster stays request-for-request identical to a bare ``Broker``;
+* fused pipelined serving is value- and state-identical to serving the
+  same batches back-to-back, with cross-batch duplicates collapsed into
+  one served request and counted cluster-side -- aggregate
+  ``stats.requests`` still equals the submitted total;
+* ``parallel=True`` threaded dispatch is request-identical to serial
+  dispatch across fused/unfused x hash/topic routing, including a
+  crash -> recover fault episode;
+* resilient timestamps come from the episode's clock: virtual-clock
+  runs measure zero service time (no spurious cooperative timeouts) and
+  retry backoffs reschedule instead of sleeping in a worker slot;
+* control-plane entry points (flush/save/advance_time/invalidate/
+  reshard) quiesce the queues first, and ``max_queue`` backpressure
+  bounds the work an abandoned future can pin;
+* ``reshard`` splits/merges the live shard set with values, carried
+  stats and freshness floors preserved, cutting a manifest-verified
+  checkpoint when asked.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import NO_TOPIC, CacheSpec, VecLog, VecStats
+from repro.loadgen import FaultInjectSpec
+from repro.serving import (
+    HEALTHY,
+    Broker,
+    Cluster,
+    DispatchSpec,
+    FreshnessSpec,
+    ResilienceSpec,
+    ServingSpec,
+)
+from repro.train import checkpoint as ckpt_lib
+
+
+def _stats(seed=0, nq=300, n=3000, n_topics=6):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, nq, size=n).astype(np.int64)
+    topic = rng.integers(-1, n_topics, size=nq).astype(np.int64)
+    n_train = n // 2
+    seen = np.zeros(nq, bool)
+    seen[np.unique(keys[:n_train])] = True
+    topic[~seen] = NO_TOPIC
+    log = VecLog(keys=keys, n_train=n_train, key_topic=topic)
+    return log, VecStats.from_log(log)
+
+
+def _backend(value_dim):
+    def backend(qids):
+        return np.tile(np.asarray(qids)[:, None], (1, value_dim)).astype(np.int32)
+
+    return backend
+
+
+def _spec(n=256, value_dim=2, **kw):
+    cache = CacheSpec.from_strategy("STDv_LRU", n, f_s=0.3, f_t=0.5)
+    kw.setdefault("dispatch", DispatchSpec())
+    return ServingSpec(cache=cache, value_dim=value_dim, microbatch=64, **kw)
+
+
+def _cluster(spec, stats, backend, **kw):
+    return Cluster.from_spec(spec, stats, [backend], value_fn=backend, **kw)
+
+
+def _res(**kw):
+    base = dict(
+        max_retries=2, backoff_base_us=1.0, suspect_after=1, down_after=3,
+        probe_interval_s=0.01, recover_after=1,
+    )
+    base.update(kw)
+    return ResilienceSpec(**base)
+
+
+def _serve_pipelined(cluster, stream, batch=64, depth=8, advance=None):
+    """Serve ``stream`` through serve_async in groups of ``depth``
+    batches, resolving each group's futures only after the whole group
+    is queued (so consecutive batches actually fuse)."""
+    values = np.zeros((len(stream), cluster.spec.value_dim), np.int32)
+    hit = np.zeros(len(stream), bool)
+    starts = list(range(0, len(stream), batch))
+    for g in range(0, len(starts), depth):
+        grp = starts[g : g + depth]
+        if advance is not None:
+            cluster.advance_time(advance(grp[-1]))
+        futs = [cluster.serve_async(stream[lo : lo + batch]) for lo in grp]
+        for lo, f in zip(grp, futs):
+            v, h = f.result()
+            values[lo : lo + batch] = v
+            hit[lo : lo + batch] = h
+    return values, hit
+
+
+# -- spec plumbing ----------------------------------------------------------
+
+
+def test_dispatch_spec_round_trip():
+    spec = _spec(
+        shards=4,
+        dispatch=DispatchSpec(pipeline=True, max_fuse=4, fuse_requests=512,
+                              max_queue=16),
+    )
+    again = ServingSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.dispatch == spec.dispatch
+    # absent stays absent
+    off = _spec(dispatch=None)
+    assert ServingSpec.from_json(off.to_json()).dispatch is None
+
+
+@pytest.mark.parametrize("kw", [
+    {"max_fuse": 0}, {"fuse_requests": 0}, {"max_queue": 0},
+])
+def test_dispatch_spec_validates(kw):
+    field = next(iter(kw))
+    with pytest.raises(ValueError, match=field):
+        DispatchSpec(**kw)
+
+
+# -- shards=1 conformance on the async path ---------------------------------
+
+
+@pytest.mark.parametrize("routing", ["hash", "topic"])
+def test_serve_async_shards1_matches_bare_broker(routing):
+    # serve_async + immediate result() never fuses: the queue holds one
+    # batch when the drain runs, so the conformance bar is the same as
+    # the synchronous front end's -- request-for-request identical
+    log, stats = _stats(seed=3)
+    spec = _spec(routing=routing)
+    backend = _backend(spec.value_dim)
+    bare = Broker.from_spec(spec, stats, [backend], value_fn=backend)
+    cluster = _cluster(spec, stats, backend)
+    stream = log.test_keys
+    with bare, cluster:
+        for lo in range(0, len(stream), 64):
+            batch = stream[lo : lo + 64]
+            v0, h0 = bare.serve(batch)
+            v1, h1 = cluster.serve_async(batch).result()
+            assert np.array_equal(v0, v1)
+            assert np.array_equal(h0, h1)
+        assert dataclasses.asdict(cluster.stats) == dataclasses.asdict(bare.stats)
+        assert cluster.stats.hits > 0
+
+
+# -- fused pipelining -------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["hash", "topic"])
+def test_fused_duplicate_free_group_is_state_identical(routing):
+    # a duplicate-free fused group replays bit-exactly: same values,
+    # same hits, and the same cache state afterwards (probed hit-for-hit)
+    log, stats = _stats(seed=5, nq=4096, n=8192)
+    spec = _spec(shards=4, routing=routing)
+    backend = _backend(spec.value_dim)
+    sync = _cluster(spec, stats, backend)
+    pipe = _cluster(spec, stats, backend)
+    rng = np.random.default_rng(5)
+    stream = rng.permutation(4096)[:512].astype(np.int64)  # no repeats
+    with sync, pipe:
+        seq_v, seq_h = [], []
+        for lo in range(0, len(stream), 64):
+            v, h = sync.serve(stream[lo : lo + 64])
+            seq_v.append(v)
+            seq_h.append(h)
+        values, hit = _serve_pipelined(pipe, stream)
+        assert np.array_equal(values, np.concatenate(seq_v))
+        assert np.array_equal(hit, np.concatenate(seq_h))
+        assert pipe.stats.batches < sync.stats.batches  # fusion happened
+        assert pipe.stats.coalesced == 0
+        # state-identical: the same probe stream served synchronously on
+        # both clusters sees the same cache contents, hit-for-hit
+        probe = stream[::3]
+        for lo in range(0, len(probe), 64):
+            batch = probe[lo : lo + 64]
+            v0, h0 = sync.serve(batch)
+            v1, h1 = pipe.serve(batch)
+            assert np.array_equal(v0, v1)
+            assert np.array_equal(h0, h1)
+
+
+def test_fused_duplicates_collapse_with_exact_accounting():
+    # cross-batch duplicates are served once per fused call, but every
+    # submitted request is still counted: values stay request-identical
+    # and stats.requests covers the whole stream
+    log, stats = _stats(seed=5)
+    spec = _spec(shards=4)
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys  # ~300 distinct keys: fused groups repeat them
+    with _cluster(spec, stats, backend) as pipe:
+        values, hit = _serve_pipelined(pipe, stream)
+        assert np.array_equal(values, backend(stream))
+        assert pipe.stats.requests == len(stream)
+        assert pipe.stats.coalesced > 0  # cross-batch duplicates collapsed
+        assert pipe.stats.hits <= pipe.stats.requests
+        # duplicates of a hit count as hits too (scattered, then counted)
+        assert pipe.stats.hits >= int(hit.sum())
+
+
+def test_pipelined_run_is_bit_deterministic():
+    log, stats = _stats(seed=7)
+    spec = _spec(shards=4)
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+
+    def episode():
+        with _cluster(spec, stats, backend) as cluster:
+            values, hit = _serve_pipelined(cluster, stream)
+            return (
+                values.tobytes(),
+                hit.tobytes(),
+                dataclasses.asdict(cluster.stats),
+            )
+
+    assert episode() == episode()
+
+
+def test_unfused_dispatch_matches_sequential_hits():
+    # pipeline=False: serve_async still queues, but every batch serves
+    # unfused in order -- the hit mask is exactly the sequential one's
+    log, stats = _stats(seed=9)
+    spec = _spec(shards=4, dispatch=DispatchSpec(pipeline=False))
+    backend = _backend(spec.value_dim)
+    sync = _cluster(spec, stats, backend)
+    pipe = _cluster(spec, stats, backend)
+    stream = log.test_keys
+    with sync, pipe:
+        seq_v, seq_h = [], []
+        for lo in range(0, len(stream), 64):
+            v, h = sync.serve(stream[lo : lo + 64])
+            seq_v.append(v)
+            seq_h.append(h)
+        values, hit = _serve_pipelined(pipe, stream)
+        assert np.array_equal(values, np.concatenate(seq_v))
+        assert np.array_equal(hit, np.concatenate(seq_h))
+        assert dataclasses.asdict(pipe.stats) == dataclasses.asdict(sync.stats)
+
+
+# -- threaded dispatch == serial --------------------------------------------
+
+
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("routing", ["hash", "topic"])
+def test_parallel_threaded_matches_serial(fused, routing):
+    log, stats = _stats(seed=11)
+    spec = _spec(shards=4, routing=routing, fused=fused)
+    backend = _backend(spec.value_dim)
+    serial = _cluster(spec, stats, backend, parallel=False)
+    threaded = _cluster(spec, stats, backend, parallel=True)
+    stream = log.test_keys
+    with serial, threaded:
+        v0, h0 = _serve_pipelined(serial, stream)
+        v1, h1 = _serve_pipelined(threaded, stream)
+        assert np.array_equal(v0, v1)
+        assert np.array_equal(h0, h1)
+        assert dataclasses.asdict(serial.stats) == dataclasses.asdict(threaded.stats)
+
+
+def test_parallel_threaded_matches_serial_crash_recover():
+    log, stats = _stats(seed=13)
+    spec = _spec(shards=4, resilience=_res())
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+
+    def episode(parallel):
+        cluster = _cluster(spec, stats, backend, parallel=parallel)
+        with cluster, tempfile.TemporaryDirectory() as ck:
+            warm, rest = stream[:256], stream[256:]
+            _serve_pipelined(cluster, warm)
+            cluster.save(ck, step=1)
+            cluster.inject_shard_faults(2, FaultInjectSpec(crash_at_s=0.0, seed=1))
+            v, h = _serve_pipelined(
+                cluster, rest, advance=lambda lo: lo * 1e-4
+            )
+            assert np.array_equal(v, backend(rest))  # availability: 1.0
+            health = cluster.shard_health[2]
+            assert health.state == HEALTHY
+            assert health.counters.recoveries >= 1
+            return (
+                v.tobytes(),
+                tuple(health.events),
+                dataclasses.astuple(health.counters),
+                dataclasses.asdict(cluster.stats),
+            )
+
+    assert episode(parallel=False) == episode(parallel=True)
+
+
+# -- resilient timestamps on the episode's clock ----------------------------
+
+
+def test_virtual_clock_measures_zero_service_time():
+    # cooperative-timeout detection reads the episode clock, not the
+    # wall clock: under a virtual clock a completed serve spans zero
+    # virtual time, so even an absurd timeout_us never fires
+    log, stats = _stats(seed=15)
+    spec = _spec(shards=4, resilience=_res(timeout_us=1e-3))
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    with _cluster(spec, stats, backend) as cluster:
+        v, _ = _serve_pipelined(cluster, stream, advance=lambda lo: lo * 1e-5)
+        assert np.array_equal(v, backend(stream))
+        assert cluster.stats.timeouts == 0
+        for h in cluster.shard_health:
+            assert h.state == HEALTHY
+
+
+def test_backoff_reschedules_instead_of_sleeping():
+    # one-second backoff base, dozens of injected errors: a dispatcher
+    # that slept out each backoff in its slot would take minutes; the
+    # rescheduling dispatcher under a virtual clock retries immediately
+    import time
+
+    log, stats = _stats(seed=17)
+    spec = _spec(
+        shards=4,
+        resilience=_res(backoff_base_us=1e6, max_retries=2, suspect_after=10,
+                        down_after=20),
+    )
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    with _cluster(spec, stats, backend) as cluster:
+        cluster.inject_shard_faults(1, FaultInjectSpec(error_every=5, seed=2))
+        t0 = time.monotonic()
+        v, _ = _serve_pipelined(cluster, stream, advance=lambda lo: lo * 1e-5)
+        elapsed = time.monotonic() - t0
+        assert np.array_equal(v, backend(stream))
+        assert cluster.stats.retried > 0
+        assert elapsed < 1.0  # << one backoff delay, let alone dozens
+
+
+# -- queue discipline -------------------------------------------------------
+
+
+def test_max_queue_backpressure_bounds_pinned_work():
+    log, stats = _stats(seed=19)
+    spec = _spec(shards=2, dispatch=DispatchSpec(max_fuse=2, max_queue=3))
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    with _cluster(spec, stats, backend) as cluster:
+        futs = [
+            cluster.serve_async(stream[lo : lo + 32])
+            for lo in range(0, 1024, 32)
+        ]
+        # abandoned futures can't pin unbounded work: past max_queue the
+        # enqueue drains synchronously, so the bound holds throughout
+        assert all(len(q) <= 3 for q in cluster._queues)
+        for lo, f in zip(range(0, 1024, 32), futs):
+            v, _ = f.result()
+            assert np.array_equal(v, backend(stream[lo : lo + 32]))
+        assert cluster.stats.requests == 1024
+
+
+def test_control_plane_quiesces_queues():
+    log, stats = _stats(seed=21)
+    spec = _spec(shards=2, dispatch=DispatchSpec(max_queue=64))
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    with _cluster(spec, stats, backend) as cluster, \
+            tempfile.TemporaryDirectory() as ck:
+        f1 = cluster.serve_async(stream[:64])
+        cluster.flush()  # quiesce: queued work lands before the flush
+        assert f1.done()
+        f2 = cluster.serve_async(stream[64:128])
+        cluster.save(ck, step=1)  # a checkpoint cuts at a batch boundary
+        assert f2.done()
+        f3 = cluster.serve_async(stream[128:192])
+        cluster.advance_time(1.0)  # queued work precedes the clock step
+        assert f3.done()
+        v, _ = f3.result()
+        assert np.array_equal(v, backend(stream[128:192]))
+        assert cluster.stats.requests == 192
+
+
+# -- elastic resharding -----------------------------------------------------
+
+
+@pytest.mark.parametrize("old,new", [(2, 4), (4, 2)])
+def test_reshard_preserves_values_stats_and_hits(old, new):
+    log, stats = _stats(seed=23)
+    spec = _spec(shards=old)
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    with _cluster(spec, stats, backend) as cluster, \
+            tempfile.TemporaryDirectory() as ck:
+        _serve_pipelined(cluster, stream)
+        # hot keys the warm cluster answers from cache
+        v0, h0 = cluster.serve(stream[:64])
+        pre = cluster.stats
+        assert h0.sum() > 0
+        cluster.reshard(new, ckpt_dir=ck, step=7)
+        assert cluster.spec.shards == new
+        assert len(cluster.brokers) == new
+        # live entries migrated and re-routed: the same hot keys still
+        # answer from cache, values request-identical
+        v1, h1 = cluster.serve(stream[:64])
+        assert np.array_equal(v0, v1)
+        assert h1.sum() >= h0.sum()
+        assert sum(b.stats.migrated for b in cluster.brokers) > 0
+        # old counters keep aggregating through the carried stats
+        post = cluster.stats
+        assert post.requests == pre.requests + 64
+        assert post.hits >= pre.hits
+        # the post-reshard checkpoint is manifest-verified and restores
+        assert cluster.restore(ck) == 7
+
+
+def test_reshard_cannot_resurrect_invalidated_topic():
+    log, stats = _stats(seed=25)
+    spec = _spec(
+        shards=2, routing="topic",
+        freshness=FreshnessSpec(ttl_s=10_000.0),
+    )
+    backend = _backend(spec.value_dim)
+    stream = log.test_keys
+    topics = np.asarray(stats.key_topic)[stream]
+    tau = int(topics[topics >= 0][0])
+    cluster = _cluster(spec, stats, backend)
+    control = _cluster(spec, stats, backend)  # identical, never resharded
+    with cluster, control:
+        sel = stream[topics == tau][:64]
+        for c in (cluster, control):
+            _serve_pipelined(c, stream, advance=lambda lo: lo * 1e-4)
+            _, h_warm = c.serve(sel)
+            assert h_warm.sum() > 0  # the topic is cached before the event
+            c.invalidate(topic=tau)
+        cluster.reshard(4)
+        # the freshness floor carried across the resize: the invalidated
+        # topic expires on the new shard set exactly as it would have on
+        # the old one (only the epoch-exempt static layer still answers)
+        v, h = cluster.serve(sel)
+        v0, h0 = control.serve(sel)
+        assert np.array_equal(h, h0)
+        assert h.sum() < h_warm.sum()  # the live entries really expired
+        assert np.array_equal(v, backend(sel))
+        assert np.array_equal(v0, v)
+
+
+# -- device placement -------------------------------------------------------
+
+
+def test_shard_devices_round_robin():
+    from repro.launch import shard_devices
+
+    assert shard_devices(4, devices=["a", "b"]) == ["a", "b", "a", "b"]
+    assert shard_devices(1, devices=["a", "b"]) == ["a"]
+    assert shard_devices(3, devices=["only"]) == ["only", "only", "only"]
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_devices(0, devices=["a"])
+    with pytest.raises(ValueError, match="devices"):
+        shard_devices(2, devices=[])

@@ -251,3 +251,25 @@ def belady_rate(
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def best_of_us(fn, trials: int = 3, reps: int = 1) -> float:
+    """Best-of-N wall time of ``fn()`` in microseconds, gc parked.
+
+    The perf_cache cluster rows' trial scheme, shared: each trial runs
+    ``fn`` ``reps`` times after a ``gc.collect()`` (so a collection pause
+    or scheduler hiccup costs one trial, not the row), and the best trial
+    is reported -- the machine's number, not the noise's.  For memoized
+    work (e.g. ``AnalysisCache.hit_rate_spec``) the first trial pays any
+    one-time analysis and the row reports the steady-state cost.
+    """
+    import gc
+
+    best = float("inf")
+    for _ in range(max(trials, 1)):
+        gc.collect()
+        t0 = time.perf_counter()
+        for _ in range(max(reps, 1)):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / max(reps, 1) * 1e6)
+    return best

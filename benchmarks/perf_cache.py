@@ -51,7 +51,7 @@ from repro.serving import (
     splitmix64,
 )
 
-from .common import csv_row
+from .common import best_of_us, csv_row
 
 
 def _block(tree):
@@ -71,6 +71,7 @@ def _chain_us(commit, make_state, args, reps: int) -> float:
     s = commit(make_state(), *args)  # compile + warm
     _block(s)
     s = make_state()
+    gc.collect()  # park the collector: chains allocate per-call garbage
     t0 = time.time()
     for _ in range(reps):
         s = commit(s, *args)
@@ -96,6 +97,8 @@ def run(quick: bool = False) -> List[str]:
     commit_seq = jax.jit(bare.commit, donate_argnums=0)
     commit_vec_xla = jax.jit(bare.commit_vectorized, donate_argnums=0)
     commit_vec = lambda s, *a: bare.commit_host(s, *a, inplace=True)
+    xla_nsq = {}
+    vec_nsq = {}
     for batch in (256, 4096):
         qids = rng.integers(0, 200_000, size=batch)
         topics = rng.integers(-1, 64, size=batch)
@@ -126,7 +129,11 @@ def run(quick: bool = False) -> List[str]:
         )
         host_args = (np.asarray(h_hi), np.asarray(h_lo), np.asarray(parts),
                      np.asarray(vals), np.asarray(admit))
-        vec_us = _chain_us(commit_vec, host_state, host_args, 10 if quick else 30)
+        vec_us = min(
+            _chain_us(commit_vec, host_state, host_args, 10 if quick else 30)
+            for _ in range(3)
+        )
+        vec_nsq[batch] = vec_us * 1000 / batch
         rows.append(
             csv_row(
                 f"perf/cache_commit_vec/B={batch}",
@@ -134,7 +141,13 @@ def run(quick: bool = False) -> List[str]:
                 f"ns_per_query={vec_us*1000/batch:.0f};speedup_vs_seq={seq_us/vec_us:.1f}",
             )
         )
-        xla_us = _chain_us(commit_vec_xla, dev_state, args, 5 if quick else 10)
+        # min-of-3 chains: single-chain timing jitters +-30% on shared
+        # hosts, far above the batch-scaling margin asserted below
+        xla_us = min(
+            _chain_us(commit_vec_xla, dev_state, args, 5 if quick else 10)
+            for _ in range(3)
+        )
+        xla_nsq[batch] = xla_us * 1000 / batch
         rows.append(
             csv_row(
                 f"perf/cache_commit_vec_xla/B={batch}",
@@ -142,6 +155,33 @@ def run(quick: bool = False) -> List[str]:
                 f"ns_per_query={xla_us*1000/batch:.0f};speedup_vs_seq={seq_us/xla_us:.1f}",
             )
         )
+
+    # batch-scaling regression for the vec_xla engine.  The investigated
+    # anomaly was real but misattributed: not a missing donation or a
+    # re-pack copy, but XLA-CPU scatter pricing (~170 ns/index) -- the
+    # probe-output scatters and the per-round write-plan scatters cost
+    # O(B) *per round*, and six un-sort scatters another O(B) per call.
+    # Hoisting the probe outputs, rank-masking the rounds loop
+    # (gather+where), and un-sorting through one inverse permutation cut
+    # B=4096 from ~1540 to ~1050 ns/q (B=256 improved identically).
+    # What remains is linear-in-B work whose depth term *grows* with B
+    # (3 conflict rounds at B=256 vs 6 at B=4096 here), so per-query
+    # cost is flat by construction, not amortizing: the assert pins
+    # non-degradation -- a reintroduced per-round scatter shows up as
+    # B=4096 ns/q well above B=256 (the old pathology at larger B).
+    assert xla_nsq[4096] <= 1.15 * xla_nsq[256], (
+        f"vec_xla per-query cost degrades with batch size: "
+        f"{xla_nsq[4096]:.0f} ns/q at B=4096 vs {xla_nsq[256]:.0f} at B=256"
+    )
+    # ...and the ratio alone cannot distinguish the old pathology (flat
+    # at ~1540 ns/q) from the fixed engine (flat at ~1050), so also pin
+    # the same-run gap against the numpy host engine: pre-fix it was
+    # 3.3-3.4x, post-fix ~2.3x.  Same machine, same batch, same states
+    # -- the ratio is load-robust where an absolute ns/q pin is not.
+    assert xla_nsq[4096] <= 3.0 * vec_nsq[4096], (
+        f"vec_xla lost ground to the host engine (scatter regression?): "
+        f"{xla_nsq[4096]:.0f} ns/q vs host {vec_nsq[4096]:.0f} at B=4096"
+    )
 
     # adversarial forced-conflict batch: every request hashes to one set,
     # so the conflict depth -- the only sequential dimension left --
@@ -176,31 +216,47 @@ def run(quick: bool = False) -> List[str]:
     )
 
     # end-to-end fused serving: broker round-trips per batch, trivial
-    # backend so the cache path dominates
+    # backend so the cache path dominates.  serve_fused is the legacy
+    # fused/fused_fill pair (fused_one_call=False); serve_one_call is the
+    # PR-10 default one-dispatch path over the *same* stream, so CI can
+    # assert one-call <= legacy on ns_per_query within one run.  Both use
+    # best-of-3 gc-parked trials over the rep loop.
     def backend(qids):
         return np.tile(qids[:, None], (1, cfg.value_dim)).astype(np.int32)
 
     topic_arr = rng.integers(-1, 64, size=200_000)
     for batch in (256, 4096):
-        broker = Broker(
-            STDDeviceCache(cfg, static_hashes=splitmix64(np.arange(1, 2000))),
-            [backend],
-            topic_of=lambda q: topic_arr[q],
-        )
         stream = rng.integers(0, 20_000, size=(6, batch))  # reuse -> hits
-        broker.serve(stream[0])  # compile + warm the cache
-        reps = 2 if quick else 5
-        t0 = time.time()
-        for i in range(reps):
-            broker.serve(stream[1 + i % 5])
-        us = (time.time() - t0) / reps * 1e6
-        rows.append(
-            csv_row(
-                f"perf/serve_fused/B={batch}",
-                us,
-                f"ns_per_query={us*1000/batch:.0f};hit_rate={broker.stats.hit_rate:.3f}",
+        # enough reps x trials that the one-call-vs-legacy CI compare
+        # (1.2x margin) sits above the run-to-run jitter, which at
+        # reps=2 spanned 0.8-1.3x on this container
+        reps = 6 if quick else 10
+        for name, one_call in (("serve_fused", False), ("serve_one_call", True)):
+            broker = Broker(
+                STDDeviceCache(cfg, static_hashes=splitmix64(np.arange(1, 2000))),
+                [backend],
+                topic_of=lambda q: topic_arr[q],
+                engine="device",  # auto picks host on CPU; pin the jit path
+                fused_one_call=one_call,
             )
-        )
+            broker.serve(stream[0])  # compile + warm the cache
+
+            def loop():
+                for i in range(reps):
+                    broker.serve(stream[1 + i % 5])
+
+            us = best_of_us(loop, trials=5) / reps
+            if one_call:
+                assert broker.dispatch_counts.get("one_call", 0) > 0
+            rows.append(
+                csv_row(
+                    f"perf/{name}/B={batch}",
+                    us,
+                    f"ns_per_query={us*1000/batch:.0f};"
+                    f"hit_rate={broker.stats.hit_rate:.3f}",
+                )
+            )
+            broker.close()
 
     # shape-bucketed serving of a ragged stream on the jit-compiled
     # device engine: batch lengths vary per batch, so the unpadded path
@@ -230,8 +286,10 @@ def run(quick: bool = False) -> List[str]:
             broker.serve(q)
         broker.flush()
         dt = time.time() - t0
-        fused = broker.trace_counts.get("fused", 0) + broker.trace_counts.get(
-            "fused_fill", 0
+        fused = (
+            broker.trace_counts.get("fused", 0)
+            + broker.trace_counts.get("fused_fill", 0)
+            + broker.trace_counts.get("one_call", 0)
         )
         broker.close()
         return dt, fused, broker.stats

@@ -105,3 +105,53 @@ def probe_and_commit_ref(
         wrote=wrote,
         way=way_w,
     )
+
+
+def serve_fused_ref(
+    key_hi: np.ndarray,  # (S, W) uint32
+    key_lo: np.ndarray,  # (S, W) uint32
+    stamp: np.ndarray,  # (S, W) int32
+    value: np.ndarray,  # (S, W, V) value table
+    h_hi: np.ndarray,  # (B,) uint32
+    h_lo: np.ndarray,  # (B,) uint32
+    set_idx: np.ndarray,  # (B,) int32
+    admit: np.ndarray,  # (B,) bool
+    static_hit: np.ndarray,  # (B,) bool
+    clock: int,
+    epoch: np.ndarray = None,  # (S, W) uint32 insertion epochs (None -> 0)
+    epochs: np.ndarray = None,  # (B,) uint32 write epochs (None -> 0)
+    min_epoch: np.ndarray = None,  # (B,) uint32 freshness floors (None -> 0)
+    f_set_idx: np.ndarray = None,  # deferred-fill plan (None -> empty)
+    f_wrote: np.ndarray = None,
+    f_way: np.ndarray = None,
+    f_values: np.ndarray = None,  # (F, V)
+) -> Dict[str, np.ndarray]:
+    """Sequential oracle for the one-dispatch serve (`serve_fused_op`).
+
+    Applies the deferred-fill plan in arrival order (the last writer to a
+    slot wins, exactly like the engines' deduped scatter), replays the
+    batch through :func:`probe_and_commit_ref`, then gathers each
+    request's probed value row from the *post-fill* table -- the value a
+    query hitting a key the previous batch inserted must see.  Out-of-
+    bounds fill slots drop and out-of-bounds set indices clamp on the
+    gather, mirroring jnp scatter/gather semantics.
+    """
+    value = np.array(value)
+    w = value.shape[1]
+    flat = value.reshape(-1, value.shape[2])
+    if f_set_idx is not None:
+        for i in range(len(f_set_idx)):
+            if bool(f_wrote[i]):
+                slot = int(f_set_idx[i]) * w + int(f_way[i])
+                if 0 <= slot < flat.shape[0]:
+                    flat[slot] = f_values[i]
+    out = probe_and_commit_ref(
+        key_hi, key_lo, stamp, h_hi, h_lo, set_idx, admit, static_hit, clock,
+        epoch=epoch, epochs=epochs, min_epoch=min_epoch,
+    )
+    b = len(h_hi)
+    s_max = value.shape[0] - 1
+    values = np.zeros((b, value.shape[2]), value.dtype)
+    for i in range(b):
+        values[i] = value[min(int(set_idx[i]), s_max), int(out["pre_way"][i])]
+    return dict(out, value=value, values=values)

@@ -1,0 +1,290 @@
+"""Pallas TPU kernel: one-dispatch serve (fill + probe + commit + gather).
+
+The broker's fused device path used to cost up to three dispatches per
+batch: the probe/commit kernel, the probed-value gather, and the previous
+batch's deferred value fill.  This kernel collapses all of them into
+**one** ``pallas_call`` over the packed ``(S, 4W)`` key/stamp/epoch state
+*and* the flattened ``(S*W, V)`` value table:
+
+1. **deferred-fill apply** -- the previous batch's value scatter (deduped
+   to unique last-writer slots by the host glue; losers carry slot ==
+   ``S*W`` and drop) lands before anything reads a value row, so a query
+   hitting a key the previous batch inserted sees its backend result;
+2. **probe + staleness** -- each request's pristine-row match, matched
+   way, matched epoch, and ``min_epoch`` staleness verdict (the same
+   effective-epoch fold as :func:`cache_ops.ops.probe_and_commit_op`,
+   see PR 8 / docs/freshness.md);
+3. **recency/commit scatter** -- the conflict-aware segmented replay
+   (``conflict_round``, shared with the probe/commit kernel so engine
+   parity is by construction);
+4. **value-row gather** -- the probed way's value row per request,
+   gathered from the *post-fill* table.
+
+Tiling: grid = (B_pad / bm,) over segment tiles, exactly the
+probe/commit kernel's schedule.  Each step owns
+
+* the tile's row state       (bm, 4W)   x1   tiled, identity map
+* the tile's segment table   (bm, 1)    x2   leader / length
+* the whole sorted batch     (B, 1)     x9   request fields, constant map
+* the fill plan              (B, 1|V)   x2   slot / values, constant map
+* the value table            (S*W, V)   x1   constant map
+* outputs                    mixed           rows tiled; the rest constant
+
+Tiled blocks are double-buffered by the Pallas pipeline: while step g's
+segments replay their commits, step g+1's row block is already streaming
+into VMEM -- the "prefetch the next request tile's buckets while
+committing the current one" schedule.  Constant-index blocks (the sorted
+request fields, the fill plan, the value table, the per-request outputs)
+are fetched once, stay VMEM-resident across steps, and are revisited by
+every step's dynamic gathers/scatters without touching HBM again.
+
+The post-fill value table is recomputed per step from the pristine input
+block (a B-index scatter over a VMEM-resident array) rather than read
+back from the output block, so no step depends on another step's output
+writes; the updated table itself is emitted once at g == 0.
+
+VMEM budget at defaults (bm=256, W=8, V=8, S=512, B=4096):
+  rows 2*256*32*4 = 64 KiB, request fields 9*4096*4 = 144 KiB, fill plan
+  4096*(1+8)*4 = 144 KiB, value table 2*4096*8*4 = 256 KiB, outputs
+  6*4096*4 + 4096*32*4 = 608 KiB -- ~1.2 MiB of ~16 MiB/core.  The value
+  table is the scaling term: S*W*V*8 bytes (in + out) must fit alongside
+  the rest, which holds to S*W ~ 180K slots at V=8.  At W=4 the table
+  halves (S=512: 64 KiB resident x2) and the whole working set is
+  ~0.9 MiB (see docs/device_cache.md).
+
+Pad requests (packed hash ``(PAD_HI, PAD_LO)``) are inert exactly as in
+the probe/commit kernel: never a hit, never admitted, never an eviction,
+and their gathered value row is dead output the caller slices off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .kernel import conflict_round, is_pad
+
+
+def _serve_kernel(
+    rows_ref,
+    leader_ref,
+    seg_len_ref,
+    s_hi_ref,
+    s_lo_ref,
+    s_pos_ref,
+    s_admit_ref,
+    s_static_ref,
+    s_epoch_ref,
+    s_minep_ref,
+    s_set_ref,
+    f_slot_ref,
+    f_vals_ref,
+    val_ref,
+    clock_ref,
+    out_rows_ref,
+    out_val_ref,
+    out_vals_ref,
+    pre_hit_ref,
+    pre_way_ref,
+    pre_stale_ref,
+    pre_ep_ref,
+    wrote_ref,
+    way_ref,
+):
+    g = pl.program_id(0)
+    nslots = val_ref.shape[0]
+    # deferred-fill apply: unique last-writer slots only (glue dedupes;
+    # losers and the no-plan case carry slot == nslots and drop), so the
+    # scatter is order-independent and every step recomputes the same
+    # post-fill table from its VMEM-resident inputs
+    f_slot = f_slot_ref[...][:, 0]
+    val = val_ref[...].at[f_slot].set(f_vals_ref[...], mode="drop")
+
+    @pl.when(g == 0)
+    def _init():
+        out_val_ref[...] = val  # the value-state update IS the fill
+        out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
+        pre_hit_ref[...] = jnp.zeros_like(pre_hit_ref)
+        pre_way_ref[...] = jnp.zeros_like(pre_way_ref)
+        pre_stale_ref[...] = jnp.zeros_like(pre_stale_ref)
+        pre_ep_ref[...] = jnp.zeros_like(pre_ep_ref)
+        wrote_ref[...] = jnp.zeros_like(wrote_ref)
+        way_ref[...] = jnp.zeros_like(way_ref)
+
+    rows = rows_ref[...]  # (bm, 4W) packed pristine rows: the atomic probe
+    w = rows.shape[1] // 4  # targets pre-commit state for every item
+    init_hi = rows[:, :w]
+    init_lo = rows[:, w : 2 * w]
+    init_st = rows[:, 2 * w : 3 * w].astype(jnp.int32)
+    init_ep = rows[:, 3 * w :]
+    leader = leader_ref[...][:, 0]
+    seg_len = seg_len_ref[...][:, 0]
+    s_hi = s_hi_ref[...][:, 0]
+    s_lo = s_lo_ref[...][:, 0]
+    s_pos = s_pos_ref[...][:, 0]
+    s_admit = s_admit_ref[...][:, 0]
+    s_static = s_static_ref[...][:, 0]
+    s_epoch = s_epoch_ref[...][:, 0]
+    s_minep = s_minep_ref[...][:, 0]
+    s_set = s_set_ref[...][:, 0]
+    clock = clock_ref[0, 0]
+    b_total = s_hi.shape[0]
+
+    def body(j, carry):
+        r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy, o_vals = carry
+        idx = jnp.minimum(leader + j, b_total - 1)  # (bm,) global item ids
+        act = j < seg_len
+        hi_i = s_hi[idx]
+        lo_i = s_lo[idx]
+        admit_i = s_admit[idx] != 0
+        static_i = s_static[idx] != 0
+        pos_i = s_pos[idx]
+        minep_i = s_minep[idx]
+        # probe against the pristine rows (duplicates count as misses;
+        # the reserved pad key never hits)
+        pm = (init_hi == hi_i[:, None]) & (init_lo == lo_i[:, None]) & (init_hi != 0)
+        pm = pm & ~is_pad(hi_i, lo_i)[:, None]
+        pm_ep = jnp.where(pm, init_ep, 0).max(axis=1)
+        way_p = jnp.argmax(pm, axis=1).astype(jnp.int32)
+        # value-row gather from the post-fill table: the probed way's row
+        # (garbage on a miss -- way_p == 0 -- which the caller overwrites
+        # with the backend's result, exactly like the XLA gather did)
+        v_rows = val[s_set[idx] * w + way_p]
+        # evolving rows: exact sequential LRU semantics within the segment
+        r_hi, r_lo, r_st, r_ep, is_hit, way, do_write, refresh = conflict_round(
+            r_hi, r_lo, r_st, r_ep, hi_i, lo_i, admit_i, static_i,
+            s_epoch[idx], minep_i, clock + 1 + pos_i, act,
+        )
+        tgt = jnp.where(act, idx, b_total)  # inactive lanes scatter-drop
+        p_hit = p_hit.at[tgt].set(pm.any(axis=1).astype(jnp.int32), mode="drop")
+        p_way = p_way.at[tgt].set(way_p, mode="drop")
+        p_stale = p_stale.at[tgt].set(
+            (pm.any(axis=1) & (pm_ep < minep_i)).astype(jnp.int32), mode="drop"
+        )
+        p_ep = p_ep.at[tgt].set(pm_ep, mode="drop")
+        wr = wr.at[tgt].set(refresh.astype(jnp.int32), mode="drop")
+        wy = wy.at[tgt].set(way, mode="drop")
+        o_vals = o_vals.at[tgt].set(v_rows, mode="drop")
+        return r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy, o_vals
+
+    carry = (
+        init_hi,
+        init_lo,
+        init_st,
+        init_ep,
+        pre_hit_ref[...][:, 0],
+        pre_way_ref[...][:, 0],
+        pre_stale_ref[...][:, 0],
+        pre_ep_ref[...][:, 0],
+        wrote_ref[...][:, 0],
+        way_ref[...][:, 0],
+        out_vals_ref[...],
+    )
+    n_rounds = jnp.max(seg_len)  # tile-local conflict depth
+    r_hi, r_lo, r_st, r_ep, p_hit, p_way, p_stale, p_ep, wr, wy, o_vals = (
+        jax.lax.fori_loop(0, n_rounds, body, carry)
+    )
+    out_rows_ref[...] = jnp.concatenate(
+        [r_hi, r_lo, r_st.astype(jnp.uint32), r_ep], axis=1
+    )
+    out_vals_ref[...] = o_vals
+    pre_hit_ref[...] = p_hit[:, None]
+    pre_way_ref[...] = p_way[:, None]
+    pre_stale_ref[...] = p_stale[:, None]
+    pre_ep_ref[...] = p_ep[:, None]
+    wrote_ref[...] = wr[:, None]
+    way_ref[...] = wy[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def serve_fused(
+    rows: jnp.ndarray,  # (B_pad, 4W) uint32 packed gathered segment rows
+    leader: jnp.ndarray,  # (B_pad, 1) int32 first sorted item per segment
+    seg_len: jnp.ndarray,  # (B_pad, 1) int32 items per segment (0 = pad)
+    s_hi: jnp.ndarray,  # (B_pad, 1) uint32 sorted request hashes
+    s_lo: jnp.ndarray,  # (B_pad, 1) uint32
+    s_pos: jnp.ndarray,  # (B_pad, 1) int32 original batch position
+    s_admit: jnp.ndarray,  # (B_pad, 1) int32
+    s_static: jnp.ndarray,  # (B_pad, 1) int32
+    s_epoch: jnp.ndarray,  # (B_pad, 1) uint32 write epochs
+    s_minep: jnp.ndarray,  # (B_pad, 1) uint32 freshness floors
+    s_set: jnp.ndarray,  # (B_pad, 1) int32 sorted clamped set indices
+    f_slot: jnp.ndarray,  # (B_pad, 1) int32 fill slots (S*W = dropped loser)
+    f_vals: jnp.ndarray,  # (B_pad, V) int32 fill values
+    val: jnp.ndarray,  # (S*W, V) int32 flattened value table
+    clock: jnp.ndarray,  # (1, 1) int32
+    bm: int = 256,
+    interpret: bool = False,
+):
+    b, w4 = rows.shape
+    nslots, v = val.shape
+    bm = min(bm, b)
+    grid = (pl.cdiv(b, bm),)
+    rows_spec = pl.BlockSpec((bm, w4), lambda g: (g, 0))
+    seg_spec = pl.BlockSpec((bm, 1), lambda g: (g, 0))
+    full_spec = pl.BlockSpec((b, 1), lambda g: (0, 0))
+    fullv_spec = pl.BlockSpec((b, v), lambda g: (0, 0))
+    val_spec = pl.BlockSpec((nslots, v), lambda g: (0, 0))
+    return pl.pallas_call(
+        _serve_kernel,
+        grid=grid,
+        in_specs=[
+            rows_spec,
+            seg_spec,
+            seg_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            fullv_spec,
+            val_spec,
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            rows_spec,
+            val_spec,
+            fullv_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+            full_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, w4), jnp.uint32),
+            jax.ShapeDtypeStruct((nslots, v), val.dtype),
+            jax.ShapeDtypeStruct((b, v), val.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        rows,
+        leader,
+        seg_len,
+        s_hi,
+        s_lo,
+        s_pos,
+        s_admit,
+        s_static,
+        s_epoch,
+        s_minep,
+        s_set,
+        f_slot,
+        f_vals,
+        val,
+        clock,
+    )

@@ -136,6 +136,22 @@ def main(argv=None) -> int:
         "engine; pow2 forces bucketing everywhere",
     )
     ap.add_argument(
+        "--one-call", dest="one_call", action="store_true", default=True,
+        help="serve via the fused one-dispatch kernel path: probe + commit "
+        "+ value gather + deferred-fill apply in a single device call "
+        "per batch (device engines only; the default)",
+    )
+    ap.add_argument(
+        "--no-one-call", dest="one_call", action="store_false",
+        help="use the legacy 2/3-dispatch serve path (separate fused "
+        "probe+commit and fill calls)",
+    )
+    ap.add_argument(
+        "--aot-warmup", action="store_true",
+        help="AOT-compile every bucket shape at broker construction so no "
+        "live request waits on a jit trace (docs/serving.md)",
+    )
+    ap.add_argument(
         "--rebalance", type=int, default=0, metavar="EVERY",
         help="drift-aware topic rebalancing: check every N served batches "
         "(0 = frozen allocation, the paper's setup)",
@@ -255,6 +271,8 @@ def main(argv=None) -> int:
             "off": BucketSpec(mode="none"),
         }[args.bucket],
         hedge=HedgeSpec(deadline_s=2.0),
+        fused_one_call=args.one_call,
+        aot_warmup=args.aot_warmup,
         dispatch=(
             DispatchSpec(max_fuse=args.max_fuse)
             if args.pipeline > 0
@@ -487,7 +505,9 @@ def main(argv=None) -> int:
             f"bucketing: padded={s.padded} real={s.requests} "
             f"pad_overhead={s.padded / max(slot_total, 1):.2%} of "
             f"{slot_total} device-batch slots; "
-            f"jit traces per entry point: {cluster.trace_counts or '(host engine: none)'}"
+            f"jit traces per entry point: {cluster.trace_counts or '(host engine: none)'}; "
+            f"device dispatches per entry point: "
+            f"{cluster.dispatch_counts or '(host engine: none)'}"
         )
         if args.rebalance > 0:
             print(

@@ -377,41 +377,23 @@ def _reset_stats(server: Server) -> None:
 
 def warmup_server(server: Server, sizes: Sequence[int], pad_key: int = -1) -> None:
     """Trace-warm a server for the batch sizes a plan will serve, without
-    touching cache state: a batch of reserved pad keys never hits, is
-    never admitted, and never writes (the PR-5 pad invariant), so the
-    only side effects are jit traces and stats -- which are reset.
+    touching cache state: delegates to ``Broker.warmup``, which executes
+    every jitted entry point on all-pad batches (the PR-5 pad invariant:
+    pads never hit, are never admitted, never write) and discards the
+    outputs, so the only side effects are jit traces and stats -- which
+    are reset.
 
-    Host-engine servers compile nothing, so they skip the pad serves
-    entirely (the backend never sees the warmup's pad ids there).  For a
-    cluster, each shard broker is warmed directly: routing would send
-    every pad to one shard (they share one hash), while real batches
-    split across shards into bucket-padded slices.
+    Host-engine servers compile nothing, so ``Broker.warmup`` is a no-op
+    there (the backend never sees the warmup's pad ids).  For a cluster,
+    each shard broker is warmed directly: routing would send every pad
+    to one shard (they share one hash), while real batches split across
+    shards into bucket-padded slices.
     """
-    brokers = [b for b in _server_brokers(server) if b.engine != "host"]
-    if brokers:
-        sizes = sorted(set(int(s) for s in sizes if int(s) > 0))
-        for b in brokers:
-            for s in _warm_shapes(b.bucket, sizes):
-                b.serve(np.full(s, pad_key, np.int64))
+    sizes = sorted(set(int(s) for s in sizes if int(s) > 0))
+    for b in _server_brokers(server):
+        b.warmup(sizes)
     server.flush()
     _reset_stats(server)
-
-
-def _warm_shapes(bucket: Optional[BucketSpec], sizes: Sequence[int]) -> List[int]:
-    """Shapes to pre-trace: every bucket boundary up to the largest
-    planned batch (cluster shard slices land on smaller buckets than the
-    batch itself), or the raw sizes when unbucketed."""
-    if not sizes:
-        return []
-    if bucket is None or not bucket.enabled:
-        return list(sizes)
-    top = bucket.padded_len(max(sizes))
-    shapes = {s for s in getattr(bucket, "sizes", ()) if s <= top}
-    s = bucket.padded_len(1)
-    while s <= top:
-        shapes.add(s)
-        s *= 2
-    return sorted(shapes)
 
 
 def run_open_loop(

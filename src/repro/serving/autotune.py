@@ -1,0 +1,119 @@
+"""Block-shape autotune table: persisted kernel tile winners per
+(backend, bucket).
+
+``benchmarks/roofline.py --autotune`` sweeps the fused serve kernel's
+request-tile size (``bm``) over every serving bucket, records each
+shape's achieved fraction of the measured device-copy roofline, and
+persists the winners here as JSON::
+
+    {"schema": 1,
+     "roofline_bytes_per_s": 1.2e10,
+     "entries": {"cpu/4096": {"bm": 256, "us_per_call": 812.4,
+                              "bytes_per_s": 9.1e9, "frac": 0.76}, ...}}
+
+:func:`best_bm` is the broker-side lookup: at bind time the broker asks
+for its backend's winner at its top bucket and threads it through every
+kernel-dispatching entry point (``bm`` is a static jit argument, so one
+choice per bind keeps the trace count at O(#buckets)).  No table, an
+unreadable table, or a missing entry all fall back to :data:`DEFAULT_BM`
+-- the autotuner is an optimization, never a dependency.
+
+The table location is ``REPRO_AUTOTUNE_PATH`` when set, else
+``BENCH_autotune.json`` in the working directory (where the benchmark
+writes it and CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+#: the hand-picked default request-tile size (also the pre-autotune
+#: behaviour everywhere): fills the 128-wide lanes at W=8 and keeps the
+#: double-buffered row blocks at 2 x 32 KiB of VMEM
+DEFAULT_BM = 256
+
+DEFAULT_PATH = "BENCH_autotune.json"
+ENV_PATH = "REPRO_AUTOTUNE_PATH"
+
+AUTOTUNE_SCHEMA = 1
+
+_cache: Dict[str, Optional[dict]] = {}
+
+
+def table_path() -> str:
+    """The autotune table's location (env override, else cwd default)."""
+    return os.environ.get(ENV_PATH, DEFAULT_PATH)
+
+
+def load_table(path: Optional[str] = None) -> Optional[dict]:
+    """Load (and memoize) the autotune table; None when absent/corrupt."""
+    path = path or table_path()
+    if path in _cache:
+        return _cache[path]
+    table = None
+    try:
+        with open(path) as f:
+            loaded = json.load(f)
+        if isinstance(loaded, dict) and loaded.get("schema") == AUTOTUNE_SCHEMA:
+            table = loaded
+    except (OSError, ValueError):
+        table = None
+    _cache[path] = table
+    return table
+
+
+def clear_cache() -> None:
+    """Drop the memoized table (tests; after re-running the autotuner)."""
+    _cache.clear()
+
+
+def save_table(table: dict, path: Optional[str] = None) -> str:
+    """Persist an autotune table (and invalidate the memo)."""
+    path = path or table_path()
+    table = dict(table, schema=AUTOTUNE_SCHEMA)
+    with open(path, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    clear_cache()
+    return path
+
+
+def best_bm(backend: str, bucket: int, path: Optional[str] = None) -> int:
+    """The tuned request-tile size for ``(backend, bucket)``.
+
+    Falls back to the nearest recorded bucket >= the asked one (the
+    kernel clamps ``bm`` to the batch, so a larger bucket's winner is
+    valid for smaller batches), then to :data:`DEFAULT_BM`.
+    """
+    table = load_table(path)
+    if table is None:
+        return DEFAULT_BM
+    entries = table.get("entries", {})
+    exact = entries.get(f"{backend}/{int(bucket)}")
+    if exact is not None:
+        return int(exact["bm"])
+    candidates = []
+    prefix = f"{backend}/"
+    for key, entry in entries.items():
+        if key.startswith(prefix):
+            try:
+                candidates.append((int(key[len(prefix):]), int(entry["bm"])))
+            except (ValueError, KeyError, TypeError):
+                continue
+    larger = sorted(c for c in candidates if c[0] >= int(bucket))
+    if larger:
+        return larger[0][1]
+    return DEFAULT_BM
+
+
+__all__ = [
+    "AUTOTUNE_SCHEMA",
+    "DEFAULT_BM",
+    "DEFAULT_PATH",
+    "ENV_PATH",
+    "best_bm",
+    "clear_cache",
+    "load_table",
+    "save_table",
+    "table_path",
+]

@@ -7,9 +7,16 @@ executors (model shards).  Per batch:
    -- pad the batch up to its bucket with the reserved never-resident
    pad key so the jitted device path sees O(#buckets) shapes instead of
    one trace per distinct batch length,
-2. one fused probe-and-commit device call (repro.kernels.cache_ops):
-   hits are answered immediately and every cache write -- hit refreshes
-   and admitted-miss inserts -- lands in the same call, in arrival order,
+2. one fused serve device call (repro.kernels.cache_ops): hits are
+   answered immediately and every cache write -- hit refreshes and
+   admitted-miss inserts -- lands in the same call, in arrival order.
+   On the default device path (``fused_one_call``) the previous batch's
+   deferred value fill, the probe, the commit scatter and the probed
+   value-row gather are **one** jitted entry point (one Pallas kernel
+   under ``use_kernel``), so a served batch is exactly one device
+   dispatch -- counted per call in ``Broker.dispatch_counts`` and pinned
+   by the dispatch-count regression tests.  ``fused_one_call=False``
+   restores the legacy pair of fused entry points (conformance-pinned),
 3. misses are dispatched to a backend in micro-batches with **hedged
    requests** (a straggling micro-batch is re-dispatched to a backup
    executor; first result wins),
@@ -50,8 +57,10 @@ from ..core.alloc import allocation_divergence
 from ..core.spec import CacheSpec
 from ..freshness import FreshnessRuntime, FreshnessSpec
 from ..train import checkpoint as ckpt_lib
+from . import autotune
 from .device_cache import (
     DYNAMIC,
+    PAD_H64,
     DeviceCacheConfig,
     STDDeviceCache,
     pack_hashes,
@@ -147,6 +156,8 @@ class Broker:
         bucket: Optional[BucketSpec] = None,
         defer_fill: Optional[bool] = None,
         freshness: Optional[FreshnessSpec] = None,
+        fused_one_call: bool = True,
+        aot_warmup: bool = False,
     ):
         self.cache = cache
         #: declarative configuration this cache was compiled from (embedded
@@ -173,6 +184,9 @@ class Broker:
         #: for a fully-hit batch); ``use_kernel`` routes the conflict
         #: resolution through the Pallas kernel (interpret on CPU hosts)
         self.fused = fused
+        #: whether warmup() runs at every cache (re)bind -- construction
+        #: and rebalance -- so no live request waits on a jax trace
+        self.aot_warmup = bool(aot_warmup)
         if engine == "auto":
             # XLA CPU prices batch scatters/sorts far above numpy's native
             # ones; on accelerators the jnp/Pallas engines win
@@ -194,6 +208,12 @@ class Broker:
         if defer_fill is None:
             defer_fill = engine == "device" and fused
         self.defer_fill = bool(defer_fill) and engine == "device" and fused
+        #: one-dispatch device serving: the deferred fill, probe, commit
+        #: and value gather share a single jitted entry point
+        #: (``STDDeviceCache.serve_one_call``) -- ONE device call per
+        #: served batch and one compiled shape per bucket.  False keeps
+        #: the legacy ``fused``/``fused_fill`` pair (conformance-pinned).
+        self.fused_one_call = bool(fused_one_call) and engine == "device" and fused
         #: compressed pending fill plan: (set_idx, way, values) of the
         #: last batch's inserts, applied inside the next fused call or by
         #: :meth:`flush`
@@ -208,6 +228,13 @@ class Broker:
         #: runs when jax traces a new shape) -- the compile-count
         #: regression tests pin this at O(#buckets)
         self.trace_counts: Dict[str, int] = {}
+        #: device dispatches per jitted entry point (every call counts,
+        #: traced or cached) -- the dispatch-count regression tests pin a
+        #: served batch at exactly one on the fused-one-call path
+        self.dispatch_counts: Dict[str, int] = {}
+        #: bucket shapes already AOT-warmed against the current bound
+        #: cache (reset on every rebind: fresh jits, fresh traces)
+        self._warmed_shapes: set = set()
         #: rebalance cooldown/hysteresis runtime state (not checkpointed:
         #: a restored broker re-arms conservatively from scratch)
         self._last_rebalance_batch: Optional[int] = None
@@ -248,35 +275,178 @@ class Broker:
 
         return wrapper
 
+    def _counted(self, name: str, fn):
+        """Wrap a *jitted* entry so every call bumps
+        ``dispatch_counts[name]`` -- unlike ``_traced`` this wrapper sits
+        outside the jit boundary and runs on every dispatch, traced or
+        cache-hit, so the counter is exactly the number of device calls
+        issued through the entry point."""
+        counts = self.dispatch_counts
+
+        def wrapper(*args, **kwargs):
+            counts[name] = counts.get(name, 0) + 1
+            return fn(*args, **kwargs)
+
+        return wrapper
+
     def _bind_cache(self, cache: STDDeviceCache) -> None:
         """(Re)compile the jitted serving ops against ``cache`` -- run at
-        construction and after every rebalance swaps the cache layout."""
+        construction and after every rebalance swaps the cache layout.
+        With ``aot_warmup`` every rebind immediately AOT-compiles every
+        bucket shape (:meth:`warmup`), so neither a fresh broker nor a
+        just-rebalanced one ever makes a live request wait on a trace."""
         self.cache = cache
         # compile the kernel on real accelerators; emulate on CPU
         interpret = jax.default_backend() == "cpu"
-        self._probe = jax.jit(self._traced("probe", cache.probe))
-        self._commit = jax.jit(self._traced("commit", cache.commit_vectorized))
-        self._fused_step = jax.jit(
-            self._traced(
-                "fused",
-                functools.partial(
-                    cache.probe_and_commit,
-                    use_kernel=self.use_kernel,
-                    interpret=interpret,
-                ),
-            )
+        # kernel request-tile size: the autotuner's persisted winner for
+        # this backend at the top serving bucket (DEFAULT_BM without a
+        # table); one static choice per bind keeps traces at O(#buckets)
+        top = (
+            self.bucket.padded_len(self.microbatch)
+            if self.bucket is not None
+            else self.microbatch
         )
-        self._fused_fill_step = jax.jit(
-            self._traced(
-                "fused_fill",
-                functools.partial(
-                    cache.fill_probe_and_commit,
-                    use_kernel=self.use_kernel,
-                    interpret=interpret,
-                ),
-            )
+        self._bm = autotune.best_bm(jax.default_backend(), top)
+        self._probe = self._counted(
+            "probe", jax.jit(self._traced("probe", cache.probe))
         )
-        self._fill = jax.jit(self._traced("fill", cache.fill_values))
+        self._commit = self._counted(
+            "commit",
+            jax.jit(
+                self._traced(
+                    "commit",
+                    functools.partial(cache.commit_vectorized, bm=self._bm),
+                )
+            ),
+        )
+        self._fused_step = self._counted(
+            "fused",
+            jax.jit(
+                self._traced(
+                    "fused",
+                    functools.partial(
+                        cache.probe_and_commit,
+                        use_kernel=self.use_kernel,
+                        interpret=interpret,
+                        bm=self._bm,
+                    ),
+                )
+            ),
+        )
+        self._fused_fill_step = self._counted(
+            "fused_fill",
+            jax.jit(
+                self._traced(
+                    "fused_fill",
+                    functools.partial(
+                        cache.fill_probe_and_commit,
+                        use_kernel=self.use_kernel,
+                        interpret=interpret,
+                        bm=self._bm,
+                    ),
+                )
+            ),
+        )
+        self._one_call_step = self._counted(
+            "one_call",
+            jax.jit(
+                self._traced(
+                    "one_call",
+                    functools.partial(
+                        cache.serve_one_call,
+                        use_kernel=self.use_kernel,
+                        interpret=interpret,
+                        bm=self._bm,
+                    ),
+                )
+            ),
+        )
+        self._fill = self._counted(
+            "fill", jax.jit(self._traced("fill", cache.fill_values))
+        )
+        self._warmed_shapes = set()
+        if self.aot_warmup:
+            self.warmup()
+
+    def warmup_shapes(self, sizes: Sequence[int] = ()) -> List[int]:
+        """The batch shapes the serving path can present to the jitted
+        entries: every bucket boundary from ``padded_len(1)`` up to the
+        microbatch's bucket (pow2 ladder), plus any explicit ``sizes``
+        (bucket-snapped).  Without a bucket, just the (snapped) explicit
+        sizes or the microbatch."""
+        snap = (
+            (lambda s: self.bucket.padded_len(s))
+            if self.bucket is not None
+            else (lambda s: int(s))
+        )
+        shapes = {snap(int(s)) for s in sizes if int(s) > 0}
+        if self.bucket is not None:
+            top = self.bucket.padded_len(self.microbatch)
+            s = self.bucket.padded_len(1)
+            while s <= top:
+                shapes.add(s)
+                s = self.bucket.padded_len(s + 1)
+            shapes.add(top)
+        elif not shapes:
+            shapes.add(int(self.microbatch))
+        return sorted(shapes)
+
+    def warmup(self, sizes: Sequence[int] = ()) -> List[int]:
+        """AOT-compile every serving entry point at every bucket shape,
+        so no live request ever waits on a jax trace.
+
+        Runs the *real* jitted entries (the same objects ``serve`` calls,
+        so their traces land in the same jit caches and show up in
+        ``trace_counts``) on all-pad batches: pads are inert in every
+        engine, the outputs are discarded, state/stats/pending-fill are
+        untouched, and nothing reaches a backend.  Idempotent per bound
+        cache -- shapes already warmed since the last (re)bind are
+        skipped, so calling it again (or serving after it) compiles
+        nothing.  Returns the shapes warmed by *this* call; the host
+        engine compiles nothing and returns ``[]``.
+        """
+        if self.engine == "host":
+            return []
+        warmed = []
+        for s in self.warmup_shapes(sizes):
+            if s in self._warmed_shapes:
+                continue
+            h_hi, h_lo = pack_hashes(np.full(s, PAD_H64, np.uint64))
+            args = (
+                jnp.asarray(h_hi),
+                jnp.asarray(h_lo),
+                jnp.asarray(np.full(s, self.cache.k, np.int32)),
+                jnp.asarray(np.zeros(s, bool)),
+                jnp.asarray(np.zeros(s, np.uint32)),
+                jnp.asarray(np.zeros(s, np.uint32)),
+            )
+            if self.fused and self.fused_one_call:
+                out = self._one_call_step(
+                    self.state, *self._pad_plan(None, s), *args
+                )
+            elif self.fused:
+                out = self._fused_step(self.state, *args)
+                jax.block_until_ready(
+                    self._fused_fill_step(
+                        self.state, *self._pad_plan(None, s), *args
+                    )
+                )
+            else:
+                out = self._probe(self.state, *args[:3], args[5])
+                jax.block_until_ready(
+                    self._commit(
+                        self.state, *args[:3],
+                        jnp.zeros((s, self.cache.cfg.value_dim), jnp.int32),
+                        *args[3:],
+                    )
+                )
+            jax.block_until_ready(out)
+            # flush() pads a pending plan to its own bucket, so the
+            # standalone fill sees the same shape ladder
+            jax.block_until_ready(self._fill(self.state, *self._pad_plan(None, s)))
+            self._warmed_shapes.add(s)
+            warmed.append(s)
+        return warmed
 
     @classmethod
     def from_spec(
@@ -329,6 +499,8 @@ class Broker:
             rebalance=spec.rebalance,
             bucket=spec.bucket,
             freshness=spec.freshness,
+            fused_one_call=spec.fused_one_call,
+            aot_warmup=spec.aot_warmup,
         )
 
     # -- lifecycle -----------------------------------------------------------
@@ -590,7 +762,31 @@ class Broker:
         else:
             with self._fill_lock:
                 pending = self._pending_fill
-                if pending is not None and 0 < len(pending[0]) <= bp:
+                if self.fused_one_call:
+                    # one-dispatch serve: fill apply + probe + commit +
+                    # value gather in a single jitted call (one Pallas
+                    # kernel under use_kernel); an empty plan rides the
+                    # same entry point, so every served batch is exactly
+                    # ONE device dispatch and one compiled shape/bucket
+                    if pending is not None and len(pending[0]) > bp:
+                        self.flush()  # plan larger than this bucket (rare)
+                        pending = None
+                    hit, layer, value, stale, new_state, (set_idx, wrote, way) = (
+                        self._one_call_step(
+                            self.state,
+                            *self._pad_plan(pending, bp),
+                            jnp.asarray(h_hi),
+                            jnp.asarray(h_lo),
+                            jnp.asarray(parts),
+                            jnp.asarray(admit),
+                            jnp.asarray(eps),
+                            jnp.asarray(min_ep),
+                        )
+                    )
+                    # consumed only once the call was issued against it
+                    self._pending_fill = None
+                    self.state = new_state
+                elif pending is not None and 0 < len(pending[0]) <= bp:
                     # double-buffered fill: the previous batch's value
                     # scatter rides inside this fused call (applied before
                     # its probe), with the plan padded to this batch's
@@ -702,8 +898,16 @@ class Broker:
     def _pad_plan(self, pending, bp: int):
         """Pad a compressed pending-fill plan up to ``bp`` entries (pads
         carry ``wrote=False``) in :meth:`STDDeviceCache.fill_values`
-        argument order."""
-        f_set, f_way, f_vals = pending
+        argument order.  ``pending=None`` builds the all-inert plan the
+        one-call entry point takes when nothing is pending -- same
+        shapes/dtypes, zero writes -- so an idle serve compiles no extra
+        shape."""
+        if pending is None:
+            f_set = np.zeros(0, np.int32)
+            f_way = np.zeros(0, np.int32)
+            f_vals = np.zeros((0, self.cache.cfg.value_dim), np.int32)
+        else:
+            f_set, f_way, f_vals = pending
         n = len(f_set)
         set_p = np.zeros(bp, np.int32)
         set_p[:n] = f_set

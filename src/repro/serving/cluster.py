@@ -1065,6 +1065,25 @@ class Cluster:
                 agg[k] = agg.get(k, 0) + v
         return agg
 
+    @property
+    def dispatch_counts(self) -> dict:
+        """Device dispatches summed across every shard's entry points --
+        the dispatch-count regression tests pin a fully-hit served batch
+        at exactly one per shard touched on the fused-one-call path."""
+        agg: dict = {}
+        for b in self.brokers:
+            for k, v in b.dispatch_counts.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def warmup(self, sizes=()) -> List[int]:
+        """AOT-warm every shard broker (:meth:`Broker.warmup`); returns
+        the union of shapes warmed this call."""
+        warmed: set = set()
+        for b in self.brokers:
+            warmed.update(b.warmup(sizes))
+        return sorted(warmed)
+
     def flush(self) -> None:
         """Serve queued pipelined work, then apply every shard's pending
         double-buffered value fill."""

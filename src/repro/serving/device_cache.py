@@ -62,6 +62,7 @@ from ..kernels.cache_ops.kernel import PAD_LO as _PAD_LO_INT
 from ..kernels.cache_ops.ops import (
     pack_words,
     probe_and_commit_op,
+    serve_fused_op,
     unpack_epoch,
     unpack_words,
 )
@@ -539,7 +540,7 @@ class STDDeviceCache:
 
     def commit_vectorized(
         self, state, h_hi, h_lo, part, values, admit, epochs=None, min_epoch=None,
-        use_kernel: bool = False, interpret: bool = True,
+        use_kernel: bool = False, interpret: bool = True, bm: int = 256,
     ):
         """Conflict-aware batch commit, bit-exact with :meth:`commit`.
 
@@ -559,7 +560,7 @@ class STDDeviceCache:
         out = probe_and_commit_op(
             state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
             epochs=epochs, min_epoch=min_epoch,
-            use_kernel=use_kernel, interpret=interpret,
+            use_kernel=use_kernel, interpret=interpret, bm=bm,
         )
         new = dict(state)
         new.update(ks=out["ks"], clock=state["clock"] + b)
@@ -567,7 +568,7 @@ class STDDeviceCache:
 
     def probe_and_commit(
         self, state, h_hi, h_lo, part, admit, epochs=None, min_epoch=None,
-        use_kernel: bool = False, interpret: bool = True,
+        use_kernel: bool = False, interpret: bool = True, bm: int = 256,
     ):
         """Fused serve step: probe + key/stamp commit in one device call.
 
@@ -590,7 +591,7 @@ class STDDeviceCache:
         out = probe_and_commit_op(
             state["ks"], h_hi, h_lo, set_idx, admit, static_hit, state["clock"],
             epochs=epochs, min_epoch=min_epoch,
-            use_kernel=use_kernel, interpret=interpret,
+            use_kernel=use_kernel, interpret=interpret, bm=bm,
         )
         value = state["value"][set_idx, out["pre_way"]]
         if state["static_value"].shape[0]:
@@ -609,7 +610,7 @@ class STDDeviceCache:
     def fill_probe_and_commit(
         self, state, f_set_idx, f_wrote, f_way, f_values, h_hi, h_lo, part, admit,
         epochs=None, min_epoch=None,
-        use_kernel: bool = False, interpret: bool = True,
+        use_kernel: bool = False, interpret: bool = True, bm: int = 256,
     ):
         """Double-buffered serve step: apply the *previous* batch's
         deferred value fill, then probe-and-commit the current batch, in
@@ -626,7 +627,56 @@ class STDDeviceCache:
         state = self.fill_values(state, f_set_idx, f_wrote, f_way, f_values)
         return self.probe_and_commit(
             state, h_hi, h_lo, part, admit, epochs=epochs, min_epoch=min_epoch,
-            use_kernel=use_kernel, interpret=interpret,
+            use_kernel=use_kernel, interpret=interpret, bm=bm,
+        )
+
+    def serve_one_call(
+        self, state, f_set_idx, f_wrote, f_way, f_values, h_hi, h_lo, part, admit,
+        epochs=None, min_epoch=None,
+        use_kernel: bool = False, interpret: bool = True, bm: int = 256,
+    ):
+        """One-dispatch serve step: the previous batch's deferred value
+        fill, the atomic probe (with freshness), the conflict-aware
+        commit, and the probed value-row gather, all through
+        :func:`repro.kernels.cache_ops.serve_fused_op` -- one Pallas
+        kernel under ``use_kernel``, one fused XLA program otherwise.
+
+        Same signature and return contract as
+        :meth:`fill_probe_and_commit` (``(hit, layer, value, stale,
+        new_state, (set_idx, wrote, way))``), and bit-exact with it: the
+        fill lands before the probe reads any value row, so a query
+        hitting a key the previous batch inserted sees its backend
+        result.  An all-``False`` fill plan degenerates to a plain fused
+        serve, which is what lets the broker keep **one** compiled entry
+        point per bucket shape instead of two (``fused`` +
+        ``fused_fill``) -- and exactly one device dispatch per served
+        batch.  The plan must be padded to batch length (pad entries
+        carry ``f_wrote == False``).
+        """
+        b = h_hi.shape[0]
+        pad = (h_hi == PAD_HI) & (h_lo == PAD_LO)
+        static_hit, static_idx = self.static_lookup(state, h_hi, h_lo)
+        static_hit = static_hit & ~pad
+        set_idx = self._set_index(h_lo, part)
+        out = serve_fused_op(
+            state["ks"], state["value"], h_hi, h_lo, set_idx, admit, static_hit,
+            state["clock"],
+            f_set_idx=f_set_idx, f_wrote=f_wrote, f_way=f_way, f_values=f_values,
+            epochs=epochs, min_epoch=min_epoch,
+            use_kernel=use_kernel, interpret=interpret, bm=bm,
+        )
+        value = out["values"]
+        if state["static_value"].shape[0]:
+            value = jnp.where(
+                static_hit[:, None], state["static_value"][static_idx], value
+            )
+        hit = static_hit | out["pre_hit"]
+        layer = jnp.where(static_hit, 0, jnp.where(out["pre_hit"], 1, -1))
+        new = dict(state)
+        new.update(ks=out["ks"], value=out["value"], clock=state["clock"] + b)
+        return (
+            hit, layer, value, out["pre_stale"], new,
+            (set_idx, out["wrote"], out["way"]),
         )
 
     def fill_values(self, state, set_idx, wrote, way, values):

@@ -345,11 +345,24 @@ class ServingSpec:
     #: scatter-gather front end, request-for-request identical to the
     #: pre-async behaviour.
     dispatch: Optional[DispatchSpec] = None
+    #: one-dispatch device serving: deferred fill + probe + commit +
+    #: value gather through a single jitted entry point (a single Pallas
+    #: kernel under ``use_kernel``), so a served batch costs exactly one
+    #: device call.  False restores the legacy 2/3-call fused path
+    #: (request-for-request identical, conformance-pinned).  Only
+    #: meaningful on the device engine with ``fused``.
+    fused_one_call: bool = True
+    #: AOT-compile every bucket shape at broker construction (and after
+    #: every rebalance rebind) so no live request ever waits on a jax
+    #: trace -- see docs/serving.md.  Off by default: warmup compiles
+    #: the full bucket ladder up front, which short-lived programs (and
+    #: the test suite) would pay without ever amortizing.
+    aot_warmup: bool = False
 
     def __post_init__(self):
         for f in ("shards", "microbatch", "value_dim", "ways"):
             object.__setattr__(self, f, int(getattr(self, f)))
-        for f in ("fused", "use_kernel", "coalesce"):
+        for f in ("fused", "use_kernel", "coalesce", "fused_one_call", "aot_warmup"):
             object.__setattr__(self, f, bool(getattr(self, f)))
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
